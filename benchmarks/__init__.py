@@ -1,0 +1,2 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+analysis over the dry-run artifacts.  Entry point: python -m benchmarks.run."""

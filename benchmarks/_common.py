@@ -1,0 +1,111 @@
+"""Shared training loops for the paper-network benchmarks (CPU-scaled)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+
+def train_classifier(init_fn, apply_fn, data_fn, *, steps=300, lr=2e-3,
+                     act_levels=0, n_weights=0, cluster_every=100,
+                     opt="adam", seed=0, method="laplacian_l1",
+                     subsample=1.0, dropout=0.0):
+    """Generic classification trainer with the paper's two quantizations.
+
+    apply_fn(params, x, act_levels, key) -> logits.
+    data_fn(step) -> {'x', 'y'}.
+    Returns (params, qstate, wq).
+    """
+    params = init_fn(jax.random.PRNGKey(seed))
+    ocfg = OptConfig(name=opt, lr=lr)
+    opt_state = init_opt_state(params, ocfg)
+    wq = WeightQuantConfig(num_weights=n_weights, method=method,
+                           interval=cluster_every, subsample=subsample) \
+        if n_weights else WeightQuantConfig()
+    qstate = init_state(wq)
+
+    @jax.jit
+    def step_fn(params, opt_state, x, y, key):
+        def loss_fn(p):
+            logits = apply_fn(p, x, act_levels, key)
+            lse = jax.nn.logsumexp(logits, -1)
+            true = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+            return jnp.mean(lse - true)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = apply_updates(params, g, opt_state, ocfg)
+        return params, opt_state, loss
+
+    for s in range(steps):
+        if wq.due(s):
+            params, qstate = cluster_params(params, wq, qstate, s,
+                                            jax.random.PRNGKey(1000 + s))
+        b = data_fn(s)
+        params, opt_state, loss = step_fn(params, opt_state, b["x"], b["y"],
+                                          jax.random.PRNGKey(s))
+    if wq.enabled:
+        params, qstate = cluster_params(params, wq, qstate, steps,
+                                        jax.random.PRNGKey(99))
+    return params, qstate, wq
+
+
+def train_regressor(init_fn, apply_fn, data_fn, *, steps=300, lr=2e-3,
+                    act_levels=0, n_weights=0, cluster_every=100, seed=0):
+    """L2-regression trainer (auto-encoders, parabola)."""
+    params = init_fn(jax.random.PRNGKey(seed))
+    ocfg = OptConfig(name="adam", lr=lr)
+    opt_state = init_opt_state(params, ocfg)
+    wq = WeightQuantConfig(num_weights=n_weights, method="laplacian_l1",
+                           interval=cluster_every) if n_weights else \
+        WeightQuantConfig()
+    qstate = init_state(wq)
+
+    @jax.jit
+    def step_fn(params, opt_state, x, y):
+        def loss_fn(p):
+            return jnp.mean((apply_fn(p, x, act_levels) - y) ** 2)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = apply_updates(params, g, opt_state, ocfg)
+        return params, opt_state, loss
+
+    loss = None
+    for s in range(steps):
+        if wq.due(s):
+            params, qstate = cluster_params(params, wq, qstate, s,
+                                            jax.random.PRNGKey(1000 + s))
+        b = data_fn(s)
+        y = b.get("y", b["x"])
+        params, opt_state, loss = step_fn(params, opt_state, b["x"], y)
+    if wq.enabled:
+        params, qstate = cluster_params(params, wq, qstate, steps,
+                                        jax.random.PRNGKey(99))
+    return params, qstate, float(loss)
+
+
+def recall_at(apply_fn, data_fn, params, act_levels, ks=(1, 5), n_batches=4,
+              start=5000):
+    hits = {k: 0 for k in ks}
+    tot = 0
+    for s in range(start, start + n_batches):
+        b = data_fn(s)
+        logits = np.asarray(apply_fn(params, b["x"], act_levels, None))
+        order = np.argsort(-logits, axis=-1)
+        y = np.asarray(b["y"])
+        for k in ks:
+            hits[k] += (order[:, :k] == y[:, None]).any(-1).sum()
+        tot += y.size
+    return {k: hits[k] / tot for k in ks}
+
+
+def timer(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs

@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [dryrun_results] > sections.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.roofline import analyse
+
+
+def _fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| cell | mesh | compile s | args GB/dev | temp GB/dev | "
+        "flops/dev | HBM bytes/dev | collective bytes/dev (top ops) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['cell']} | — | — | — | — | — | — | "
+                         f"SKIP: {r['reason']} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['cell']} | — | ERROR | | | | | |")
+            continue
+        coll = r["collectives_per_device"]
+        top = sorted(((k, v) for k, v in coll.items() if k != "total"),
+                     key=lambda kv: -kv[1])[:3]
+        tops = " ".join(f"{k}:{v / 1e9:.2f}G" for k, v in top) or "none"
+        corr = r.get("corrected") or {}
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r['compile_seconds']} | "
+            f"{_fmt_bytes(r['mem']['argument_bytes'])} | "
+            f"{_fmt_bytes(r['mem']['temp_bytes'])} | "
+            f"{corr.get('flops', r['flops_per_device']):.3e} | "
+            f"{corr.get('bytes', r['bytes_per_device']):.3e} | {tops} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch × shape | compute ms | memory ms | collective ms | dominant "
+        "| useful FLOP ratio | roofline fraction |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    worst = []
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        a = analyse(r)
+        t = a["terms"]
+        cell = f"{a['arch']} × {a['shape']}"
+        lines.append(
+            f"| {cell} | {t['compute_s'] * 1e3:.2f} | "
+            f"{t['memory_s'] * 1e3:.2f} | {t['collective_s'] * 1e3:.3f} | "
+            f"{a['dominant'].replace('_s', '')} | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} |")
+        worst.append((a["roofline_fraction"], cell, a["dominant"]))
+    worst.sort()
+    summary = ["", "Worst roofline fractions (hillclimb candidates):"]
+    for frac, cell, dom in worst[:5]:
+        summary.append(f"- {cell}: {frac:.2f} ({dom.replace('_s', '')}-bound)")
+    return "\n".join(lines + summary)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results"
+    recs = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(d, "*.json")))]
+    base = [r for r in recs if "__q" not in r.get("cell", "")]
+    print("### Dry-run table (per-device numbers; trip-count-corrected "
+          "flops/bytes)\n")
+    print(dryrun_table(base))
+    print("\n\n### Roofline (single-pod 16×16)\n")
+    print(roofline_table(base, "single"))
+    print("\n\n### Roofline (multi-pod 2×16×16)\n")
+    print(roofline_table(base, "multi"))
+
+
+if __name__ == "__main__":
+    main()

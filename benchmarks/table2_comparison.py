@@ -1,0 +1,41 @@
+"""Paper Table 2: accuracy deltas under quantization, ours vs prior work.
+
+Prior-work numbers are the paper's reported figures (we cannot rerun DoReFa
+/ QNN / XNOR here); our delta comes from the Table-1 benchmark runs
+(baseline #1 relu6 vs quantized #9 laplacian) at this container's scale.
+"""
+
+from __future__ import annotations
+
+PRIOR = [
+    ("WAGE (Wu 2018)",      None,  -4.8),
+    ("DoReFa (Zhou 2016)",  -2.9,  None),
+    ("QNN (Hubara 2016)",   -5.6,  -6.5),
+    ("XNOR-Nets (2016)",    -12.4, -11.0),
+    ("Fixed-point (Lin 2015)", None, -57.7),
+]
+
+
+def run(table1_rows=None):
+    rows = []
+    ours = {}
+    if table1_rows:
+        for _, label, val in table1_rows:
+            d = dict(kv.split("=") for kv in val.split())
+            ours[label] = (float(d["r@1"]) * 100, float(d["r@5"]) * 100)
+    if "#1 relu6" in ours and "#9 laplacian |W|=1000" in ours:
+        b1, b5 = ours["#1 relu6"]
+        q1, q5 = ours["#9 laplacian |W|=1000"]
+        rows.append(("table2", "ours (this repro, scaled)",
+                     f"d@1={q1 - b1:+.1f} d@5={q5 - b5:+.1f}"))
+    rows.append(("table2", "ours (paper-reported)", "d@1=-0.3 d@5=-0.6"))
+    for name, d1, d5 in PRIOR:
+        rows.append(("table2", name + " (paper-reported)",
+                     f"d@1={d1 if d1 is not None else 'n/a'} "
+                     f"d@5={d5 if d5 is not None else 'n/a'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(r))

@@ -1,0 +1,40 @@
+"""Paper §3.1: MNIST-style classification under both quantizations.
+
+Trains the same MLP four ways (continuous, |A|=32, |W|=1000, both) and
+prints the accuracy table — the CPU-scale version of the paper's Fig. 6.
+
+    PYTHONPATH=src python examples/train_mnist_quantized.py
+"""
+
+import sys
+sys.path.insert(0, ".")  # for benchmarks._common when run from repo root
+
+from functools import partial
+
+from benchmarks._common import recall_at, train_classifier
+from repro.data.synthetic import pseudo_mnist_batch
+from repro.models import papernets as PN
+
+
+def apply_fn(p, x, act_levels, key):
+    return PN.mlp_apply(p, x, "tanh", act_levels)
+
+
+def main():
+    init = lambda k: PN.mlp_init(k, 784, [32, 32], 10)
+    data = lambda s: pseudo_mnist_batch(s, 64)
+    print(f"{'variant':28s} accuracy")
+    for label, levels, nw in [("continuous tanh", 0, 0),
+                              ("tanhD(32)", 32, 0),
+                              ("tanh, |W|=1000", 0, 1000),
+                              ("tanhD(32) + |W|=1000", 32, 1000),
+                              ("tanhD(32) + |W|=100", 32, 100)]:
+        params, _, _ = train_classifier(init, apply_fn, data, steps=300,
+                                        act_levels=levels, n_weights=nw,
+                                        cluster_every=75)
+        acc = recall_at(apply_fn, data, params, levels)[1]
+        print(f"{label:28s} {acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (save, restore, latest_step,
+                                           AsyncCheckpointer)

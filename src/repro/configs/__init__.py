@@ -1,0 +1,16 @@
+"""Architecture configs: the 10 assigned archs + the paper's own networks.
+
+``get(name)`` returns the full production ModelConfig; ``get(name).reduced()``
+the CPU-smoke-test variant of the same family.
+"""
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.configs import registry as _registry
+
+
+def get(name: str) -> ModelConfig:
+    return _registry.CONFIGS[name]()
+
+
+def names():
+    return sorted(_registry.CONFIGS)

@@ -1,0 +1,5 @@
+"""Config module for --arch codeqwen1.5-7b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import codeqwen1p5_7b as config
+
+CONFIG = config()

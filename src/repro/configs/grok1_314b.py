@@ -1,0 +1,5 @@
+"""Config module for --arch grok-1-314b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import grok1_314b as config
+
+CONFIG = config()

@@ -1,0 +1,5 @@
+"""Config module for --arch llama3.2-3b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import llama3p2_3b as config
+
+CONFIG = config()

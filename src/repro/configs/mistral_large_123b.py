@@ -1,0 +1,5 @@
+"""Config module for --arch mistral-large-123b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import mistral_large_123b as config
+
+CONFIG = config()

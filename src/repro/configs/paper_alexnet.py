@@ -1,0 +1,5 @@
+"""Config module for --arch paper-alexnet (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import paper_alexnet as config
+
+CONFIG = config()

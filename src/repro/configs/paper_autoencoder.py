@@ -1,0 +1,5 @@
+"""Config module for --arch paper-autoencoder (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import paper_autoencoder as config
+
+CONFIG = config()

@@ -1,0 +1,5 @@
+"""Config module for --arch paper-mnist (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import paper_mnist as config
+
+CONFIG = config()

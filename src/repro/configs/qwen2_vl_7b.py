@@ -1,0 +1,5 @@
+"""Config module for --arch qwen2-vl-7b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import qwen2_vl_7b as config
+
+CONFIG = config()

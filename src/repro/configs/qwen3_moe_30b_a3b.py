@@ -1,0 +1,5 @@
+"""Config module for --arch qwen3-moe-30b-a3b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import qwen3_moe_30b_a3b as config
+
+CONFIG = config()

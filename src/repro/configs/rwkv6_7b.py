@@ -1,0 +1,5 @@
+"""Config module for --arch rwkv6-7b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import rwkv6_7b as config
+
+CONFIG = config()

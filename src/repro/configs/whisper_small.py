@@ -1,0 +1,5 @@
+"""Config module for --arch whisper-small (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import whisper_small as config
+
+CONFIG = config()

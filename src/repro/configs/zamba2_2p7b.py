@@ -1,0 +1,5 @@
+"""Config module for --arch zamba2-2.7b (see registry.py for the exact figures and source tag)."""
+
+from repro.configs.registry import zamba2_2p7b as config
+
+CONFIG = config()

@@ -1,0 +1,13 @@
+"""Core of the paper's contribution:
+
+activations — §2.1 quantized nonlinearities (tanhD etc., underlying-derivative backward)
+clustering  — §2.2 k-means / closed-form Laplacian-L1 / uniform weight clustering
+quantizer   — periodic-clustering hook over parameter pytrees (+ |W| anneal, scopes)
+lut         — §4 multiplication table + activation index table construction
+fixedpoint  — §4 integer-only inference engine (lookups + adds + bit-shift)
+export      — index packing, entropy coding, memory accounting
+"""
+
+from repro.core.activations import ActQuantConfig, act_apply, act_index, act_levels
+from repro.core.quantizer import WeightQuantConfig, QuantizerState, cluster_params, init_state
+from repro.core.lut import LutConfig, LutTables, build_tables

@@ -1,0 +1,174 @@
+"""Quantized activation functions (paper §2.1, Fig. 1).
+
+Forward: the underlying bounded nonlinearity's output is quantized to ``L``
+levels equally spaced in *output* space (endpoints included, matching the
+paper's ReLU6 construction where ``dx = 6/(|A|-1)`` and level 0 is exactly 0).
+Backward: the quantization is ignored and the derivative of the *underlying*
+function is used (paper: "we proceed by ignoring the quantization and instead
+compute the derivatives of the underlying function").
+
+Implemented with the ``y + stop_gradient(q(y) - y)`` trick, which yields the
+exact underlying-function gradient while emitting exactly-quantized values.
+
+Because the levels are equally spaced in output space, the implied *input*
+space bin boundaries sit at ``f^{-1}(midpoint of adjacent levels)`` — densest
+where the underlying derivative is largest, the property Fig. 1 highlights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ActQuantConfig",
+    "act_apply",
+    "act_index",
+    "act_levels",
+    "act_input_boundaries",
+    "quantize_input",
+    "ACT_RANGES",
+]
+
+# Output ranges of the supported bounded nonlinearities.
+ACT_RANGES = {
+    "tanh": (-1.0, 1.0),
+    "relu6": (0.0, 6.0),
+    "sigmoid": (0.0, 1.0),
+    "rtanh": (0.0, 1.0),  # rectified tanh: max(0, tanh(x))
+}
+
+
+def _base_fn(kind: str):
+    if kind == "tanh":
+        return jnp.tanh
+    if kind == "relu6":
+        return lambda x: jnp.clip(x, 0.0, 6.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid
+    if kind == "rtanh":
+        return lambda x: jnp.maximum(jnp.tanh(x), 0.0)
+    if kind in ("relu", "none", "identity"):
+        # Unbounded / linear: quantization unsupported (paper switches AlexNet
+        # from ReLU to ReLU6 precisely to get a bounded range).
+        return (jax.nn.relu if kind == "relu" else (lambda x: x))
+    if kind == "silu":
+        return jax.nn.silu
+    if kind == "gelu":
+        return jax.nn.gelu
+    raise ValueError(f"unknown activation kind: {kind}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ActQuantConfig:
+    """Activation-quantization configuration.
+
+    kind:   underlying nonlinearity ('tanh', 'relu6', 'sigmoid', 'rtanh';
+            'relu'/'silu'/'gelu'/'none' are allowed only with levels == 0).
+    levels: |A|; 0 disables quantization (continuous baseline).
+    """
+
+    kind: str = "tanh"
+    levels: int = 0
+
+    def __post_init__(self):
+        if self.levels:
+            if self.kind not in ACT_RANGES:
+                raise ValueError(
+                    f"activation '{self.kind}' is unbounded; cannot quantize "
+                    f"(paper §3.3 switches ReLU->ReLU6 for this reason)")
+            if self.levels < 2:
+                raise ValueError("levels must be >= 2 (or 0 to disable)")
+
+    @property
+    def enabled(self) -> bool:
+        return self.levels > 0
+
+    @property
+    def out_range(self):
+        return ACT_RANGES[self.kind]
+
+    @property
+    def step(self) -> float:
+        lo, hi = self.out_range
+        return (hi - lo) / (self.levels - 1)
+
+
+def act_levels(cfg: ActQuantConfig) -> jnp.ndarray:
+    """The |A| quantized output values a_0 .. a_{L-1} (float32)."""
+    if not cfg.enabled:
+        raise ValueError("continuous activation has no discrete levels")
+    lo, hi = cfg.out_range
+    return jnp.linspace(lo, hi, cfg.levels, dtype=jnp.float32)
+
+
+def _quantize_output(cfg: ActQuantConfig, y: jnp.ndarray) -> jnp.ndarray:
+    lo, _ = cfg.out_range
+    step = cfg.step
+    q = jnp.round((y - lo) / step)
+    q = jnp.clip(q, 0, cfg.levels - 1)
+    return (lo + q * step).astype(y.dtype)
+
+
+def act_apply(cfg: ActQuantConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Quantized activation with underlying-derivative backward pass."""
+    y = _base_fn(cfg.kind)(x)
+    if not cfg.enabled:
+        return y
+    return y + jax.lax.stop_gradient(_quantize_output(cfg, y) - y)
+
+
+def act_index(cfg: ActQuantConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Level index j in [0, |A|) of the quantized activation (no gradient).
+
+    This is the row index fed to the next layer's multiplication table in the
+    LUT inference engine (paper Fig. 8/9).
+    """
+    if not cfg.enabled:
+        raise ValueError("continuous activation has no level index")
+    y = _base_fn(cfg.kind)(x)
+    lo, _ = cfg.out_range
+    q = jnp.round((y - lo) / cfg.step)
+    return jnp.clip(q, 0, cfg.levels - 1).astype(jnp.int32)
+
+
+def act_input_boundaries(cfg: ActQuantConfig) -> np.ndarray:
+    """Input-space thresholds b_1..b_{L-1} between adjacent output levels.
+
+    Crossing b_j moves the emitted level from a_{j-1} to a_j.  Computed as
+    f^{-1}((a_{j-1}+a_j)/2).  Used to build the §4 activation index table and
+    for tests; saturating regions are handled by clipping in `act_index`.
+    """
+    if not cfg.enabled:
+        raise ValueError("continuous activation has no boundaries")
+    lo, hi = cfg.out_range
+    levels = np.linspace(lo, hi, cfg.levels)
+    mids = (levels[:-1] + levels[1:]) / 2.0
+    eps = 1e-9
+    if cfg.kind == "tanh":
+        return np.arctanh(np.clip(mids, -1 + eps, 1 - eps))
+    if cfg.kind == "relu6":
+        return mids  # identity in the non-saturating region
+    if cfg.kind == "sigmoid":
+        m = np.clip(mids, eps, 1 - eps)
+        return np.log(m / (1 - m))
+    if cfg.kind == "rtanh":
+        m = np.clip(mids, eps, 1 - eps)
+        return np.arctanh(m)
+    raise ValueError(cfg.kind)
+
+
+def quantize_input(x: jnp.ndarray, levels: int, lo: float, hi: float) -> jnp.ndarray:
+    """Quantize network inputs to `levels` uniform values in [lo, hi].
+
+    Used for the paper's Table-1 "quantized inputs" columns, where network
+    inputs are quantized to the same number of levels as activations.
+    Straight-through gradient (identity within range).
+    """
+    step = (hi - lo) / (levels - 1)
+    q = jnp.clip(jnp.round((x - lo) / step), 0, levels - 1) * step + lo
+    return x + jax.lax.stop_gradient(q.astype(x.dtype) - x)

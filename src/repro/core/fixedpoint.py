@@ -1,0 +1,120 @@
+"""Integer-only inference (paper §4, Fig. 9) — the faithful engine.
+
+Everything at inference time is: table lookups, integer adds, one arithmetic
+bit-shift per unit.  No multiplies, no floats, no non-linearity evaluation.
+
+    acc[n]  = Σ_k  M[a_idx[k], w_idx[k, n]]  (+ M[bias_row, b_idx[n]])
+    bin     = (acc >> s) + zero_offset        # arithmetic shift ≡ floor(x/Δx)
+    a_idx'  = act_table[clip(bin)]            # next layer's row indices
+
+The final (linear) layer stops at ``acc``; its float meaning is
+``acc · Δx / 2^s`` (``LutTables.decode``), or equivalently one lookup into
+the w≡1 identity column — computed only by callers that need float outputs
+(tests/metrics), never by the engine itself.
+
+All functions are jnp + jittable so they double as the oracle for
+``kernels/lut_matmul`` and run under ``jax.jit`` for the CPU benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import ActQuantConfig
+from repro.core.lut import LutTables
+
+__all__ = [
+    "input_to_indices",
+    "int_linear",
+    "acc_to_act_index",
+    "int_mlp_forward",
+]
+
+
+def _jt(tables: LutTables):
+    """Device copies of the integer tables."""
+    if tables.acc_dtype == np.dtype(np.int64) and not jax.config.jax_enable_x64:
+        raise ValueError("acc_bits=64 tables need jax_enable_x64; either "
+                         "enable it or build with acc_bits=32")
+    dt = jnp.int32 if tables.acc_dtype == np.dtype(np.int32) else jnp.int64
+    return jnp.asarray(tables.mult, dt), jnp.asarray(tables.act_table, jnp.int32)
+
+
+def input_to_indices(x: jnp.ndarray, cfg: ActQuantConfig) -> jnp.ndarray:
+    """Quantize network *inputs* to activation-level indices (Table 1,
+    "quantized inputs" columns: inputs share the activation level grid)."""
+    lo, hi = cfg.out_range
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) / cfg.step)
+    return q.astype(jnp.int32)
+
+
+def int_linear(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
+               b_idx: jnp.ndarray | None, tables: LutTables,
+               k_chunk: int = 512) -> jnp.ndarray:
+    """acc[..., n] = Σ_k M[a_idx[..., k], w_idx[k, n]] (+ bias row lookup).
+
+    a_idx: (..., K) int32 activation-level indices (bias row allowed).
+    w_idx: (K, N) int32 codebook indices.
+    b_idx: (N,) int32 codebook indices of the biases, or None.
+    Gathers are chunked over K to bound the (..., k_chunk, N) intermediate.
+    """
+    mult, _ = _jt(tables)
+    n_cols = tables.mult.shape[1]
+    flat = mult.reshape(-1)
+    K = a_idx.shape[-1]
+    batch = a_idx.shape[:-1]
+    acc = jnp.zeros(batch + (w_idx.shape[1],), dtype=flat.dtype)
+
+    # pad K to a multiple of k_chunk with (bias_row, identity_col) pairs whose
+    # contribution we subtract afterwards — keeps the scan shape static.
+    pad = (-K) % k_chunk
+    if pad:
+        a_pad = jnp.full(batch + (pad,), tables.bias_row, jnp.int32)
+        w_pad = jnp.full((pad, w_idx.shape[1]), tables.identity_col, jnp.int32)
+        a_idx = jnp.concatenate([a_idx, a_pad], axis=-1)
+        w_idx = jnp.concatenate([w_idx, w_pad], axis=0)
+    n_chunks = a_idx.shape[-1] // k_chunk
+
+    def body(acc, c):
+        a = jax.lax.dynamic_slice_in_dim(a_idx, c * k_chunk, k_chunk, -1)
+        w = jax.lax.dynamic_slice_in_dim(w_idx, c * k_chunk, k_chunk, 0)
+        gathered = flat[a[..., :, None] * n_cols + w]      # (..., k_chunk, N)
+        return acc + jnp.sum(gathered, axis=-2), None
+
+    acc, _ = jax.lax.scan(body, acc, jnp.arange(n_chunks))
+    if pad:
+        acc = acc - pad * mult[tables.bias_row, tables.identity_col]
+    if b_idx is not None:
+        acc = acc + mult[tables.bias_row, b_idx]
+    return acc
+
+
+def acc_to_act_index(acc: jnp.ndarray, tables: LutTables) -> jnp.ndarray:
+    """Bit-shift + activation-table lookup (Fig. 9): accumulator -> next
+    layer's activation-level row index."""
+    _, act_table = _jt(tables)
+    bins = jax.lax.shift_right_arithmetic(acc, jnp.asarray(tables.s, acc.dtype))
+    bins = jnp.clip(bins.astype(jnp.int32) + tables.zero_offset,
+                    0, tables.act_table.shape[0] - 1)
+    return act_table[bins]
+
+
+def int_mlp_forward(layers, x_idx: jnp.ndarray, tables: LutTables,
+                    final_linear: bool = True):
+    """Run a whole MLP with the integer engine.
+
+    layers: sequence of (w_idx (K,N) int32, b_idx (N,) int32 | None).
+    x_idx:  (..., K0) activation-level indices of the (quantized) inputs.
+    Returns the final layer's raw integer accumulators if final_linear
+    (regression / logits), else the final activation indices.
+    """
+    a = x_idx
+    for li, (w_idx, b_idx) in enumerate(layers):
+        acc = int_linear(a, w_idx, b_idx, tables)
+        last = li == len(layers) - 1
+        if last and final_linear:
+            return acc
+        a = acc_to_act_index(acc, tables)
+    return a

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (TokenPipeline, pseudo_mnist_batch,
+                                  smooth_images, parabola_batch)

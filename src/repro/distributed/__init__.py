@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding policies, fault tolerance, gradient
+compression, pipeline-parallel option."""

@@ -1,0 +1,98 @@
+"""Codebook gradient compression for the cross-pod all-reduce.
+
+The paper's Fig. 3/4 observation — network weight (and, empirically,
+gradient) distributions are near-Laplacian — justifies reusing its §2.2
+closed-form Laplacian-L1 quantizer as a *gradient codec*: 8-bit indices into
+a 256-entry closed-form codebook, with error feedback (the residual is
+carried into the next step, so the compression is unbiased over time).
+
+Deployment point: DP inside a pod rides the full-precision psum that XLA
+emits (ICI, cheap); the *pod* axis crosses DCN where bytes are 25–50×
+more expensive — that hop is compressed 4× (f32→int8; 2× vs bf16).
+
+``compressed_psum_tree`` is mesh-agnostic: it runs inside shard_map over
+the named axis; the launcher wires it over 'pod'.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import laplacian_l1_levels
+
+__all__ = ["lap_quantize", "lap_dequantize", "compressed_psum_tree",
+           "init_error_state"]
+
+_LEVELS = 256
+
+
+def _unit_centers() -> jnp.ndarray:
+    """Closed-form L1-optimal centers for a unit Laplacian, |W|=256."""
+    pos = laplacian_l1_levels(_LEVELS)       # even N → positive half
+    c = np.concatenate([-pos[::-1], pos])
+    return jnp.asarray(np.sort(c), jnp.float32)
+
+
+_UNIT = _unit_centers()
+
+
+def lap_quantize(x: jnp.ndarray):
+    """x (float) -> (idx uint8, mean f32, scale f32). Per-tensor statistics.
+
+    Centers are mean ± scale·L_i with L_i the closed-form grid; ``scale`` is
+    set from mean |x − a| (the Laplacian MLE of its scale parameter b), so
+    the codebook needs only two scalars on the wire.
+    """
+    xf = x.astype(jnp.float32).reshape(-1)
+    a = jnp.mean(xf)
+    b = jnp.mean(jnp.abs(xf - a)) + 1e-12
+    centers = a + b * _UNIT
+    bounds = (centers[:-1] + centers[1:]) / 2.0
+    idx = jnp.searchsorted(bounds, xf, side="right").astype(jnp.uint8)
+    return idx.reshape(x.shape), a, b
+
+
+def lap_dequantize(idx: jnp.ndarray, a, b):
+    centers = a + b * _UNIT
+    return centers[idx.astype(jnp.int32)]
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum_tree(grads, err, axis: str):
+    """All-reduce ``grads`` over ``axis`` with 8-bit Laplacian codec + error
+    feedback.  Must run inside shard_map where ``axis`` is manual.
+
+    Returns (mean-reduced grads, new error state).
+    """
+    n = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        v = g.astype(jnp.float32) + e
+        idx, a, b = lap_quantize(v)
+        q = lap_dequantize(idx, a, b).reshape(v.shape)
+        new_e = v - q
+        # wire format: uint8 indices + 2 scalars; all_gather then sum.
+        idx_all = jax.lax.all_gather(idx, axis)          # (n, ...)
+        a_all = jax.lax.all_gather(a, axis)
+        b_all = jax.lax.all_gather(b, axis)
+        deq = jax.vmap(lambda i, aa, bb:
+                       lap_dequantize(i, aa, bb).reshape(v.shape))(
+            idx_all, a_all, b_all)
+        return (jnp.sum(deq, axis=0) / n).astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, err)
+    red = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return red, new_err
+
+
+def compression_ratio(param_dtype=jnp.float32) -> float:
+    """Wire-bytes ratio vs uncompressed all-reduce of ``param_dtype``."""
+    return jnp.dtype(param_dtype).itemsize / 1.0

@@ -1,0 +1,157 @@
+"""Sharding policy: parameter path → PartitionSpec, activation constraints.
+
+Meshes (launch/mesh.py): single-pod ``('data', 'model') = (16, 16)``,
+multi-pod ``('pod', 'data', 'model') = (2, 16, 16)``.
+
+Policy (DP+FSDP over ('pod','data'), TP over 'model'):
+* embeddings / lm_head: vocab over `model` (TP softmax), replicated over dp.
+* attention / FFN / SSM projections: column-parallel mats shard the output
+  (heads·hd or ff) dim over `model` and the input (d) dim over `data`
+  (ZeRO-3 storage; XLA all-gathers at use); row-parallel mats the reverse.
+* MoE expert weights: see ``repro.models.moe.moe_param_specs``.
+* small vectors (norm scales, A_log, biases): replicated.
+* optimizer moments: same spec as their parameter, but additionally sharded
+  over `pod` where the parameter was pod-replicated (ZeRO across pods).
+* activations: batch over ('pod','data'); logits vocab over `model`;
+  decode KV caches: batch over dp, sequence over `model` (flash-decode
+  layout — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["dp_axes", "param_specs", "shard_act", "named", "cache_spec",
+           "moments_spec"]
+
+
+def dp_axes(mesh) -> tuple:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def shard_act(x, mesh, spec=None):
+    """Constrain an activation to the standard layout.
+
+    (B, S, D) residual streams additionally shard S over `model` when it
+    divides (sequence parallelism): the scan-carried per-layer residuals —
+    the dominant live tensors under remat — shrink by the TP degree, and
+    XLA materializes the all-gather (into attention/FFN) + reduce-scatter
+    (out of them) pairs that define SP.  Decode steps (S == 1) and ragged
+    shapes fall back to batch-only sharding.
+    """
+    if mesh is None:
+        return x
+    if spec is None:
+        seq_ax = None
+        if x.ndim == 3 and x.shape[1] % mesh.shape[_M] == 0 and x.shape[1] > 1:
+            seq_ax = _M
+        spec = P(dp_axes(mesh), seq_ax, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, named(mesh, spec))
+
+
+# Parameter rules: (path regex, rank) → spec builder.  F = fsdp axis.
+_F = "data"
+_M = "model"
+
+
+def _rule(path: str, shape: tuple, fsdp: bool = True) -> P:
+    r = len(shape)
+    tail = path.split("/")[-1]
+    anc = path
+    F = _F if fsdp else None
+
+    def wrap(spec):  # prepend Nones for stacked (layer/group) leading dims
+        extra = r - len(spec)
+        return P(*([None] * extra), *spec)
+
+    # --- embeddings / heads --------------------------------------------------
+    if re.search(r"(embed|lm_head|pos_embed)", anc):
+        if "pos_embed" in anc:
+            return wrap((None, None))
+        if "lm_head" in anc:
+            return wrap((F, _M))       # (d, V)
+        return wrap((_M, None))        # (V, d)
+    # --- MoE expert tensors (E, d, f) / (E, f, d) handled by caller ----------
+    # --- norms & small vectors ------------------------------------------------
+    if tail in ("scale", "bias", "A_log", "D", "dt_bias", "w0", "u", "mix", "b"):
+        return P(*([None] * r))
+    if "conv_w" in anc:
+        return wrap((None, _M))        # (K, C): channels over model
+    # --- column-parallel (input d contracted, output sharded over model) -----
+    if tail in ("w", "w_idx") and re.search(
+            r"(wq|wk|wv|w1|w3|wg|wr|in_proj|w_lora_a|up)", anc):
+        return wrap((F, _M))
+    # --- row-parallel (input sharded over model, output d) -------------------
+    if tail in ("w", "w_idx") and re.search(
+            r"(wo|w2|out_proj|w_lora_b|down)", anc):
+        return wrap((_M, F))
+    if tail == "w" and re.search(r"router", anc):
+        return P(*([None] * r))
+    if tail in ("w", "w_idx"):         # generic 2-D: FSDP only
+        return wrap((F, None))
+    return P(*([None] * r))
+
+
+def param_specs(params, cfg=None, moe_cfg=None, mesh=None, fsdp=True):
+    """Spec pytree matching ``params``.  MoE expert leaves are delegated."""
+    from repro.models.moe import moe_param_specs
+
+    msize = mesh.shape[_M] if mesh is not None else 1
+    moe_specs = (moe_param_specs(moe_cfg, msize) if moe_cfg is not None
+                 else None)
+
+    def visit(path_parts, leaf):
+        path = "/".join(path_parts)
+        if moe_specs is not None and re.search(r"/(w1|w3|w2)$", "/" + path) \
+                and "moe" in path:
+            base = moe_specs[path_parts[-1]]
+            extra = leaf.ndim - len(base)
+            return P(*([None] * extra), *base)
+        if path_parts[-1] == "codebook":
+            return P(*([None] * leaf.ndim))
+        return _rule(path, leaf.shape, fsdp)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, v in leaves:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        out.append(visit(parts, v))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def moments_spec(spec: P, param_shape: tuple, mesh) -> P:
+    """Optimizer-moment spec: param spec + ZeRO over 'pod' on the largest
+    still-unsharded dim (only on multi-pod meshes)."""
+    if mesh is None or "pod" not in mesh.axis_names:
+        return spec
+    parts = list(spec) + [None] * (len(param_shape) - len(spec))
+    pod = mesh.shape["pod"]
+    best, best_size = None, 0
+    for i, (p, s) in enumerate(zip(parts, param_shape)):
+        if p is None and s % pod == 0 and s > best_size:
+            best, best_size = i, s
+    if best is None:
+        return spec
+    parts[best] = "pod"
+    return P(*parts)
+
+
+def cache_spec(mesh, kind: str = "kv") -> P:
+    """Decode-cache layout: (L, B, S, KV, hd) — batch over dp, S over model
+    (sequence-split flash decode); SSM states: heads over model."""
+    dp = dp_axes(mesh)
+    if kind == "kv":
+        return P(None, dp, _M, None, None)
+    if kind == "ssm":                    # (L, B, H, N, P)
+        return P(None, dp, _M, None, None)
+    if kind == "vec":                    # (L, B, 1/K, C)
+        return P(None, dp, None, _M)
+    raise ValueError(kind)

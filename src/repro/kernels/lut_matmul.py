@@ -1,0 +1,89 @@
+"""Faithful §4 integer engine as a Pallas kernel.
+
+acc[m, n] = Σ_k  M[a_idx[m, k], w_idx[k, n]]
+
+Both operands are *indices*; the multiplication table M is VMEM-resident
+(flattened for a single-gather address computation ``a·C + w``).  The inner
+loop walks the K block one step at a time so the gathered intermediate is a
+(bm, bn) tile rather than a (bm, bk, bn) cube — VMEM stays bounded by
+3 tiles + the table.
+
+On a real TPU this runs on the VPU (gathers + int adds; the MXU is idle) —
+it is the *faithful artifact* proving the multiply-free dataflow, not the
+deployment path (that is ``codebook_matmul``, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut_matmul_kernel", "lut_matmul_pallas"]
+
+
+def lut_matmul_kernel(a_ref, w_ref, table_ref, out_ref, *, bk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    flat = table_ref[0, :]                          # (R*C,) int32
+    a_blk = a_ref[...]                              # (bm, bk) int32
+    w_blk = w_ref[...]                              # (bk, bn) int32
+
+    def body(kk, acc):
+        addr = a_blk[:, kk][:, None] + w_blk[kk, :][None, :]  # (bm, bn)
+        return acc + jnp.take(flat, addr, axis=0)
+
+    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros_like(out_ref))
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lut_matmul_pallas(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
+                      table: jnp.ndarray, *,
+                      bm: int = 128, bn: int = 128, bk: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """a_idx: (M, K) int32 rows of the table; w_idx: (K, N) int32 columns;
+    table: (R, C) int32.  Returns (M, N) int32 accumulators.
+
+    The row index is pre-multiplied by C outside the kernel (one integer
+    multiply per *index*, amortised — the per-MAC path stays multiply-free;
+    on-device this constant-stride scaling is an address computation).
+    K is padded with (row 0, col 0) pairs and corrected by −pad·table[0,0].
+    """
+    m, k = a_idx.shape
+    k2, n = w_idx.shape
+    assert k == k2
+    n_cols = table.shape[1]
+    a_scaled = a_idx.astype(jnp.int32) * n_cols
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a_scaled = jnp.pad(a_scaled, ((0, mp), (0, kp)))
+    if kp or np_:
+        w_idx = jnp.pad(w_idx.astype(jnp.int32), ((0, kp), (0, np_)))
+    flat = table.reshape(1, -1).astype(jnp.int32)
+
+    grid = (a_scaled.shape[0] // bm, w_idx.shape[1] // bn,
+            a_scaled.shape[1] // bk)
+    out = pl.pallas_call(
+        functools.partial(lut_matmul_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, flat.shape[1]), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_scaled.shape[0], w_idx.shape[1]),
+                                       jnp.int32),
+        interpret=interpret,
+    )(a_scaled, w_idx, flat)
+    out = out[:m, :n]
+    if kp:  # remove the padded (row 0, col 0) contributions
+        out = out - kp * table[0, 0].astype(jnp.int32)
+    return out

@@ -1,0 +1,119 @@
+"""Public ops for the kernels package: jit'd wrappers + gradients.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated in interpret mode per the brief).
+
+* ``codebook_matmul(x, w_idx, codebook)`` — differentiable w.r.t. x and the
+  codebook (d codebook = scatter-add of x^T·g over indices), NOT w.r.t. the
+  integer indices.  This is exactly the gradient structure the paper's
+  training uses between clustering events (weights move freely in float;
+  here the codebook is the float degree of freedom).
+* ``lut_matmul(a_idx, w_idx, tables)`` — integer-only, no gradient.
+* ``act_quant(x, kind, levels)`` — paper §2.1 backward: derivative of the
+  *underlying* function, ignoring quantization.
+* ``kmeans_assign(values, centers)`` — no gradient (clustering is a
+  training-loop event, not part of the differentiated graph).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import act_quant as _aq
+from repro.kernels import codebook_matmul as _cm
+from repro.kernels import kmeans1d as _km
+from repro.kernels import lut_matmul as _lm
+
+__all__ = ["codebook_matmul", "lut_matmul", "act_quant", "kmeans_assign",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+# --- codebook matmul ---------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def codebook_matmul(x, w_idx, codebook):
+    return _cm.codebook_matmul_pallas(x, w_idx, codebook,
+                                      interpret=_interp())
+
+
+def _cm_fwd(x, w_idx, codebook):
+    return codebook_matmul(x, w_idx, codebook), (x, w_idx, codebook)
+
+
+def _cm_bwd(res, g):
+    x, w_idx, codebook = res
+    w = codebook[w_idx.astype(jnp.int32)].astype(g.dtype)        # (K, N)
+    dx = jnp.dot(g, w.T).astype(x.dtype)
+    # d codebook: scatter-add (x^T g) over the index map
+    xtg = jnp.dot(x.astype(jnp.float32).T, g)                    # (K, N)
+    dbook = jax.ops.segment_sum(xtg.reshape(-1),
+                                w_idx.astype(jnp.int32).reshape(-1),
+                                num_segments=codebook.shape[0])
+    return dx, None, dbook.astype(codebook.dtype)
+
+
+codebook_matmul.defvjp(_cm_fwd, _cm_bwd)
+
+
+# --- faithful integer engine -------------------------------------------------
+
+def lut_matmul(a_idx, w_idx, table):
+    """Integer accumulators of the §4 engine (no gradient, by construction)."""
+    return _lm.lut_matmul_pallas(a_idx, w_idx, table, interpret=_interp())
+
+
+# --- fused activation quantization ------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def act_quant(x, kind: str, levels: int):
+    y, _ = _aq.act_quant_pallas(x, kind=kind, levels=levels,
+                                interpret=_interp())
+    return y
+
+
+def _aq_fwd(x, kind, levels):
+    return act_quant(x, kind, levels), x
+
+
+def _aq_bwd(kind, levels, x, g):
+    # derivative of the underlying (un-quantized) nonlinearity — paper §2.1
+    if kind == "tanh":
+        d = 1.0 - jnp.tanh(x) ** 2
+    elif kind == "relu6":
+        d = ((x > 0.0) & (x < 6.0)).astype(g.dtype)
+    elif kind == "sigmoid":
+        s = jax.nn.sigmoid(x)
+        d = s * (1.0 - s)
+    elif kind == "rtanh":
+        d = jnp.where(x > 0.0, 1.0 - jnp.tanh(x) ** 2, 0.0)
+    else:
+        raise ValueError(kind)
+    return ((g * d).astype(x.dtype),)
+
+
+act_quant.defvjp(_aq_fwd, _aq_bwd)
+
+
+def act_quant_index(x, kind: str, levels: int):
+    """Level indices only (int32; no gradient path)."""
+    _, idx = _aq.act_quant_pallas(x, kind=kind, levels=levels,
+                                  interpret=_interp())
+    return idx
+
+
+# --- k-means streaming assignment -------------------------------------------
+
+def kmeans_assign(values, centers):
+    """(assignment idx, per-center sums, per-center counts)."""
+    return _km.kmeans_assign_pallas(values, centers, interpret=_interp())

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth the kernels are asserted against
+(interpret=True on CPU; real TPU elsewhere).  They are deliberately naive —
+clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "codebook_matmul_ref",
+    "lut_matmul_ref",
+    "act_quant_ref",
+    "kmeans_assign_ref",
+]
+
+
+def codebook_matmul_ref(x: jnp.ndarray, w_idx: jnp.ndarray,
+                        codebook: jnp.ndarray) -> jnp.ndarray:
+    """out = x @ codebook[w_idx]  — dequantize-then-matmul ground truth.
+
+    x: (M, K) float; w_idx: (K, N) int; codebook: (W,) float. out: (M, N) f32.
+    """
+    w = codebook[w_idx.astype(jnp.int32)].astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def lut_matmul_ref(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
+                   table: jnp.ndarray) -> jnp.ndarray:
+    """acc[m, n] = Σ_k table[a_idx[m, k], w_idx[k, n]]  (paper §4 engine).
+
+    a_idx: (M, K) int32; w_idx: (K, N) int32; table: (R, C) int32.
+    """
+    flat = table.reshape(-1)
+    n_cols = table.shape[1]
+    gathered = flat[a_idx[:, :, None] * n_cols + w_idx[None, :, :]]
+    return jnp.sum(gathered, axis=1)
+
+
+def act_quant_ref(x: jnp.ndarray, kind: str, levels: int) -> jnp.ndarray:
+    """Quantized activation values (forward semantics only)."""
+    from repro.core.activations import ActQuantConfig, act_apply
+    return act_apply(ActQuantConfig(kind, levels), x)
+
+
+def kmeans_assign_ref(values: jnp.ndarray, centers: jnp.ndarray):
+    """(assignment, per-center sum, per-center count) for sorted centers."""
+    boundaries = (centers[:-1] + centers[1:]) / 2.0
+    idx = jnp.searchsorted(boundaries, values, side="right").astype(jnp.int32)
+    k = centers.shape[0]
+    sums = jax.ops.segment_sum(values.astype(jnp.float32), idx, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones_like(values, jnp.float32), idx,
+                                 num_segments=k)
+    return idx, sums, counts

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any other import (jax locks the device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell; record memory analysis, FLOPs/bytes, and the collective schedule.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single,multi
+
+Per-cell JSON lands in ``dryrun_results/`` (``--out``); benchmarks/roofline
+reads those files.  Because scan-over-layers HLO counts a loop body once,
+each cell also lowers tiny *probe* configs (depth 1 and 2, unrolled) on the
+same mesh to recover per-layer FLOP/byte/collective increments; the harness
+reports  total = outside + depth × per_layer  (exact for homogeneous
+stacks; the only uncorrected loops are the SSM/RWKV state-carry scans whose
+bodies are <1% of layer FLOPs — see DESIGN.md §6).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.configs.registry import ASSIGNED
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.hlo import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import build
+from repro.optim import OptConfig
+
+
+def _abstract_compressed_params(model, wq):
+    """ShapeDtypeStruct tree of the codebook-index weight representation
+    (paper §4 deployment: intN index planes + |W| codebook)."""
+    from repro.core.quantizer import QuantizerState
+    from repro.serving.compress import to_codebook_params
+
+    def make():
+        params = model.init(jax.random.PRNGKey(0))
+        state = QuantizerState(
+            codebooks={"": jnp.zeros((wq.num_weights,), jnp.float32)},
+            last_step=0)
+        return to_codebook_params(params, wq, state)
+    return jax.eval_shape(make)
+
+
+_SERVE_TP_BUDGET = 3e9  # bytes/device of weights we allow data-replicated
+
+
+def _serve_fsdp(cfg, mesh) -> bool:
+    """Serving weight layout: TP-only (no per-layer gathers) whenever the
+    params fit replicated over `data` — the §Perf(a)/(c) win; models beyond
+    ~3 GB/device of TP-sharded weights (mistral-123b, grok-314b,
+    qwen3-moe-30b) keep ZeRO-3 storage + per-layer gathers instead of
+    blowing HBM."""
+    import math
+    model = build(cfg)
+    total = sum(math.prod(x.shape) * x.dtype.itemsize
+                for x in jax.tree.leaves(ST.abstract_params(model)))
+    return total / mesh.shape["model"] > _SERVE_TP_BUDGET
+
+
+def _lower_cell(cfg, shape_name: str, mesh, compressed: bool = False):
+    """Lower + compile one cell; returns (compiled, seconds)."""
+    sh = SHAPES[shape_name]
+    if sh.kind != "train":
+        cfg = cfg.replace(fsdp=_serve_fsdp(cfg, mesh))
+    model = build(cfg)
+    if compressed and sh.kind != "train":
+        params_abs = _abstract_compressed_params(model, cfg.quantized().wq)
+        from repro.distributed import sharding as SHD
+        mcfg = None
+        from repro.models import transformer as TT
+        if cfg.n_experts:
+            mcfg = TT.moe_cfg(cfg)
+        pspecs = SHD.param_specs(params_abs, cfg, mcfg, mesh, fsdp=False)
+    else:
+        params_abs = ST.abstract_params(model)
+        pspecs = ST.params_partition_specs(model, mesh)
+    p_sh = ST.shardings_for(pspecs, mesh)
+    b_sh = ST.shardings_for(ST.batch_specs(model, shape_name, mesh), mesh)
+    batch_abs = model.input_specs(shape_name)
+
+    t0 = time.time()
+    if sh.kind == "train":
+        ocfg = OptConfig(name="adamw", moments_dtype=cfg.moments_dtype)
+        o_sh = ST.shardings_for(ST.opt_specs(model, ocfg, mesh), mesh)
+        opt_abs = ST.abstract_opt_state(model, ocfg)
+        step = ST.make_train_step(model, ocfg, mesh)
+        lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1)).lower(
+            params_abs, opt_abs, batch_abs)
+    elif sh.kind == "prefill":
+        c_sh = ST.shardings_for(
+            ST.cache_partition_specs(model, shape_name, mesh), mesh)
+        step = ST.make_prefill_step(model, mesh)
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh),
+                          out_shardings=(None, c_sh)).lower(
+            params_abs, batch_abs)
+    else:  # decode
+        c_sh = ST.shardings_for(
+            ST.cache_partition_specs(model, shape_name, mesh), mesh)
+        cache_abs = model.cache_specs(shape_name)
+        step = ST.make_decode_step(model, mesh)
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh["tokens"], c_sh),
+                          out_shardings=(None, c_sh),
+                          donate_argnums=(2,)).lower(
+            params_abs, batch_abs["tokens"], cache_abs)
+    compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def _probe_cfgs(cfg):
+    """Depth knobs for the scan-trip-count correction."""
+    if cfg.family == "hybrid":
+        se = cfg.shared_attn_every
+        mk = lambda n: cfg.replace(n_layers=se * n, scan_unroll=True)
+        return {"layers": (mk, cfg.n_layers // se)}
+    if cfg.family == "audio":
+        return {"layers": ((lambda n: cfg.replace(n_layers=n, enc_layers=1,
+                                                  scan_unroll=True)),
+                           cfg.n_layers),
+                "enc": ((lambda n: cfg.replace(n_layers=1, enc_layers=n,
+                                               scan_unroll=True)),
+                        cfg.enc_layers)}
+    return {"layers": ((lambda n: cfg.replace(n_layers=n, scan_unroll=True)),
+                       cfg.n_layers)}
+
+
+def _stats(compiled):
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collectives_per_device": coll,
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+
+
+def _metric3(s):
+    return {"flops": s["flops_per_device"], "bytes": s["bytes_per_device"],
+            "coll": s["collectives_per_device"].get("total", 0)}
+
+
+def _corrected(cfg, shape_name, mesh, base_stats, compressed=False):
+    """Probe shallow configs; return trip-count-corrected per-step totals.
+
+    Cost model (every lax.scan body is counted once by cost_analysis):
+
+        total = base(all depths 1) + Σ_k (depth_k − 1) · inc_k
+
+    Probes run fully unrolled at microbatches=1: microbatching only *splits
+    the token batch* (each microbatch handles B/m tokens), so a probe over
+    the whole batch already measures the true per-step totals — multiplying
+    by m would overcount everything token-proportional.  depth_k are the
+    layer-stack depths (decoder layers; + encoder layers for audio).
+    """
+    probes = _probe_cfgs(cfg)
+
+    def base_of(c):
+        # moe_token_chunks=1: the chunk scan is yet another body-counted-once
+        # loop; probes must run it flat (memory is taken from the full cell)
+        c = c.replace(scan_unroll=True, microbatches=1, moe_token_chunks=1)
+        if cfg.family == "audio":
+            c = c.replace(enc_layers=1)
+        return c.replace(n_layers=(cfg.shared_attn_every
+                                   if cfg.family == "hybrid" else 1))
+
+    base_cfg = base_of(cfg)
+    s1 = _stats(_lower_cell(base_cfg, shape_name, mesh,
+                            compressed=compressed)[0])
+    f0 = _metric3(s1)
+
+    incs = {}
+    for name, (mk, depth) in probes.items():
+        cfg2 = base_of(mk(2)) if name != "layers" else \
+            mk(2).replace(scan_unroll=True, microbatches=1,
+                          moe_token_chunks=1)
+        if cfg.family == "audio":
+            cfg2 = cfg.replace(scan_unroll=True, microbatches=1,
+                               n_layers=2 if name == "layers" else 1,
+                               enc_layers=2 if name == "enc" else 1)
+        s2 = _stats(_lower_cell(cfg2, shape_name, mesh,
+                                compressed=compressed)[0])
+        f2 = _metric3(s2)
+        incs[name] = {"depth": depth,
+                      **{k: f2[k] - f0[k] for k in f0}}
+
+    corrected = {}
+    for k in f0:
+        corrected[k] = f0[k] + sum((i["depth"] - 1) * i[k]
+                                   for i in incs.values())
+    corrected["per_layer"] = incs
+    return corrected
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             probes: bool = True, compressed: bool = False):
+    cfg = configs.get(arch)
+    if compressed:
+        cfg = cfg.quantized()
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + ("__q" if compressed else "")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        print(f"[skip] {tag}")
+        return json.load(open(path))
+    if shape_name not in cfg.shapes():
+        rec = {"cell": tag, "status": "skipped",
+               "reason": ("no decoder" if not cfg.has_decoder else
+                          "full-attention arch: long_500k documented-skip")}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[SKIP-doc] {tag}: {rec['reason']}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    print(f"[lower] {tag} mesh={dict(mesh.shape)}", flush=True)
+    try:
+        compiled, secs = _lower_cell(cfg, shape_name, mesh,
+                                     compressed=compressed)
+        rec = {"cell": tag, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "n_devices": mesh.size,
+               "status": "ok", "compile_seconds": round(secs, 1),
+               **_stats(compiled)}
+        print(f"  memory_analysis: {compiled.memory_analysis()}", flush=True)
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}", flush=True)
+        del compiled
+        if probes:
+            rec["corrected"] = _corrected(cfg, shape_name, mesh, rec,
+                                          compressed=compressed)
+    except Exception as e:  # a cell failure is a bug — record it loudly
+        rec = {"cell": tag, "status": "error", "error": repr(e),
+               "trace": traceback.format_exc()[-4000:]}
+        print(f"[ERROR] {tag}: {e!r}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--compressed", action="store_true",
+                    help="codebook-quantized variant (|A|=32,|W|=1000)")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch in ("all",) else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                rec = run_cell(arch, shape, m == "multi", args.out,
+                               probes=not args.no_probes,
+                               compressed=args.compressed)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_err += st == "error"
+                n_skip += st == "skipped"
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skipped(doc)={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Step builders + sharding assembly for training / prefill / decode.
+
+Everything the dry-run and the real trainer share lives here: the jitted
+step functions, in/out shardings derived from the policy in
+``repro.distributed.sharding``, and ShapeDtypeStruct stand-ins.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.distributed import sharding as SH
+from repro.models.model_zoo import Model, build
+from repro.models import transformer as T
+from repro.optim import OptConfig, init_opt_state, apply_updates
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "batch_specs", "cache_partition_specs", "shardings_for",
+           "opt_specs", "abstract_params", "abstract_opt_state"]
+
+
+def _maybe(axis_or_axes, dim_size, mesh):
+    """Use the axis only if the dim divides evenly; else replicate."""
+    axes = axis_or_axes if isinstance(axis_or_axes, tuple) else (axis_or_axes,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axis_or_axes if dim_size % total == 0 else None
+
+
+def abstract_params(model: Model, key=None):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(model: Model, ocfg: OptConfig):
+    params = abstract_params(model)
+    return jax.eval_shape(lambda: init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), ocfg))
+
+
+def params_partition_specs(model: Model, mesh):
+    params = abstract_params(model)
+    mcfg = T.moe_cfg(model.cfg) if model.cfg.n_experts else None
+    return SH.param_specs(params, model.cfg, mcfg, mesh,
+                          fsdp=model.cfg.fsdp)
+
+
+def opt_specs(model: Model, ocfg: OptConfig, mesh):
+    """Moment trees share the param specs (+ pod-ZeRO); count is replicated."""
+    params = abstract_params(model)
+    pspecs = params_partition_specs(model, mesh)
+    mom = jax.tree.map(lambda s, p: SH.moments_spec(s, p.shape, mesh),
+                       pspecs, params)
+    state = abstract_opt_state(model, ocfg)
+    out = {}
+    for k in state:
+        out[k] = P() if k == "count" else mom
+    return out
+
+
+def batch_specs(model: Model, shape_name: str, mesh):
+    cfg = model.cfg
+    sh = SHAPES[shape_name]
+    dp = SH.dp_axes(mesh)
+    if cfg.batch_over_model:
+        wide = dp + ("model",)
+        b_ax = (_maybe(wide, sh.global_batch, mesh)
+                or _maybe(dp, sh.global_batch, mesh))
+    else:
+        b_ax = _maybe(dp, sh.global_batch, mesh)
+    specs = {"tokens": P(b_ax, None)}
+    if cfg.family == "vlm" and sh.kind != "decode":
+        specs["embeds"] = P(b_ax, None, None)
+        specs["positions"] = P(None, b_ax, None)
+    if cfg.family == "audio" and sh.kind != "decode":
+        specs["frames"] = P(b_ax, None, None)
+    return specs
+
+
+def cache_partition_specs(model: Model, shape_name: str, mesh):
+    """Spec tree for the decode cache (see sharding.py docstring)."""
+    cfg = model.cfg
+    sh = SHAPES[shape_name]
+    dp = SH.dp_axes(mesh)
+    cache = model.cache_specs(shape_name)
+    b_ax = _maybe(dp, sh.global_batch, mesh)
+
+    def spec_of(path, leaf):
+        name = path[-1]
+        shp = leaf.shape
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L/G, B, S, KV, hd): S over model
+            return P(None, b_ax, _maybe("model", shp[2], mesh), None, None)
+        if name in ("k_scale", "v_scale"):   # (L, B, S, KV)
+            return P(None, b_ax, _maybe("model", shp[2], mesh), None)
+        if name == "h":            # (L, B, H, N, P): heads over model
+            return P(None, b_ax, _maybe("model", shp[2], mesh), None, None)
+        if name == "s":            # (L, B, H, P, P)
+            return P(None, b_ax, _maybe("model", shp[2], mesh), None, None)
+        if name == "conv":         # (L, B, K-1, C): channels over model
+            return P(None, b_ax, None, _maybe("model", shp[3], mesh))
+        if name in ("x_tm", "x_cm"):   # (L, B, 1, D)
+            return P(None, b_ax, None, _maybe("model", shp[3], mesh))
+        if name == "memory":       # (B, enc_len, d)
+            return P(b_ax, None, None)
+        return P(*([None] * leaf.ndim))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for kp, v in leaves:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        out.append(spec_of(parts, v))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shardings_for(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --- step factories ------------------------------------------------------------
+
+
+def make_train_step(model: Model, ocfg: OptConfig, mesh, donate: bool = True):
+    """Train step with optional microbatched gradient accumulation
+    (cfg.microbatches > 1): the global batch is processed in N sequential
+    slices, bounding activation memory at 1/N while keeping the same
+    mathematical update (grads averaged in moments dtype)."""
+    cfg = model.cfg
+    nmb = max(1, cfg.microbatches)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch, mesh), has_aux=True)(params)
+
+    def split_mb(batch):
+        """batch-dim-0 tensors -> (nmb, B/nmb, ...); positions (3,B,S) special."""
+        out = {}
+        for k, x in batch.items():
+            if k == "positions":                    # (3, B, S)
+                out[k] = x.reshape((3, nmb, x.shape[1] // nmb) + x.shape[2:]
+                                   ).swapaxes(0, 1)
+            else:
+                out[k] = x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+        return out
+
+    pspecs = params_partition_specs(model, mesh) if mesh is not None else None
+
+    def step(params, opt_state, batch):
+        if nmb == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            acc_dt = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[cfg.moments_dtype]
+
+            def body(gacc, mbatch):
+                (_, metrics), g = grad_fn(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt) / nmb, gacc, g)
+                return gacc, metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            if pspecs is not None:
+                # the accumulator is a fresh while-loop carry: without an
+                # explicit constraint XLA may replicate it (= a full f32
+                # copy of the params per device)
+                zeros = jax.tree.map(
+                    lambda z, s: jax.lax.with_sharding_constraint(
+                        z, NamedSharding(mesh, s)), zeros, pspecs)
+            grads, ms = jax.lax.scan(body, zeros, split_mb(batch),
+                                     unroll=bool(cfg.scan_unroll))
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), ms)
+        params, opt_state, om = apply_updates(params, grads, opt_state, ocfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step
+
+
+def make_prefill_step(model: Model, mesh):
+    def step(params, batch):
+        return model.prefill(params, batch, mesh)
+    return step
+
+
+def make_decode_step(model: Model, mesh):
+    def step(params, tokens, cache):
+        return model.decode(params, tokens, cache, mesh)
+    return step

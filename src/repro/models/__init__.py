@@ -1,0 +1,14 @@
+"""Model zoo: composable JAX model definitions for the assigned architectures
+plus the paper's own networks (MLP / auto-encoder / AlexNet-style).
+
+All models are pure-functional (params pytree in, tensors out), use
+scan-over-layers for O(1)-in-depth HLO, and integrate the paper's technique
+via two hooks:
+
+* activation-quantization sites (``repro.core.activations.act_apply``) at
+  every bounded nonlinearity when ``cfg.act_levels > 0``;
+* weight tensors that may be *either* dense floats (training) or
+  ``{'w_idx', 'codebook'}`` index form (deployment — the §4 memory saving,
+  served by ``repro.kernels.codebook_matmul`` on TPU and by an XLA
+  gather+dot on other backends).
+"""

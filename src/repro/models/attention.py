@@ -1,0 +1,594 @@
+"""Attention: GQA + RoPE / M-RoPE / qk-norm, flash-chunked softmax, KV cache.
+
+Shapes convention: activations (B, L, D); heads live in the projection dims.
+``flash_attention`` streams KV blocks with an online softmax (lax.scan), so
+peak memory is O(L·block) instead of O(L²) — required for the 32k-prefill
+dry-run cells and a §Perf lever everywhere else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init
+
+__all__ = ["AttnConfig", "attn_init", "attn_apply", "init_kv_cache",
+           "rope", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int = 0                # 0 → d_model // n_heads
+    qk_norm: bool = False            # qwen3 family
+    rope_theta: float = 1e4
+    rope_sections: tuple = ()        # M-RoPE (qwen2-vl): head_dim split
+    window: int = 0                  # sliding-window size; 0 = full
+    causal: bool = True              # False for encoder self-attn
+    kv_block: int = 1024             # flash KV chunk
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def groups(self) -> int:
+        return self.n_heads // self.n_kv
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    hd = cfg.hd
+    p = {"wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+         "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * hd, dtype),
+         "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * hd, dtype),
+         "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd, dtype)
+        p["k_norm"] = rms_norm_init(hd, dtype)
+    del cross
+    return p
+
+
+# --- rotary ------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def rope(x, pos, theta: float = 1e4, sections: tuple = ()):
+    """Rotary embedding.  x: (B, L, H, hd); pos: (B, L) or (3, B, L) (M-RoPE).
+
+    M-RoPE (qwen2-vl): the head_dim frequency bands are split into
+    ``sections`` (e.g. 16/24/24 of hd/2) driven by (temporal, h, w) position
+    streams; with a single position stream all sections use it (text mode —
+    equivalent to standard RoPE, which is the paper-accurate text behaviour).
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                        # (hd/2,)
+    if pos.ndim == 2:
+        pos3 = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    else:
+        pos3 = pos
+    if sections:
+        sec_id = jnp.repeat(jnp.arange(len(sections)),
+                            jnp.asarray(sections), total_repeat_length=hd // 2)
+        sec_id = jnp.minimum(sec_id, 2)
+    else:
+        sec_id = jnp.zeros((hd // 2,), jnp.int32)
+    # angle[b, l, f] = pos3[sec_id[f], b, l] * freqs[f]
+    p_sel = jnp.take(pos3, sec_id, axis=0)                # (hd/2, B, L)
+    ang = jnp.einsum("fbl,f->blf", p_sel.astype(jnp.float32), freqs)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --- decode attention (Lq == 1): one full einsum over the cache -------------
+#
+# With the KV cache sequence-sharded over `model` (flash-decode layout),
+# this is the form XLA parallelizes correctly: per-shard partial scores,
+# softmax max/sum all-reduce of (B, H, 1) scalars, partial PV + all-reduce.
+# A lax.scan over KV blocks here would instead force a cache gather.
+
+def decode_attention(q, k, v, kv_len, exclude=None, extra_kv=None):
+    """q: (B,1,KV,G,hd); k/v: (B,S,KV,hd) cache (may be *stale*: the current
+    token's K/V are passed via ``extra_kv`` so the cache carry can be read
+    before it is written — the ordering XLA needs to alias the update in
+    place).  ``exclude``: ring slot being evicted this step (masked)."""
+    B, Lq, KV, G, hd = q.shape
+    Lk = k.shape[1]
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    idx = jnp.arange(Lk)[None, None, None, None, :]
+    mask = idx < kv_len
+    if exclude is not None:
+        mask = mask & (idx != exclude)
+    s = jnp.where(mask, s, NEG_INF)
+    if extra_kv is not None:
+        k_new, v_new = extra_kv                       # (B, 1, KV, hd)
+        s_new = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_new.astype(jnp.float32))
+        s = jnp.concatenate([s, s_new], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    if extra_kv is not None:
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p[..., :Lk],
+                         v.astype(jnp.float32))
+        out = out + jnp.einsum("bkgqs,bskd->bqkgd", p[..., Lk:],
+                               extra_kv[1].astype(jnp.float32))
+    else:
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --- flash-chunked attention -------------------------------------------------
+#
+# Forward: online softmax over KV blocks (lax.scan).  Backward: a REAL flash
+# backward via custom_vjp — naive autodiff through the forward scan would
+# save every block's probability tensor (≈ the full L×L attention matrix in
+# f32; tens of GB/device at 4k×remat and fatal at 32k).  We save only
+# (q, k, v, out, m, denom) and re-derive per-block probabilities inside the
+# backward scan:  dS = P ⊙ (dOut·Vᵀ − δ),  δ_i = Σ_d dOut_id·Out_id.
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                    window: int = 0, kv_block: int = 1024):
+    """Online-softmax attention over KV blocks.
+
+    q: (B, Lq, KV, G, hd)   grouped query heads
+    k, v: (B, Lk, KV, hd)
+    q_offset: absolute position of q[0] (decode/prefill continuation).
+    kv_len: number of valid KV entries (traced ok); None = Lk.
+    Returns (B, Lq, KV, G, hd) in q.dtype.
+    """
+    if kv_len is None and isinstance(q_offset, int):
+        # static masking pattern -> memory-safe custom-vjp path
+        return _flash_cvjp(q, k, v, causal, q_offset, window, kv_block)
+    out, _, _ = _flash_fwd_scan(q, k, v, causal, q_offset, kv_len, window,
+                                kv_block)
+    return out
+
+
+def _mask_for(bi, blk, Lk, qpos, valid_len, causal, window):
+    kpos = bi * blk + jnp.arange(blk)
+    mask = kpos[None, :] < valid_len
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return mask
+
+
+def _flash_fwd_scan(q, k, v, causal, q_offset, kv_len, window, kv_block):
+    B, Lq, KV, G, hd = q.shape
+    Lk = k.shape[1]
+    blk = min(kv_block, Lk)
+    n_blk = -(-Lk // blk)
+    pad = n_blk * blk - Lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = hd ** -0.5
+    qpos = q_offset + jnp.arange(Lq)
+    valid_len = Lk if kv_len is None else kv_len
+
+    def body(carry, blk_in):
+        acc, m, denom, bi = carry
+        kblk, vblk = blk_in                                   # (B, blk, KV, hd)
+        # storage-dtype operands, f32 MXU accumulation: no full-sequence
+        # f32 copies of q are materialised
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(bi, blk, Lk, qpos, valid_len, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, denom, bi + 1), None
+
+    acc0 = jnp.zeros((B, KV, G, Lq, hd), jnp.float32)
+    m0 = jnp.full((B, KV, G, Lq), NEG_INF)
+    d0 = jnp.zeros((B, KV, G, Lq))
+    (acc, m, denom, _), _ = jax.lax.scan(body, (acc0, m0, d0, 0), (kb, vb))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)       # (B, Lq, KV, G, hd)
+    return out, m, denom
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_cvjp(q, k, v, causal, q_offset, window, kv_block):
+    out, _, _ = _flash_fwd_scan(q, k, v, causal, q_offset, None, window,
+                                kv_block)
+    return out
+
+
+def _flash_cvjp_fwd(q, k, v, causal, q_offset, window, kv_block):
+    out, m, denom = _flash_fwd_scan(q, k, v, causal, q_offset, None, window,
+                                    kv_block)
+    return out, (q, k, v, out, m, denom)
+
+
+def _flash_cvjp_bwd(causal, q_offset, window, kv_block, res, g):
+    q, k, v, out, m, denom = res
+    B, Lq, KV, G, hd = q.shape
+    Lk = k.shape[1]
+    blk = min(kv_block, Lk)
+    n_blk = -(-Lk // blk)
+    pad = n_blk * blk - Lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = hd ** -0.5
+    # keep q/g/out in their storage dtype; upcast per-block inside the scan
+    # (full-sequence f32 copies here were ~2.5 GB/device at mistral dims)
+    gT = g.transpose(0, 2, 3, 1, 4)                           # (B,KV,G,Lq,hd)
+    oT = out.transpose(0, 2, 3, 1, 4)
+    delta = jnp.einsum("bkgqd,bkgqd->bkgq", gT.astype(jnp.float32),
+                       oT.astype(jnp.float32))                # (B,KV,G,Lq)
+    denom = jnp.maximum(denom, 1e-30)
+    m = jnp.where(m <= NEG_INF / 2, 0.0, m)   # fully-masked rows: p stays 0
+    qpos = q_offset + jnp.arange(Lq)
+
+    def body(dq, blk_in):
+        kblk, vblk, bi = blk_in
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(bi, blk, Lk, qpos, Lk, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) / denom[..., None]      # (B,KV,G,Lq,c)
+        pc = p.astype(g.dtype)
+        dv = jnp.einsum("bkgqc,bkgqd->bckd", pc, gT,
+                        preferred_element_type=jnp.float32)   # (B,c,KV,hd)
+        ds = p * (jnp.einsum("bkgqd,bckd->bkgqc", gT, vblk,
+                             preferred_element_type=jnp.float32)
+                  - delta[..., None])
+        dsc = ds.astype(q.dtype)
+        dk = jnp.einsum("bkgqc,bqkgd->bckd", dsc, q,
+                        preferred_element_type=jnp.float32) * scale
+        dq = dq + jnp.einsum("bkgqc,bckd->bqkgd", dsc, kblk,
+                             preferred_element_type=jnp.float32) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, Lq, KV, G, hd), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(n_blk)))
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * blk, KV, hd)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * blk, KV, hd)
+    if pad:
+        dk, dv = dk[:, :Lk], dv[:, :Lk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_cvjp.defvjp(_flash_cvjp_fwd, _flash_cvjp_bwd)
+
+
+# --- full module -------------------------------------------------------------
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _project_qkv(p, x, cfg: AttnConfig, kv_src=None, pos=None,
+                 rope_ok=True):
+    B, L, _ = x.shape
+    hd, KV, G = cfg.hd, cfg.n_kv, cfg.groups
+    kv_src = x if kv_src is None else kv_src
+    Lk = kv_src.shape[1]
+    q = dense(p["wq"], x).reshape(B, L, KV, G, hd)
+    k = dense(p["wk"], kv_src).reshape(B, Lk, KV, hd)
+    v = dense(p["wv"], kv_src).reshape(B, Lk, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    if rope_ok:
+        q = rope(q.reshape(B, L, KV * G, hd), pos, cfg.rope_theta,
+                 cfg.rope_sections).reshape(B, L, KV, G, hd)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_sections)
+    return q, k, v
+
+
+KV_QMAX = 127.0
+
+
+def quantize_kv(t):
+    """(B, L, KV, hd) float -> (int8 values, per-(B,L,KV) bf16 scales).
+
+    Symmetric per-token-per-head max-abs quantization — the serving-side KV
+    cache representation (halves cache HBM vs bf16; the same quantize-what-
+    you-store posture as the paper's §4 weight indices)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / KV_QMAX
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
+                            mesh, dp):
+    """Explicit flash-decode over the `model`-sharded cache sequence dim.
+
+    The XLA-auto path all-gathers each layer's (B, S, KV, hd) cache slice
+    inside the decode loop (SPMD cannot re-shard the traced-index
+    dynamic-update/read efficiently — confirmed in the dry-run HLO, ~1 GB
+    f32 per layer).  Here every shard: reads its LOCAL S-slice, computes
+    partial scores, joins softmax statistics with two tiny psums
+    ((B,H,1) max/denominator and the (B,H,1,hd) partial output), and writes
+    the new token's K/V only on the owning shard.  Collective bytes per
+    layer drop from O(B·S·KV·hd) to O(B·H·hd).
+
+    Returns (num, denom, m_glob, k_all, v_all, scales) — the caller folds in
+    the current token's extra softmax term and normalises.
+    """
+    B = q.shape[0]
+    b_ax = dp if B % _dp_size(mesh, dp) == 0 else None
+    qspec = P(b_ax, None, None, None, None)
+    cspec = P(None, b_ax, "model", None, None)
+    sspec = P(None, b_ax, "model", None)
+    have_sc = scales is not None
+    hd = q.shape[-1]
+
+    def f(q, k, v, k_all, v_all, ks, vs, layer, ins, vlen):
+        m_id = jax.lax.axis_index("model")
+        S_loc = k_all.shape[2]
+        start = m_id * S_loc
+        k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        if have_sc:
+            # dequantize to bf16, not f32: halves the materialised copies
+            k_l = dequantize_kv(k_l, jax.lax.dynamic_index_in_dim(
+                ks, layer, 0, keepdims=False)).astype(jnp.bfloat16)
+            v_l = dequantize_kv(v_l, jax.lax.dynamic_index_in_dim(
+                vs, layer, 0, keepdims=False)).astype(jnp.bfloat16)
+        # scores: operands stay in cache dtype; accumulate f32 on the MXU —
+        # avoids materialising f32 copies of the K/V slices (2× HBM)
+        qf = (q.astype(jnp.float32) * hd ** -0.5).astype(k_l.dtype)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_l,
+                       preferred_element_type=jnp.float32)
+        gidx = start + jnp.arange(S_loc)
+        mask = (gidx < vlen) & (gidx != ins)
+        s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1)
+        m_glob = jnp.maximum(jax.lax.pmax(m_loc, "model"), NEG_INF / 10)
+        p = jnp.exp(s - m_glob[..., None])
+        denom = jax.lax.psum(jnp.sum(p, axis=-1), "model")
+        # the (B,H,1,hd) partial output is the psum payload — ship bf16
+        # (denominator & max stay f32; the normalised result keeps ~3
+        # significant digits, inside the int8-KV noise floor)
+        num = jax.lax.psum(
+            jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_l.dtype), v_l,
+                       preferred_element_type=jnp.float32)
+            .astype(jnp.bfloat16), "model").astype(jnp.float32)
+        # write the fresh K/V on the owning shard only (same-value rewrite
+        # elsewhere keeps the store unconditional => in-place friendly)
+        loc = jnp.clip(ins - start, 0, S_loc - 1)
+        owner = (ins >= start) & (ins < start + S_loc)
+        zero = jnp.zeros((), jnp.int32)
+
+        def put(cache, new, sc_cache=None, sc_new=None):
+            cur = jax.lax.dynamic_slice(
+                cache, (layer, zero, loc, zero, zero),
+                (1,) + new.shape)
+            upd = jnp.where(owner, new[None].astype(cache.dtype), cur)
+            return jax.lax.dynamic_update_slice(
+                cache, upd, (layer, zero, loc, zero, zero))
+
+        if have_sc:
+            kq, ksc = quantize_kv(k)
+            vq, vsc = quantize_kv(v)
+            cur = jax.lax.dynamic_slice(ks, (layer, zero, loc, zero),
+                                        (1,) + ksc.shape)
+            ks = jax.lax.dynamic_update_slice(
+                ks, jnp.where(owner, ksc[None].astype(ks.dtype), cur),
+                (layer, zero, loc, zero))
+            cur = jax.lax.dynamic_slice(vs, (layer, zero, loc, zero),
+                                        (1,) + vsc.shape)
+            vs = jax.lax.dynamic_update_slice(
+                vs, jnp.where(owner, vsc[None].astype(vs.dtype), cur),
+                (layer, zero, loc, zero))
+            k_all = put(k_all, kq)
+            v_all = put(v_all, vq)
+        else:
+            k_all = put(k_all, k)
+            v_all = put(v_all, v)
+        return num, denom, m_glob, k_all, v_all, ks, vs
+
+    ks, vs = scales if have_sc else (jnp.zeros((), jnp.int8),) * 2
+    num, denom, m_glob, k_all, v_all, ks, vs = jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(qspec, P(b_ax, None, None, None), P(b_ax, None, None, None),
+                  cspec, cspec,
+                  sspec if have_sc else P(),
+                  sspec if have_sc else P(),
+                  P(), P(), P()),
+        out_specs=(P(b_ax, None, None, None, None),
+                   P(b_ax, None, None, None),
+                   P(b_ax, None, None, None),
+                   cspec, cspec,
+                   sspec if have_sc else P(),
+                   sspec if have_sc else P()),
+        check_vma=False,
+    )(q, k, v, k_all, v_all, ks, vs, layer, ins, vlen)
+    new_scales = (ks, vs) if have_sc else None
+    return num, denom, m_glob, k_all, v_all, new_scales
+
+
+def _dp_size(mesh, dp):
+    n = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
+                       k_all, v_all, layer, scales=None, mesh=None, dp=None):
+    """Decode step against a *stacked* (L, B, S, KV, hd) cache carried
+    through the layer scan — the new token's K/V are dynamic-update-sliced
+    into the carry (aliased in place by XLA's while-loop buffer assignment,
+    so the cache is never double-buffered), then the layer's slice is read
+    back for the attention einsum.
+
+    insert_at: ring/linear write position; valid_len: attendable prefix.
+    scales: (ks_all, vs_all) (L, B, S, KV) when the cache is int8-quantized.
+    Returns (out, k_all, v_all, new_scales).
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    q, k, v = _project_qkv(p, x, cfg, pos=pos)
+
+    if mesh is not None and k_all.shape[2] % mesh.shape["model"] == 0:
+        # explicit flash-decode over the S-sharded cache (see
+        # _decode_cached_shardmap) + fold in the current token's term
+        num, denom, m_glob, k_all, v_all, new_scales = _decode_cached_shardmap(
+            q, k, v, k_all, v_all, scales, layer, insert_at, valid_len,
+            mesh, dp or ("data",))
+        qf = (q.astype(jnp.float32) * hd ** -0.5)
+        s_new = jnp.einsum("bqkgd,bskd->bkgq", qf,
+                           k.astype(jnp.float32))          # (B,KV,G,1)
+        m2 = jnp.maximum(m_glob, s_new)
+        corr = jnp.exp(m_glob - m2)
+        e_new = jnp.exp(s_new - m2)
+        num = num * corr[..., None] + jnp.einsum(
+            "bkgq,bskd->bkgqd", e_new, v.astype(jnp.float32))
+        denom = denom * corr + e_new
+        out = (num / jnp.maximum(denom[..., None], 1e-30))
+        out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    else:
+        # READ the stale slice first — a carry read after the update forces
+        # XLA to materialise a cache copy per step; read-before-write aliases.
+        k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        if scales is not None:
+            ks_all, vs_all = scales
+            k_l = dequantize_kv(k_l, jax.lax.dynamic_index_in_dim(
+                ks_all, layer, 0, keepdims=False))
+            v_l = dequantize_kv(v_l, jax.lax.dynamic_index_in_dim(
+                vs_all, layer, 0, keepdims=False))
+        # stale cache: current slot may hold an evicted ring entry — exclude
+        # it; the fresh K/V enter through extra_kv.
+        out = decode_attention(q, k_l, v_l, valid_len, exclude=insert_at,
+                               extra_kv=(k, v))
+        zero = jnp.zeros((), jnp.int32)
+        if scales is not None:
+            kq, ksc = quantize_kv(k)
+            vq, vsc = quantize_kv(v)
+            ks_all = jax.lax.dynamic_update_slice(
+                ks_all, ksc[None].astype(ks_all.dtype),
+                (layer, zero, insert_at, zero))
+            vs_all = jax.lax.dynamic_update_slice(
+                vs_all, vsc[None].astype(vs_all.dtype),
+                (layer, zero, insert_at, zero))
+            k, v = kq, vq
+            new_scales = (ks_all, vs_all)
+        else:
+            new_scales = None
+        k_all = jax.lax.dynamic_update_slice(
+            k_all, k[None].astype(k_all.dtype),
+            (layer, zero, insert_at, zero, zero))
+        v_all = jax.lax.dynamic_update_slice(
+            v_all, v[None].astype(v_all.dtype),
+            (layer, zero, insert_at, zero, zero))
+    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd))
+    return out, k_all, v_all, new_scales
+
+
+def attn_apply(p, x, cfg: AttnConfig, *, pos=None, cache=None, cache_index=None,
+               kv_override=None, kv_valid_len=None, return_kv=False,
+               mesh=None):
+    """General attention forward.
+
+    x: (B, L, D).  pos: positions (B, L) or (3, B, L).  If ``cache`` is given
+    (decode), new K/V are written at ``cache_index`` and attention runs over
+    the cache.  ``kv_override``: (B, Lk, D) encoder memory for cross-attn
+    (RoPE skipped, cache unused).  ``kv_valid_len``: decode semantics — every
+    cache entry below this length is attendable (causality implicit: the
+    cache holds only past tokens + the one just written); used both for
+    linear caches (pos+1) and ring-buffer windows (min(pos+1, window)).
+    Returns (out, new_cache).
+    """
+    B, L, _ = x.shape
+    hd, KV, G = cfg.hd, cfg.n_kv, cfg.groups
+    q = dense(p["wq"], x).reshape(B, L, KV, G, hd)
+    kv_src = x if kv_override is None else kv_override
+    Lk = kv_src.shape[1]
+    k = dense(p["wk"], kv_src).reshape(B, Lk, KV, hd)
+    v = dense(p["wv"], kv_src).reshape(B, Lk, KV, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    if kv_override is None:  # rotary only for self-attention
+        q = rope(q.reshape(B, L, KV * G, hd), pos, cfg.rope_theta,
+                 cfg.rope_sections).reshape(B, L, KV, G, hd)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_sections)
+
+    new_cache = None
+    q_offset = 0
+    kv_len = None
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                                 cache_index, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                                 cache_index, axis=1)
+        new_cache = {"k": kc, "v": vc}
+        k, v = kc, vc
+        q_offset = cache_index
+        kv_len = cache_index + L
+
+    causal = cfg.causal and kv_override is None
+    window = cfg.window
+    if kv_valid_len is not None:
+        kv_len, causal, window, q_offset = kv_valid_len, False, 0, 0
+
+    if mesh is not None and L > 1 and L % mesh.shape["model"] == 0:
+        # GQA head counts rarely divide the TP axis (kv=4..32 vs 16); left
+        # to sharding propagation, q/out/g replicate at (B, S, H, hd) —
+        # sequence-sharding the attention internals keeps them 1/TP-sized
+        # (flash fwd/bwd are row-local in Lq; dk/dv partials psum)
+        from repro.distributed.sharding import dp_axes, named
+        sp = named(mesh, P(dp_axes(mesh), "model", None, None, None))
+        q = jax.lax.with_sharding_constraint(q, sp)
+
+    if L == 1 and kv_valid_len is not None:   # decode fast path
+        out = decode_attention(q, k, v, kv_len)
+    else:
+        out = flash_attention(q, k, v, causal=causal,
+                              q_offset=q_offset, kv_len=kv_len,
+                              window=window, kv_block=cfg.kv_block)
+        if mesh is not None and L > 1 and L % mesh.shape["model"] == 0:
+            from repro.distributed.sharding import dp_axes, named
+            out = jax.lax.with_sharding_constraint(
+                out, named(mesh, P(dp_axes(mesh), "model", None, None,
+                                   None)))
+    out = dense(p["wo"], out.reshape(B, L, KV * G * hd))
+    if return_kv:  # prefill: emit this layer's K/V as the cache plane
+        return out, {"k": k, "v": v}
+    return out, new_cache

@@ -1,0 +1,84 @@
+"""Model bundle: uniform handle over every architecture.
+
+``build(cfg)`` returns a ``Model`` whose members close over the config:
+
+    model.init(key)                      -> params
+    model.loss(params, batch, mesh)      -> (loss, metrics)
+    model.forward(params, batch, mesh)   -> logits
+    model.prefill(params, batch, mesh)   -> (logits, cache)
+    model.decode(params, tokens, cache, mesh) -> (logits, cache)
+    model.init_cache(batch, max_len)     -> cache
+    model.input_specs(shape_name, ...)   -> ShapeDtypeStruct batch (dry-run)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def loss(self, params, batch, mesh=None):
+        return T.loss_fn(params, self.cfg, batch, mesh)
+
+    def forward(self, params, batch, mesh=None):
+        return T.forward(params, self.cfg, batch, mesh)
+
+    def prefill(self, params, batch, mesh=None):
+        return T.prefill(params, self.cfg, batch, mesh)
+
+    def decode(self, params, tokens, cache, mesh=None):
+        return T.decode_step(params, self.cfg, tokens, cache, mesh)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return T.init_cache(self.cfg, batch, max_len, dtype)
+
+    # --- dry-run stand-ins ----------------------------------------------------
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct batch for a shape cell (no allocation).
+
+        For train/prefill this is the token batch (+ stubbed modality
+        embeddings); for decode it is the (B, 1) token step — the cache spec
+        comes from ``cache_specs``.
+        """
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        B, S = sh.global_batch, sh.seq_len
+        f32 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        if sh.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f32)
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_len,
+                                                    cfg.d_model), f32)
+        return batch
+
+    def cache_specs(self, shape_name: str) -> Any:
+        """ShapeDtypeStruct pytree of the decode cache for a shape cell."""
+        sh = SHAPES[shape_name]
+        cache = jax.eval_shape(
+            lambda: T.init_cache(self.cfg, sh.global_batch, sh.seq_len,
+                                 jnp.bfloat16))
+        return cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "paper":
+        raise ValueError("paper-family nets are built via repro.models."
+                         "papernets (see benchmarks/)")
+    return Model(cfg)

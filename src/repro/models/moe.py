@@ -1,0 +1,199 @@
+"""Mixture-of-Experts with explicit shard_map dispatch.
+
+Two sharding regimes over the `model` mesh axis, chosen by divisibility:
+
+* **EP** (n_experts % model_size == 0, e.g. qwen3-moe 128e over 16):
+  experts sharded over `model`; activations are *replicated* across `model`
+  (they arrive that way from the attention block), so each shard routes all
+  of its local tokens, keeps only the slice destined for its experts, and
+  the final psum over `model` combines expert outputs.  No all-to-all is
+  needed — replication over the TP axis plays the role of the dispatch
+  collective, which is the natural choice when TP is already present.
+* **TP-within-expert** (n_experts < model_size, e.g. grok-1 8e over 16):
+  every expert's d_ff is sharded over `model` (column/row parallel pair),
+  all shards process all experts, psum at the end.
+
+Token→slot dispatch is sort-based and *device-local* (the reason for
+shard_map rather than relying on XLA to partition a global sort): stable
+argsort by expert id, rank-within-run as capacity slot, scatter to an
+(E_local, C, d) buffer, grouped einsum, gather back, weighted combine.
+Tokens over capacity are dropped (standard GShard semantics, capacity
+factor configurable).
+
+Weights may additionally be FSDP-sharded over `data` (ZeRO-3); the block
+all-gathers them on entry (`fsdp=True`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, ffn_act
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_param_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act_kind: str = "silu"
+    act_levels: int = 0
+    model_axis: str = "model"
+    dp_axes: tuple = ("data",)
+    fsdp: bool = True         # expert weights gathered over dp_axes[?]
+    token_chunks: int = 1     # dispatch in sequential token chunks (memory)
+
+    def ep_size(self, model_size: int) -> int:
+        return model_size if self.n_experts % model_size == 0 else 1
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std = d ** -0.5
+    return {
+        "router": {"w": (jax.random.normal(ks[0], (d, E)) * std).astype(jnp.float32)},
+        "w1": (jax.random.normal(ks[1], (E, d, f)) * std).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (E, d, f)) * std).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (E, f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def moe_param_specs(cfg: MoEConfig, model_size: int, fsdp_axis: str = "data"):
+    """PartitionSpecs for the expert weights (without the scan/layer dim)."""
+    fa = fsdp_axis if cfg.fsdp else None
+    if cfg.ep_size(model_size) > 1:   # EP: experts over model, FSDP over d
+        return {"router": {"w": P(None, None)},
+                "w1": P(cfg.model_axis, fa, None),
+                "w3": P(cfg.model_axis, fa, None),
+                "w2": P(cfg.model_axis, None, fa)}
+    return {"router": {"w": P(None, None)},   # TP: d_ff over model
+            "w1": P(None, fa, cfg.model_axis),
+            "w3": P(None, fa, cfg.model_axis),
+            "w2": P(None, cfg.model_axis, fa)}
+
+
+def _dispatch_local(x_flat, ids, gates, e0, n_local, capacity):
+    """Sort-based local dispatch. x_flat: (T, d); ids/gates: (T, k).
+
+    Returns (buffer (n_local, C, d), slot (T*k,), keep (T*k,)).
+    """
+    T, k = ids.shape
+    d = x_flat.shape[-1]
+    flat_e = ids.reshape(-1)
+    local = (flat_e >= e0) & (flat_e < e0 + n_local)
+    le = jnp.where(local, flat_e - e0, n_local)          # n_local = drop bucket
+    order = jnp.argsort(le, stable=True)
+    le_s = le[order]
+    # rank within each expert's run of the sorted array
+    first = jnp.searchsorted(le_s, le_s, side="left")
+    rank = jnp.arange(T * k) - first
+    keep_s = (rank < capacity) & (le_s < n_local)
+    slot_s = jnp.where(keep_s, le_s * capacity + rank, n_local * capacity)
+    tok_s = order // k
+    buf = jnp.zeros((n_local * capacity + 1, d), x_flat.dtype)
+    buf = buf.at[slot_s].set(x_flat[tok_s], mode="drop")
+    # un-sort slot/keep back to (T*k,) order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * k))
+    return buf[:-1].reshape(n_local, capacity, d), slot_s[inv], keep_s[inv]
+
+
+def _moe_chunk(x_flat, router_w, w1, w3, w2, cfg: MoEConfig, e0, n_local):
+    """Route + compute one flat token chunk: (Tc, d) -> (Tc, d)."""
+    Tc, d = x_flat.shape
+    logits = x_flat.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(Tc * cfg.top_k * cfg.capacity_factor
+                          / cfg.n_experts))
+    buf, slot, keep = _dispatch_local(x_flat, ids, gates, e0, n_local,
+                                      capacity)
+
+    h = ffn_act(jnp.einsum("ecd,edf->ecf", buf, w1), cfg.act_kind,
+                cfg.act_levels) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    out = jnp.einsum("ecf,efd->ecd", h, w2)              # (n_local, C, d)
+
+    out_flat = jnp.concatenate(
+        [out.reshape(n_local * capacity, d),
+         jnp.zeros((1, d), out.dtype)], axis=0)
+    y = out_flat[slot]                                   # (Tc*k, d)
+    w = (gates.reshape(-1) * keep).astype(y.dtype)
+    tok = jnp.arange(Tc * cfg.top_k) // cfg.top_k
+    return jax.ops.segment_sum(y * w[:, None], tok, num_segments=Tc)
+
+
+def _moe_math(x, router_w, w1, w3, w2, cfg: MoEConfig, e0, n_local, ep):
+    """Core routed computation on local tokens x: (B_l, L, d).
+
+    With ``token_chunks > 1`` the dispatch/compute/combine runs over
+    sequential token chunks (lax.scan): peak dispatch-buffer and gather
+    memory shrink by the chunk count at identical FLOPs (capacity becomes
+    per-chunk — slightly stricter balance requirement, recorded in DESIGN).
+    """
+    del ep
+    Bl, L, d = x.shape
+    T = Bl * L
+    x_flat = x.reshape(T, d)
+    nc = cfg.token_chunks if cfg.token_chunks > 1 and T % cfg.token_chunks == 0 \
+        else 1
+    if nc == 1:
+        y = _moe_chunk(x_flat, router_w, w1, w3, w2, cfg, e0, n_local)
+        return y.reshape(Bl, L, d), None
+
+    def body(_, xc):
+        return None, _moe_chunk(xc, router_w, w1, w3, w2, cfg, e0, n_local)
+
+    _, ys = jax.lax.scan(body, None, x_flat.reshape(nc, T // nc, d))
+    return ys.reshape(Bl, L, d), None
+
+
+def moe_apply(p, x, cfg: MoEConfig, mesh=None):
+    """Routed FFN.  x: (B, L, d) → (B, L, d).
+
+    mesh None → single-device math (tests/smoke).  With a mesh, runs under
+    shard_map with the EP/TP regime picked from the mesh's model-axis size.
+    """
+    if mesh is None:
+        y, _ = _moe_math(x, p["router"]["w"], p["w1"].astype(x.dtype),
+                         p["w3"].astype(x.dtype), p["w2"].astype(x.dtype),
+                         cfg, 0, cfg.n_experts, ep=False)
+        return y
+
+    msize = mesh.shape[cfg.model_axis]
+    ep = cfg.ep_size(msize) > 1
+    specs = moe_param_specs(cfg, msize)
+    dp = cfg.dp_axes
+
+    def fn(x_l, wr, w1, w3, w2):
+        if cfg.fsdp:
+            w1 = jax.lax.all_gather(w1, "data", axis=1, tiled=True)
+            w3 = jax.lax.all_gather(w3, "data", axis=1, tiled=True)
+            w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
+        if ep:
+            m = jax.lax.axis_index(cfg.model_axis)
+            n_local = cfg.n_experts // msize
+            e0 = m * n_local
+        else:
+            n_local, e0 = cfg.n_experts, 0
+        y, _ = _moe_math(x_l, wr, w1.astype(x_l.dtype), w3.astype(x_l.dtype),
+                         w2.astype(x_l.dtype), cfg, e0, n_local, ep)
+        return jax.lax.psum(y, cfg.model_axis)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(dp, None, None), specs["router"]["w"], specs["w1"],
+                  specs["w3"], specs["w2"]),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(x, p["router"]["w"], p["w1"], p["w3"], p["w2"])

@@ -1,0 +1,157 @@
+"""The paper's own experiment networks (§3): MLP, auto-encoders, AlexNet-ish.
+
+These are the nets the paper's tables/figures are produced on; our
+benchmarks retrain scaled versions (CPU container) with the same
+quantization hooks: ``act_levels`` (|A|) at every nonlinearity and external
+periodic weight clustering (|W|) via ``repro.core.quantizer``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, ffn_act
+
+__all__ = ["mlp_init", "mlp_apply", "fc_autoencoder_init",
+           "fc_autoencoder_apply", "conv_autoencoder_init",
+           "conv_autoencoder_apply", "alexnet_init", "alexnet_apply",
+           "mlp_layer_sizes"]
+
+
+# --- MNIST-style MLP (paper §3.1) ---------------------------------------------
+
+def mlp_layer_sizes(d_in: int, hidden: list[int], d_out: int):
+    dims = [d_in] + list(hidden) + [d_out]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def mlp_init(key, d_in: int, hidden: list[int], d_out: int):
+    sizes = mlp_layer_sizes(d_in, hidden, d_out)
+    keys = jax.random.split(key, len(sizes))
+    return {f"layer{i}": dense_init(k, a, b, bias=True, std=(a ** -0.5))
+            for i, (k, (a, b)) in enumerate(zip(keys, sizes))}
+
+
+def mlp_apply(p, x, act_kind: str = "tanh", act_levels: int = 0):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"layer{i}"], x)
+        if i < n - 1:
+            x = ffn_act(x, act_kind, act_levels)
+    return x
+
+
+# --- FC auto-encoder (paper §3.2: 7 hidden layers, 50n..20n..50n) -------------
+
+def fc_autoencoder_init(key, d_in: int, n: float = 1.0):
+    hidden = [int(50 * n), int(50 * n), int(40 * n), int(20 * n),
+              int(40 * n), int(50 * n), int(50 * n)]
+    return mlp_init(key, d_in, hidden, d_in)
+
+
+def fc_autoencoder_apply(p, x, act_kind: str = "tanh", act_levels: int = 0):
+    return mlp_apply(p, x, act_kind, act_levels)
+
+
+# --- Conv auto-encoder (paper §3.2) -------------------------------------------
+
+def _conv_init(key, k: int, cin: int, cout: int):
+    std = (2.0 / (k * k * cin)) ** 0.5      # He init (ReLU-family nets)
+    return {"w": jax.random.normal(key, (k, k, cin, cout)) * std,
+            "b": jnp.zeros((cout,))}
+
+
+def _conv(p, x, stride: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _conv_t(p, x, stride: int = 2):
+    y = jax.lax.conv_transpose(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def conv_autoencoder_init(key, n: float = 1.0, c_in: int = 3):
+    """Paper: 4 conv 2×2 (50n,50n,40n,20n) + 3 conv-T (40n,50n,50n) +
+    two 1×1 convs (20, c_in).  Strides (2,2,2,1)/(2,2,2) keep in/out sizes
+    equal (the paper omits strides; recorded in DESIGN.md)."""
+    d = [int(50 * n), int(50 * n), int(40 * n), int(20 * n)]
+    dt = [int(40 * n), int(50 * n), int(50 * n)]
+    ks = jax.random.split(key, 9)
+    p = {}
+    cin = c_in
+    for i, c in enumerate(d):
+        p[f"enc{i}"] = _conv_init(ks[i], 2, cin, c)
+        cin = c
+    for i, c in enumerate(dt):
+        p[f"dec{i}"] = _conv_init(ks[4 + i], 2, cin, c)
+        cin = c
+    p["post0"] = _conv_init(ks[7], 1, cin, 20)
+    p["post1"] = _conv_init(ks[8], 1, 20, c_in)
+    return p
+
+
+def conv_autoencoder_apply(p, x, act_kind: str = "tanh", act_levels: int = 0):
+    a = lambda v: ffn_act(v, act_kind, act_levels)
+    h = x
+    for i, s in enumerate((2, 2, 2, 1)):
+        h = a(_conv(p[f"enc{i}"], h, s))
+    for i in range(3):
+        h = a(_conv_t(p[f"dec{i}"], h, 2))
+    h = a(_conv(p["post0"], h, 1))
+    return _conv(p["post1"], h, 1)
+
+
+# --- AlexNet-style classifier (paper §3.3), width-scalable --------------------
+
+def alexnet_init(key, n_classes: int = 1000, width: float = 1.0,
+                 c_in: int = 3, img: int = 64):
+    w = lambda c: max(8, int(c * width))
+    ks = jax.random.split(key, 8)
+    p = {
+        "c1": _conv_init(ks[0], 5, c_in, w(96)),
+        "c2": _conv_init(ks[1], 5, w(96), w(256)),
+        "c3": _conv_init(ks[2], 3, w(256), w(384)),
+        "c4": _conv_init(ks[3], 3, w(384), w(384)),
+        "c5": _conv_init(ks[4], 3, w(384), w(256)),
+    }
+    spatial = img // 16  # c1 stride2 + three pools
+    feat = w(256) * spatial * spatial
+    he = lambda fan: (2.0 / fan) ** 0.5
+    p["f6"] = dense_init(ks[5], feat, w(1024), bias=True, std=he(feat))
+    p["f7"] = dense_init(ks[6], w(1024), w(1024), bias=True, std=he(w(1024)))
+    p["f8"] = dense_init(ks[7], w(1024), n_classes, bias=True,
+                         std=he(w(1024)))
+    return p
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def alexnet_apply(p, x, act_kind: str = "relu6", act_levels: int = 0,
+                  dropout_rate: float = 0.0, key=None):
+    a = lambda v: ffn_act(v, act_kind, act_levels)
+    h = a(_conv(p["c1"], x, 2))
+    h = _maxpool(h)
+    h = a(_conv(p["c2"], h, 1))
+    h = _maxpool(h)
+    h = a(_conv(p["c3"], h, 1))
+    h = a(_conv(p["c4"], h, 1))
+    h = a(_conv(p["c5"], h, 1))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = a(dense(p["f6"], h))
+    if dropout_rate and key is not None:
+        h = h * jax.random.bernoulli(key, 1 - dropout_rate, h.shape) / (1 - dropout_rate)
+    h = a(dense(p["f7"], h))
+    if dropout_rate and key is not None:
+        key2 = jax.random.fold_in(key, 1)
+        h = h * jax.random.bernoulli(key2, 1 - dropout_rate, h.shape) / (1 - dropout_rate)
+    return dense(p["f8"], h)

@@ -1,0 +1,210 @@
+"""RWKV-6 ("Finch") — attention-free time-mix with data-dependent decay.
+
+Per head (dim P), state S ∈ R^{P×P}:
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t
+    y_t = r_t · (S_{t-1} + diag(u) · k_t ⊗ v_t)
+with w_t = exp(−exp(w0 + LoRA(x_t))) the data-dependent decay (the Finch
+novelty vs RWKV-5's static decay).  Token-shift mixes x_t with x_{t−1}.
+
+Training/prefill runs a chunked scan: within a chunk of Q tokens the
+contributions are computed with masked cumulative-decay einsums (quadratic
+in Q, MXU-friendly); the state is carried across chunks — same layout as
+our SSD kernel, so both SSM families share compile characteristics.
+Decode is the O(1) recurrence (``rwkv_decode_step``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dense, dense_init, ffn_act, rms_norm,
+                                 rms_norm_init)
+
+__all__ = ["RWKVConfig", "rwkv_tm_init", "rwkv_tm_apply", "rwkv_tm_decode",
+           "rwkv_cm_init", "rwkv_cm_apply", "rwkv_cm_decode",
+           "init_rwkv_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0                 # channel-mix hidden; 0 → 3.5·d
+    lora_rank: int = 32
+    chunk: int = 128
+    act_kind: str = "relu"        # channel-mix uses squared relu
+    act_levels: int = 0
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or int(3.5 * self.d_model)
+
+
+def rwkv_tm_init(key, cfg: RWKVConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        "w0": (jnp.zeros((d,)) + jnp.log(jnp.e - 1)).astype(dtype),  # decay base
+        "w_lora_a": dense_init(ks[6], d, cfg.lora_rank, dtype),
+        "w_lora_b": dense_init(ks[7], cfg.lora_rank, d, dtype, std=0.01),
+        "u": (jnp.ones((d,)) * 0.5).astype(dtype),                   # bonus
+        "ln_out": rms_norm_init(d, dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x_{t-1} stream. prev: (B, 1, D) last token of previous segment."""
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def _tm_projections(p, x, x_prev):
+    mix = p["mix"].astype(x.dtype)
+    xs = _token_shift(x, x_prev)
+    def lerp(i):
+        return x * mix[i][None, None, :] + xs * (1.0 - mix[i][None, None, :])
+    r = dense(p["wr"], lerp(0))
+    k = dense(p["wk"], lerp(1))
+    v = dense(p["wv"], lerp(2))
+    g = dense(p["wg"], lerp(3))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    dd = dense(p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], lerp(4))))
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)[None, None, :]
+                             + dd.astype(jnp.float32), -8.0, 4.0))
+    return r, k, v, g, logw             # logw = log decay ∈ (−∞, 0)
+
+
+def _wkv_scan(r, k, v, u, logw, cfg: RWKVConfig, s0=None):
+    """Exact WKV recurrence: outer scan over chunks (state carried), inner
+    rematerialized scan over the Q tokens inside a chunk.
+
+    Per-channel data-dependent decay makes the factored "chunked attention"
+    form numerically unsafe (exp(±Σ log w) spans hundreds of nats), so we
+    keep the recurrence exact and bound training memory by checkpointing at
+    chunk granularity: backward recomputes the Q inner steps per chunk.
+
+    r,k,v,logw: (B, L, H, P); u: (H, P).  Returns (y, s_last (B,H,P,P)).
+    """
+    B, L, H, P = r.shape
+    Q = min(cfg.chunk, L)
+    nC = L // Q
+    assert nC * Q == L, (L, Q)
+
+    def chunk(s, inp):
+        rc, kc, vc, lwc = inp                    # (Q, B, H, P)
+
+        def step(s, t_in):
+            rt, kt, vt, lwt = t_in               # (B, H, P); bf16 streams
+            rt = rt.astype(jnp.float32)
+            kt = kt.astype(jnp.float32)
+            vt = vt.astype(jnp.float32)
+            # y_t = r · (S_{t-1} + diag(u) k ⊗ v)
+            y = jnp.einsum("bhp,bhpq->bhq", rt, s) + \
+                jnp.einsum("bhp,hp,bhp,bhq->bhq", rt, u, kt, vt)
+            s = s * jnp.exp(lwt.astype(jnp.float32))[..., None] + \
+                jnp.einsum("bhp,bhq->bhpq", kt, vt)
+            # bf16 per-step outputs halve the stacked-ys HBM traffic; the
+            # f32 state carry keeps the recurrence exact
+            return s, y.astype(jnp.bfloat16)
+
+        return jax.lax.scan(step, s, (rc, kc, vc, lwc))
+
+    chunk = jax.checkpoint(chunk)
+    to_chunks = lambda x: x.reshape(B, nC, Q, H, P).transpose(1, 2, 0, 3, 4)
+    s_init = (jnp.zeros((B, H, P, P), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+    s_last, y = jax.lax.scan(chunk, s_init,
+                             (to_chunks(r), to_chunks(k), to_chunks(v),
+                              to_chunks(logw)))
+    # y: (nC, Q, B, H, P) -> (B, L, H, P)
+    return y.transpose(2, 0, 1, 3, 4).reshape(B, L, H, P), s_last
+
+
+def rwkv_tm_apply(p, x, cfg: RWKVConfig, state=None):
+    """Time-mix block (train/prefill).  x: (B, L, D)."""
+    B, L, D = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    x_prev = jnp.zeros((B, 1, D), x.dtype) if state is None else state["x_tm"]
+    r, k, v, g, logw = _tm_projections(p, x, x_prev)
+    # bf16 streams into the scan (per-step math upcasts; see _wkv_scan)
+    rh = r.reshape(B, L, H, P).astype(jnp.bfloat16)
+    kh = k.reshape(B, L, H, P).astype(jnp.bfloat16)
+    vh = v.reshape(B, L, H, P).astype(jnp.bfloat16)
+    lw = logw.reshape(B, L, H, P)
+    u = p["u"].astype(jnp.float32).reshape(H, P)
+    s0 = None if state is None else state["s"]
+    # decay stays f32: bf16's ~8-bit mantissa would quantize exp(logw)≈1−ε
+    # and compound over thousands of steps
+    y, s_last = _wkv_scan(rh, kh, vh, u, lw.astype(jnp.float32), cfg, s0)
+    y = rms_norm(p["ln_out"], y.reshape(B, L, D).astype(x.dtype))
+    y = y * ffn_act(g, "silu", cfg.act_levels)
+    out = dense(p["wo"], y)
+    new_state = {"s": s_last, "x_tm": x[:, -1:, :]}
+    return out, new_state
+
+
+def rwkv_tm_decode(p, x, cfg: RWKVConfig, state):
+    """O(1) decode step.  x: (B, 1, D)."""
+    B, _, D = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    r, k, v, g, logw = _tm_projections(p, x, state["x_tm"])
+    rh = r.reshape(B, H, P).astype(jnp.float32)
+    kh = k.reshape(B, H, P).astype(jnp.float32)
+    vh = v.reshape(B, H, P).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, P))
+    u = p["u"].astype(jnp.float32).reshape(H, P)
+    s = state["s"].astype(jnp.float32)
+    y = jnp.einsum("bhp,bhpq->bhq", rh, s) + \
+        jnp.einsum("bhp,hp,bhp,bhq->bhq", rh, u, kh, vh)
+    s_new = s * w[:, :, :, None] + jnp.einsum("bhp,bhq->bhpq", kh, vh)
+    y = rms_norm(p["ln_out"], y.reshape(B, 1, D).astype(x.dtype))
+    y = y * ffn_act(g, "silu", cfg.act_levels)
+    return dense(p["wo"], y), {"s": s_new, "x_tm": x}
+
+
+def rwkv_cm_init(key, cfg: RWKVConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"mix": (jax.random.uniform(k1, (2, cfg.d_model)) * 0.5 + 0.25).astype(dtype),
+            "wk": dense_init(k2, cfg.d_model, cfg.ff, dtype),
+            "wv": dense_init(k3, cfg.ff, cfg.d_model, dtype)}
+
+
+def _cm(p, x, xs, cfg: RWKVConfig):
+    mix = p["mix"].astype(x.dtype)
+    xk = x * mix[0][None, None] + xs * (1 - mix[0][None, None])
+    h = dense(p["wk"], xk)
+    h = ffn_act(jax.nn.relu(h) if cfg.act_levels == 0 else h,
+                "relu", cfg.act_levels)
+    h = h * h  # squared relu (rwkv)
+    return dense(p["wv"], h)
+
+
+def rwkv_cm_apply(p, x, cfg: RWKVConfig, state=None):
+    B, L, D = x.shape
+    x_prev = jnp.zeros((B, 1, D), x.dtype) if state is None else state["x_cm"]
+    out = _cm(p, x, _token_shift(x, x_prev), cfg)
+    return out, {"x_cm": x[:, -1:, :]}
+
+
+def rwkv_cm_decode(p, x, cfg: RWKVConfig, state):
+    out = _cm(p, x, state["x_cm"], cfg)
+    return out, {"x_cm": x}
+
+
+def init_rwkv_cache(cfg: RWKVConfig, batch: int, dtype=jnp.float32):
+    H, P = cfg.n_heads, cfg.head_dim
+    return {"s": jnp.zeros((batch, H, P, P), dtype),
+            "x_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "x_cm": jnp.zeros((batch, 1, cfg.d_model), dtype)}

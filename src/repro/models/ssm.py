@@ -1,0 +1,205 @@
+"""Mamba2 (SSD) block — chunked state-space dual form, TPU-friendly.
+
+Recurrence per head (state N, head dim P):
+    h_t = exp(A·Δ_t) · h_{t-1} + Δ_t · B_t ⊗ x_t        h ∈ R^{N×P}
+    y_t = C_t · h_t + D · x_t
+
+Chunked evaluation (chunk Q): intra-chunk term is a masked quadratic
+"attention" with decay weights; inter-chunk states pass through a short
+lax.scan of length L/Q.  This keeps compute in MXU-sized einsums and the
+sequential dependency O(L/Q) — the standard SSD layout, matching how the
+paper's technique needs bounded activations only at the gate/output sites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init, ffn_act
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "ssm_decode_step",
+           "init_ssm_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 64        # N
+    head_dim: int = 64       # P
+    expand: int = 2
+    conv_width: int = 4
+    n_groups: int = 1        # B/C groups (GVA-style)
+    chunk: int = 128
+    act_kind: str = "silu"
+    act_levels: int = 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    din = cfg.d_inner
+    G, N, H = cfg.n_groups, cfg.d_state, cfg.n_heads
+    # fused in_proj: [z gate | x | B | C | dt]
+    proj_out = 2 * din + 2 * G * N + H
+    p = {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dtype),
+        "out_proj": dense_init(ks[1], din, cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, din + 2 * G * N))
+                   * 0.2).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": rms_norm_init(din, dtype),
+    }
+    return p
+
+
+def _split(cfg: SSMConfig, zxbcdt):
+    din, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + G * N, 2 * din + 2 * G * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width K.  x: (B, L, C); w: (K, C).
+    state: (B, K-1, C) tail of previous tokens (decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return out, new_state
+
+
+def _ssd_chunked(xh, dt, A, B, C, cfg: SSMConfig, h0=None):
+    """Chunked SSD scan.
+
+    xh: (Bt, L, H, P); dt: (Bt, L, H) (post-softplus); A: (H,) negative;
+    B, C: (Bt, L, G, N).  Returns (y (Bt,L,H,P), h_last (Bt,H,N,P)).
+    """
+    Bt, L, H, P = xh.shape
+    G, N, Q = cfg.n_groups, cfg.d_state, min(cfg.chunk, L)
+    nC = L // Q
+    assert nC * Q == L, (L, Q)
+    rep = H // G
+
+    xc = xh.reshape(Bt, nC, Q, H, P)
+    dtc = dt.reshape(Bt, nC, Q, H)
+    Bc = B.reshape(Bt, nC, Q, G, N)
+    Cc = C.reshape(Bt, nC, Q, G, N)
+
+    # per-step log decay g = A*dt  (A < 0)
+    g = dtc * A[None, None, None, :]                  # (Bt, nC, Q, H)
+    gcum = jnp.cumsum(g, axis=2)                      # within-chunk cumsum
+    gtot = gcum[:, :, -1, :]                          # (Bt, nC, H)
+
+    # intra-chunk: y_i += Σ_{j<=i} C_i·B_j exp(gcum_i − gcum_j) dt_j x_j
+    # NB: mask the *exponent* (upper triangle would overflow exp and leak
+    # NaN through where()'s backward), then exp is safe everywhere.
+    Lmat = gcum[:, :, :, None, :] - gcum[:, :, None, :, :]       # (Bt,nC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, Lmat, -jnp.inf))
+    decay = jnp.where(mask, decay, 0.0)
+    cb = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)                # (Bt,nC,Q,Q,G)
+    cb = jnp.repeat(cb, rep, axis=-1)                            # groups → heads
+    w_ij = cb * decay                                            # (Bt,nC,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w_ij, dtc, xc)
+
+    # chunk states: S_c = Σ_j exp(gtot − gcum_j) dt_j B_j ⊗ x_j   (Bt,nC,H,N,P)
+    sdec = jnp.exp(gtot[:, :, None, :] - gcum)                   # (Bt,nC,Q,H)
+    Brep = jnp.repeat(Bc, rep, axis=-2)                          # (Bt,nC,Q,H,N)
+    S = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", sdec * dtc, Brep, xc)
+
+    # inter-chunk scan: h_c = exp(gtot_c)·h_{c-1} + S_c
+    def body(h, inp):
+        S_c, gt_c = inp
+        h_new = h * jnp.exp(gt_c)[:, :, None, None] + S_c
+        return h_new, h
+
+    h_init = (jnp.zeros((Bt, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        body, h_init,
+        (S.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         gtot.transpose(1, 0, 2).astype(jnp.float32)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (Bt,nC,H,N,P)
+
+    # inter-chunk contribution: y_i += C_i · exp(gcum_i) · h_{c-1}
+    Crep = jnp.repeat(Cc, rep, axis=-2)                          # (Bt,nC,Q,H,N)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Crep * jnp.exp(gcum)[..., None],
+                         h_prev.astype(Crep.dtype))
+    y = (y_intra + y_inter).reshape(Bt, L, H, P)
+    return y, h_last
+
+
+def ssm_apply(p, x, cfg: SSMConfig):
+    """Full Mamba2 block (train/prefill).  x: (B, L, D) → (B, L, D)."""
+    Bt, L, _ = x.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z, xi, Bm, Cm, dt = _split(cfg, dense(p["in_proj"], x))
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"])
+    conv_out = ffn_act(conv_out, cfg.act_kind, cfg.act_levels)
+    xi, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = _ssd_chunked(xi.reshape(Bt, L, H, P).astype(jnp.float32), dt, A,
+                        Bm.reshape(Bt, L, G, N).astype(jnp.float32),
+                        Cm.reshape(Bt, L, G, N).astype(jnp.float32), cfg)
+    y = y + xi.reshape(Bt, L, H, P).astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bt, L, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * ffn_act(z, cfg.act_kind, cfg.act_levels))
+    return dense(p["out_proj"], y)
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.n_groups * cfg.d_state), dtype),
+    }
+
+
+def ssm_decode_step(p, x, cfg: SSMConfig, cache):
+    """Single-token decode.  x: (B, 1, D) → (out (B,1,D), new cache).
+
+    O(1) in context length — the whole point of running the 500k-context
+    cell on SSM members of the pool.
+    """
+    Bt = x.shape[0]
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z, xi, Bm, Cm, dt = _split(cfg, dense(p["in_proj"], x))
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], cache["conv"])
+    conv_out = ffn_act(conv_out, cfg.act_kind, cfg.act_levels)
+    xi, Bm, Cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(Bt, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.reshape(Bt, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(Bt, G, N), H // G, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                               # (B, H)
+    h = cache["h"].astype(jnp.float32) * decay[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bt, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * ffn_act(z, cfg.act_kind, cfg.act_levels))
+    return dense(p["out_proj"], y), {"h": h.astype(cache["h"].dtype),
+                                     "conv": conv_state.astype(cache["conv"].dtype)}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import OptConfig, init_opt_state, apply_updates
+from repro.optim.schedules import warmup_cosine, step_decay, constant

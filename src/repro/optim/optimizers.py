@@ -1,0 +1,134 @@
+"""Optimizers over parameter pytrees (the paper trains with ADAM and
+RMSProp; SGD(+momentum) included for the §2.1 claim that quantized
+activations train under "all of the currently popular training algorithms").
+
+Pure functions; state is a pytree so it checkpoints/shards like params.
+Moment dtype is configurable (bf16 moments for the ≥100B archs — see
+DESIGN.md memory budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # sgd | momentum | rmsprop | adam | adamw
+    lr: float = 1e-3               # peak lr (schedules multiply this)
+    schedule: Callable | None = None   # step -> multiplier
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    rms_decay: float = 0.9
+    grad_clip: float = 1.0         # global-norm clip; 0 disables
+    moments_dtype: str = "float32"
+
+    def lr_at(self, step):
+        mult = self.schedule(step) if self.schedule is not None else 1.0
+        return self.lr * mult
+
+
+def _mdt(cfg):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moments_dtype]
+
+
+def init_opt_state(params, cfg: OptConfig):
+    dt = _mdt(cfg)
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    if cfg.name in ("adam", "adamw"):
+        return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "rmsprop":
+        return {"v": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "momentum":
+        return {"m": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "sgd":
+        return {"count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One optimizer step.  Returns (params, state, metrics)."""
+    step = state["count"]
+    lr = cfg.lr_at(step)
+    gnorm = global_norm(grads)
+    if cfg.grad_clip:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    dt = _mdt(cfg)
+
+    def upd(p, g, m=None, v=None):
+        g32 = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        new_m = new_v = None
+        if cfg.name in ("adam", "adamw"):
+            m32 = m.astype(jnp.float32)
+            v32 = v.astype(jnp.float32)
+            m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+            v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+            mh = m32 / (1 - cfg.b1 ** (step.astype(jnp.float32) + 1))
+            vh = v32 / (1 - cfg.b2 ** (step.astype(jnp.float32) + 1))
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.name == "adamw" and cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p32
+            new_m, new_v = m32.astype(dt), v32.astype(dt)
+        elif cfg.name == "rmsprop":
+            v32 = v.astype(jnp.float32)
+            v32 = cfg.rms_decay * v32 + (1 - cfg.rms_decay) * g32 * g32
+            delta = g32 / (jnp.sqrt(v32) + cfg.eps)
+            new_v = v32.astype(dt)
+        elif cfg.name == "momentum":
+            m32 = m.astype(jnp.float32)
+            m32 = cfg.momentum * m32 + g32
+            delta = m32
+            new_m = m32.astype(dt)
+        else:  # sgd
+            delta = g32
+        return (p32 - lr * delta).astype(p.dtype), new_m, new_v
+
+    if cfg.name in ("adam", "adamw"):
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": m, "v": v, "count": step + 1}
+    elif cfg.name == "rmsprop":
+        out = jax.tree.map(lambda p, g, v: upd(p, g, v=v), params, grads,
+                           state["v"])
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"v": v, "count": step + 1}
+    elif cfg.name == "momentum":
+        out = jax.tree.map(lambda p, g, m: upd(p, g, m=m), params, grads,
+                           state["m"])
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": m, "count": step + 1}
+    else:
+        out = jax.tree.map(lambda p, g: upd(p, g), params, grads)
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"count": step + 1}
+
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,29 @@
+"""LR schedules: step -> multiplier (composed with OptConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_cosine", "step_decay"]
+
+
+def constant():
+    return lambda step: 1.0
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def step_decay(every: int, rate: float = 0.5):
+    """The paper's AlexNet 'stepwise decaying learning rate'."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return rate ** jnp.floor(s / every)
+    return f

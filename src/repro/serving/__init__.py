@@ -1,0 +1,2 @@
+from repro.serving.compress import to_codebook_params, index_dtype_for
+from repro.serving.engine import ServeEngine

@@ -1,0 +1,92 @@
+"""Paper §2.1: quantized activations + underlying-derivative backward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.activations import (ACT_RANGES, ActQuantConfig, act_apply,
+                                    act_index, act_input_boundaries,
+                                    act_levels, quantize_input)
+
+KINDS = sorted(ACT_RANGES)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("levels", [2, 8, 32, 256])
+def test_outputs_are_levels(kind, levels):
+    cfg = ActQuantConfig(kind, levels)
+    x = jnp.linspace(-6, 6, 4001)
+    y = np.asarray(act_apply(cfg, x))
+    lv = np.asarray(act_levels(cfg))
+    # every output must be (numerically) one of the |A| levels
+    d = np.min(np.abs(y[:, None] - lv[None, :]), axis=1)
+    assert d.max() < 1e-5
+    assert len(np.unique(np.round(y, 5))) <= levels
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_quantization_error_bounded(kind):
+    cfg = ActQuantConfig(kind, 16)
+    x = jnp.linspace(-8, 8, 2001)
+    y = np.asarray(act_apply(cfg, x))
+    base = {"tanh": np.tanh, "relu6": lambda v: np.clip(v, 0, 6),
+            "sigmoid": lambda v: 1 / (1 + np.exp(-v)),
+            "rtanh": lambda v: np.maximum(np.tanh(v), 0)}[kind](np.asarray(x))
+    assert np.max(np.abs(y - base)) <= cfg.step / 2 + 1e-6
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_backward_is_underlying_derivative(kind):
+    """Paper: 'ignore the quantization ... compute the derivatives of the
+    underlying function'."""
+    cfg = ActQuantConfig(kind, 8)
+    x = jnp.linspace(-3, 3, 101)
+    g = jax.vmap(jax.grad(lambda v: act_apply(cfg, v)))(x)
+    g_base = jax.vmap(jax.grad(
+        lambda v: act_apply(ActQuantConfig(kind, 0), v)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_base), atol=1e-6)
+
+
+def test_plateaus_smallest_where_slope_largest():
+    """Fig. 1: input-space bins are densest where |f'| is largest."""
+    b = act_input_boundaries(ActQuantConfig("tanh", 64))
+    widths = np.diff(b)
+    mid = len(widths) // 2
+    assert widths[mid] < widths[0]
+    assert widths[mid] < widths[-1]
+
+
+def test_act_index_matches_value():
+    cfg = ActQuantConfig("tanh", 32)
+    x = jnp.linspace(-4, 4, 999)
+    idx = np.asarray(act_index(cfg, x))
+    lv = np.asarray(act_levels(cfg))
+    np.testing.assert_allclose(lv[idx], np.asarray(act_apply(cfg, x)),
+                               atol=1e-6)
+
+
+def test_unbounded_kind_rejected():
+    with pytest.raises(ValueError):
+        ActQuantConfig("relu", 8)       # paper swaps ReLU -> ReLU6 (§3.3)
+    ActQuantConfig("relu", 0)           # continuous is fine
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-50, 50), st.sampled_from([2, 5, 16, 33]),
+       st.sampled_from(KINDS))
+def test_idempotent(x0, levels, kind):
+    cfg = ActQuantConfig(kind, levels)
+    y1 = float(act_apply(cfg, jnp.asarray(x0)))
+    # quantized values are fixed points of value-quantization
+    lo, _ = cfg.out_range
+    q = round((y1 - lo) / cfg.step)
+    assert abs(y1 - (lo + q * cfg.step)) < 1e-5
+
+
+def test_quantize_input_range():
+    x = jnp.linspace(-2, 2, 100)
+    q = np.asarray(quantize_input(x, 32, -1.0, 1.0))
+    assert q.min() >= -1.0 - 1e-6 and q.max() <= 1.0 + 1e-6
+    assert len(np.unique(np.round(q, 6))) <= 32

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 4), (5, 37, 9), (128, 128, 128),
+                                   (130, 200, 260), (1, 512, 7)])
+@pytest.mark.parametrize("idt", [jnp.int8, jnp.int16, jnp.int32])
+@pytest.mark.parametrize("xdt", [jnp.float32, jnp.bfloat16])
+def test_codebook_matmul_sweep(m, k, n, idt, xdt):
+    W = min(int(jnp.iinfo(idt).max), 1000)
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k), xdt)
+    wi = jax.random.randint(ks[1], (k, n), 0, W).astype(idt)
+    book = jax.random.normal(ks[2], (W,), jnp.float32)
+    out = ops.codebook_matmul(x, wi, book)
+    exp = ref.codebook_matmul_ref(x, wi, book)
+    tol = 2e-2 if xdt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol * k)
+
+
+def test_codebook_matmul_grads():
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (8, 16))
+    wi = jax.random.randint(ks[1], (16, 12), 0, 32)
+    book = jax.random.normal(ks[2], (32,))
+    g = jax.grad(lambda x, b: jnp.sum(ops.codebook_matmul(x, wi, b) ** 2),
+                 argnums=(0, 1))(x, book)
+    gr = jax.grad(lambda x, b: jnp.sum(ref.codebook_matmul_ref(x, wi, b) ** 2),
+                  argnums=(0, 1))(x, book)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,R,C", [(4, 10, 6, 17, 33),
+                                       (129, 257, 131, 33, 1001),
+                                       (8, 128, 128, 9, 257)])
+def test_lut_matmul_bit_exact(m, k, n, R, C):
+    a = jax.random.randint(KEY, (m, k), 0, R)
+    w = jax.random.randint(jax.random.fold_in(KEY, 1), (k, n), 0, C)
+    t = jax.random.randint(jax.random.fold_in(KEY, 2), (R, C), -1000, 1000)
+    np.testing.assert_array_equal(np.asarray(ops.lut_matmul(a, w, t)),
+                                  np.asarray(ref.lut_matmul_ref(a, w, t)))
+
+
+@pytest.mark.parametrize("kind", ["tanh", "relu6", "sigmoid", "rtanh"])
+@pytest.mark.parametrize("levels", [2, 16, 256])
+@pytest.mark.parametrize("shape", [(7,), (3, 5), (2, 130, 9)])
+def test_act_quant_sweep(kind, levels, shape):
+    x = jax.random.normal(KEY, shape) * 3
+    y = ops.act_quant(x, kind, levels)
+    yr = ref.act_quant_ref(x, kind, levels)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-6)
+    g = jax.grad(lambda v: jnp.sum(ops.act_quant(v, kind, levels)))(x)
+    gr = jax.grad(lambda v: jnp.sum(ref.act_quant_ref(v, kind, levels)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-5)
+
+
+@pytest.mark.parametrize("n,k", [(100, 3), (10_001, 100), (5000, 257)])
+def test_kmeans_assign_sweep(n, k):
+    v = jax.random.laplace(KEY, (n,))
+    c = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 3), (k,)))
+    idx, sums, counts = ops.kmeans_assign(v, c)
+    idr, sr, cr = ref.kmeans_assign_ref(v, c)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idr))
+    # sums differ only by f32 accumulation order (chunked matmul vs
+    # segment_sum); bound relative to the magnitude of what was summed
+    scale = np.abs(np.asarray(v)).sum() / max(len(np.asarray(c)), 1)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sr),
+                               rtol=1e-3, atol=1e-4 * scale + 1e-3)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(cr), atol=0.5)
+
+
+def test_kmeans_assign_full_lloyd_step():
+    """One Lloyd update from kernel partials == segment_sum update."""
+    v = jax.random.laplace(KEY, (20_000,)) * 0.5
+    c = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 9), (64,)))
+    _, sums, counts = ops.kmeans_assign(v, c)
+    new = np.where(np.asarray(counts) > 0,
+                   np.asarray(sums) / np.maximum(np.asarray(counts), 1), c)
+    idr, sr, cr = ref.kmeans_assign_ref(v, c)
+    exp = np.where(np.asarray(cr) > 0,
+                   np.asarray(sr) / np.maximum(np.asarray(cr), 1), c)
+    np.testing.assert_allclose(new, exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 32, 16), (32, 8, 64), (64, 64, 32)])
+def test_codebook_matmul_block_shapes(bm, bn, bk):
+    """BlockSpec tiling sweep: results must be block-shape invariant."""
+    from repro.kernels.codebook_matmul import codebook_matmul_pallas
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (70, 90))
+    wi = jax.random.randint(ks[1], (90, 50), 0, 128).astype(jnp.int16)
+    book = jax.random.normal(ks[2], (128,))
+    out = codebook_matmul_pallas(x, wi, book, bm=bm, bn=bn, bk=bk,
+                                 interpret=True)
+    exp = ref.codebook_matmul_ref(x, wi, book)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 16, 8), (16, 64, 32)])
+def test_lut_matmul_block_shapes(bm, bn, bk):
+    from repro.kernels.lut_matmul import lut_matmul_pallas
+    a = jax.random.randint(KEY, (33, 49), 0, 9)
+    w = jax.random.randint(jax.random.fold_in(KEY, 1), (49, 21), 0, 65)
+    t = jax.random.randint(jax.random.fold_in(KEY, 2), (9, 65), -500, 500)
+    out = lut_matmul_pallas(a, w, t, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.lut_matmul_ref(a, w, t)))
+
+
+def test_kmeans_assign_block_sizes():
+    from repro.kernels.kmeans1d import kmeans_assign_pallas
+    v = jax.random.laplace(KEY, (3000,))
+    c = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 7), (65,)))
+    ref_idx, ref_s, ref_c = ref.kmeans_assign_ref(v, c)
+    for bv in (256, 1024, 4096):
+        idx, s, cnt = kmeans_assign_pallas(v, c, bv=bv, interpret=True)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s),
+                                   rtol=1e-3, atol=1e-2)

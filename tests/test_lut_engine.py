@@ -1,0 +1,124 @@
+"""Paper §4: the multiplication-table / activation-table integer engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.activations import ActQuantConfig, act_apply
+from repro.core import clustering, fixedpoint as fp
+from repro.core.lut import LutConfig, build_tables, choose_scale
+
+
+def _small_net(key, d_in=8, hidden=24, d_out=3):
+    ks = jax.random.split(key, 4)
+    W1 = jax.random.normal(ks[0], (d_in, hidden)) * 0.5
+    b1 = jax.random.normal(ks[1], (hidden,)) * 0.1
+    W2 = jax.random.normal(ks[2], (hidden, d_out)) * 0.5
+    b2 = jax.random.normal(ks[3], (d_out,)) * 0.1
+    return W1, b1, W2, b2
+
+
+@pytest.mark.parametrize("kind,levels", [("tanh", 16), ("tanh", 32),
+                                         ("relu6", 32), ("sigmoid", 16)])
+def test_engine_matches_float_net(kind, levels):
+    key = jax.random.PRNGKey(0)
+    act = ActQuantConfig(kind, levels)
+    W1, b1, W2, b2 = _small_net(key)
+    book = clustering.kmeans1d(
+        jnp.concatenate([W1.ravel(), b1, W2.ravel(), b2]), 128)
+    W1q, b1q, W2q, b2q = (clustering.quantize_to_centers(t, book)
+                          for t in (W1, b1, W2, b2))
+    tabs = build_tables(np.asarray(book),
+                        LutConfig(act=act, table_entries=4096), fan_in=25)
+
+    x = jax.random.uniform(jax.random.fold_in(key, 7), (16, 8),
+                           minval=-1, maxval=1)
+    if kind in ("relu6", "sigmoid"):  # inputs must lie in the level range
+        x = jnp.abs(x) * (6.0 if kind == "relu6" else 1.0)
+    xi = fp.input_to_indices(x, act)
+    lo, _ = act.out_range
+    xq = lo + xi * act.step
+
+    h = act_apply(act, xq @ W1q + b1q)
+    y_float = h @ W2q + b2q
+
+    idx = lambda t: clustering.assign_to_centers(t, book)
+    acc = fp.int_mlp_forward([(idx(W1q), idx(b1q)), (idx(W2q), idx(b2q))],
+                             xi, tabs)
+    y_int = tabs.decode(np.asarray(acc))
+    # differences come only from Δx boundary snapping; bound them loosely
+    assert np.max(np.abs(np.asarray(y_float) - y_int)) < 3 * act.step
+
+
+def test_engine_is_integer_only():
+    """The deployable tables are integers; the engine emits integers."""
+    act = ActQuantConfig("tanh", 8)
+    book = jnp.linspace(-1, 1, 32)
+    tabs = build_tables(np.asarray(book), LutConfig(act=act), fan_in=10)
+    assert tabs.mult.dtype == np.int32
+    assert tabs.act_table.dtype == np.int32
+    a = jnp.zeros((4, 10), jnp.int32)
+    w = jnp.zeros((10, 5), jnp.int32)
+    acc = fp.int_linear(a, w, None, tabs)
+    assert acc.dtype == jnp.int32
+    assert fp.acc_to_act_index(acc, tabs).dtype == jnp.int32
+
+
+def test_no_overflow_guarantee():
+    """fan_in · max|table entry| must fit the accumulator (paper §4)."""
+    act = ActQuantConfig("tanh", 32)
+    book = np.linspace(-2, 2, 1000)
+    for fan_in in (10, 1000, 100_000):
+        tabs = build_tables(np.asarray(book),
+                            LutConfig(act=act, table_entries=128),
+                            fan_in=fan_in)
+        assert fan_in * np.abs(tabs.mult).max() < 2 ** 31
+
+
+def test_choose_scale_rejects_impossible():
+    with pytest.raises(ValueError):
+        choose_scale(np.array([1e5]), 1.0, 1e-6, fan_in=10 ** 9, acc_bits=32)
+
+
+def test_bias_row_and_identity_column():
+    act = ActQuantConfig("tanh", 8)
+    book = np.linspace(-1, 1, 16)
+    tabs = build_tables(np.asarray(book), LutConfig(act=act), fan_in=4)
+    scale = 2.0 ** tabs.s / tabs.dx
+    # bias row encodes a ≡ 1.0; identity column encodes w ≡ 1.0
+    np.testing.assert_allclose(tabs.mult[tabs.bias_row, :-1],
+                               np.rint(book * scale), atol=0.51)
+    lv = np.linspace(-1, 1, 8)
+    np.testing.assert_allclose(tabs.mult[:-1, tabs.identity_col],
+                               np.rint(lv * scale), atol=0.51)
+
+
+def test_shift_equals_floor_division():
+    """acc >> s ≡ floor(x/Δx) including negatives (arithmetic shift)."""
+    act = ActQuantConfig("tanh", 8)
+    tabs = build_tables(np.linspace(-1, 1, 16), LutConfig(act=act), fan_in=4)
+    accs = jnp.asarray([-(5 << tabs.s) - 3, -1, 0, 7, (3 << tabs.s) + 1])
+    bins = jax.lax.shift_right_arithmetic(accs, tabs.s)
+    np.testing.assert_array_equal(np.asarray(bins),
+                                  np.floor(np.asarray(accs) / 2 ** tabs.s))
+
+
+def test_act_table_matches_boundaries():
+    """Table lookup reproduces exact boundary quantization to within one
+    Δx-snapped bin."""
+    act = ActQuantConfig("tanh", 6)
+    tabs = build_tables(np.linspace(-1, 1, 8),
+                        LutConfig(act=act, table_entries=1024), fan_in=4)
+    xs = np.linspace(-3, 3, 2001)
+    accs = jnp.asarray(np.rint(xs * (2.0 ** tabs.s) / tabs.dx), jnp.int32)
+    j_table = np.asarray(fp.acc_to_act_index(accs, tabs))
+    from repro.core.activations import act_index
+    j_exact = np.asarray(act_index(act, jnp.asarray(xs)))
+    # mismatches allowed only within Δx of a true boundary
+    mism = xs[j_table != j_exact]
+    from repro.core.activations import act_input_boundaries
+    b = act_input_boundaries(act)
+    if mism.size:
+        d = np.min(np.abs(mism[:, None] - b[None, :]), axis=1)
+        assert d.max() <= tabs.dx
