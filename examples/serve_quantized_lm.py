@@ -1,6 +1,13 @@
-"""Serve a codebook-compressed LM with an int8 KV cache — the TPU-side
-deployment story (DESIGN.md §2): weights live in HBM as 10-bit-class
-indices + a tiny codebook; the KV cache is int8.
+"""Serve a codebook-compressed LM through all three matmul backends — the
+deployment story of the paper's §4 on TPU-shaped hardware (DESIGN.md §2–§3):
+weights live in HBM as 10-bit-class indices + a tiny codebook; the KV cache
+is int8; decode is a jitted loop with continuous batching.
+
+The same compressed params are served three ways:
+    dense     gather the codebook, XLA dot          (baseline numerics)
+    codebook  Pallas codebook_matmul                (TPU deployment path)
+    lut       Pallas lut_matmul integer engine      (faithful §4: no
+              multiplications in the contraction)
 
     PYTHONPATH=src python examples/serve_quantized_lm.py [--arch NAME]
 """
@@ -23,6 +30,9 @@ def main():
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--lut-max-new", type=int, default=8,
+                    help="lut interprets the Pallas kernel per layer on "
+                         "CPU; keep its demo short")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced().replace(kv_quant=True,
@@ -36,16 +46,23 @@ def main():
     print("[weights]", memory_report(idx_tree, wq.num_weights, 32).row())
     cparams = to_codebook_params(params, wq, qstate, min_size=1024)
 
-    engine = ServeEngine(model, cparams, max_len=64)
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab, 8)) for _ in range(args.requests)]
-    t0 = time.time()
-    outs = engine.generate(prompts, max_new=args.max_new)
-    dt = time.time() - t0
-    n = args.requests * args.max_new
-    print(f"[serve] {n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s, CPU, "
-          f"int8 KV cache, codebook weights)")
-    print("sample continuation:", outs[0][8:])
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab, 8)]
+               for _ in range(args.requests)]
+
+    for backend in ("dense", "codebook", "lut"):
+        max_new = args.lut_max_new if backend == "lut" else args.max_new
+        engine = ServeEngine(model, cparams, max_len=64, backend=backend,
+                             max_batch=args.requests)
+        # warm with the shapes that will be timed (jit retraces on change)
+        engine.generate(prompts, max_new=max_new)
+        t0 = time.time()
+        outs = engine.generate(prompts, max_new=max_new)
+        dt = time.time() - t0
+        n = args.requests * max_new
+        print(f"[{backend:>8}] {n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s, "
+              f"int8 KV cache, codebook weights)")
+        print(f"           continuation: {outs[0][8:]}")
 
 
 if __name__ == "__main__":

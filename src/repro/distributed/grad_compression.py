@@ -69,7 +69,9 @@ def compressed_psum_tree(grads, err, axis: str):
 
     Returns (mean-reduced grads, new error state).
     """
-    n = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is post-0.4.x; psum(1) is the portable spelling
+    n = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
+         else jax.lax.psum(1, axis))
 
     def one(g, e):
         v = g.astype(jnp.float32) + e

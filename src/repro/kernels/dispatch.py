@@ -1,0 +1,181 @@
+"""Serving-time matmul backend switch: ``dense`` | ``codebook`` | ``lut``.
+
+``models.layers.dense`` consults this module whenever its params are in
+codebook-index form (``{'w_idx', 'codebook'}``, see serving/compress.py) and
+routes the contraction accordingly (DESIGN.md §2–§3):
+
+* ``dense``    — gather the codebook then a plain XLA dot (default; what
+                 training and the seed serving path always did).
+* ``codebook`` — ``kernels.codebook_matmul``: indices stay narrow in HBM,
+                 dequantize-in-VMEM gather feeding the MXU.  The TPU
+                 deployment artifact; compiled Pallas on TPU/GPU, interpret
+                 fallback elsewhere (see ``kernels.ops``).
+* ``lut``      — ``kernels.lut_matmul``: the paper's faithful §4 engine.
+                 Activations are snapped to a uniform level grid, the
+                 multiplication table M[a, w] = rint(a·w·2^s/Δa) is gathered
+                 and accumulated in int32 — the contraction itself performs
+                 no multiplications and no floating-point ops.
+
+The backend is *trace-time* state: ``ServeEngine`` (and anything else) wraps
+its jitted calls in ``use_backend(...)`` so the choice is baked into each
+trace; already-compiled executables are unaffected by later switches.
+Backend selection is process-global, not thread-local — concurrent tracing
+under different backends is not supported.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BACKENDS", "LutSpec", "make_lut_spec", "use_backend",
+           "matmul_backend", "backend_matmul", "bind_backend"]
+
+BACKENDS = ("dense", "codebook", "lut")
+
+
+@dataclasses.dataclass(frozen=True)
+class LutSpec:
+    """Static description of the §4 integer emulation grid.
+
+    a_min/a_max: activation clip range covered by the level grid.  RMS-normed
+                 transformer activations live well inside ±16; anything
+                 outside saturates (same posture as the paper's bounded
+                 activations).
+    levels:      |A| — number of activation levels (grid resolution Δa).
+    s:           fixed-point scale exponent, chosen by ``make_lut_spec`` so
+                 ``fan_in · max|M|`` statically fits an int32 accumulator
+                 (the paper's no-overflow guarantee, core/lut.choose_scale).
+    """
+
+    a_min: float
+    a_max: float
+    levels: int
+    s: int
+
+    @property
+    def da(self) -> float:
+        return (self.a_max - self.a_min) / (self.levels - 1)
+
+
+def make_lut_spec(codebook, fan_in: int, *, levels: int = 4096,
+                  a_range: tuple[float, float] = (-16.0, 16.0),
+                  acc_bits: int = 32) -> LutSpec:
+    """Pick the largest scale s with a static no-overflow guarantee.
+
+    max|M| = max|a|·max|w|·2^s/Δa and we need fan_in·max|M| < 2^(acc_bits−1)
+    — the same bound as ``core.lut.choose_scale`` with the activation grid
+    standing in for the level set.
+    """
+    a_min, a_max = a_range
+    da = (a_max - a_min) / (levels - 1)
+    wmax = float(np.max(np.abs(np.asarray(codebook, np.float64))))
+    amax = max(abs(a_min), abs(a_max))
+    headroom = 2.0 ** (acc_bits - 1) - 1
+    s = int(np.floor(np.log2(headroom * da / max(fan_in * wmax * amax, 1e-30))))
+    if s < 1:
+        raise ValueError(
+            f"no int{acc_bits} scale fits fan_in={fan_in}, max|w|={wmax:.3g}, "
+            f"grid ±{amax}: coarsen the grid or widen the accumulator")
+    return LutSpec(a_min=a_min, a_max=a_max, levels=levels, s=s)
+
+
+class _State:
+    backend: str = "dense"
+    lut_spec: LutSpec | None = None
+
+
+_STATE = _State()
+
+
+def matmul_backend() -> str:
+    """The backend active for traces happening right now."""
+    return _STATE.backend
+
+
+def bind_backend(fn, name: str, lut_spec: LutSpec | None = None):
+    """A *new* callable running ``fn`` under ``use_backend(name, ...)``.
+
+    jax.jit keys its executable cache on function identity, NOT on this
+    module's ambient backend — jitting the same function object under two
+    backends would silently reuse the first trace.  Each ``bind_backend``
+    call returns a distinct closure, so ``jax.jit(bind_backend(f, b))``
+    gets its own cache per backend.  ``ServeEngine`` builds its jitted
+    steps this way.
+    """
+    def bound(*args, **kwargs):
+        with use_backend(name, lut_spec):
+            return fn(*args, **kwargs)
+    bound.__name__ = f"{getattr(fn, '__name__', 'fn')}[{name}]"
+    return bound
+
+
+@contextlib.contextmanager
+def use_backend(name: str, lut_spec: LutSpec | None = None):
+    """Route index-form ``dense`` layers through ``name`` while tracing.
+
+    Trace-time state: enter this context around the *tracing* of a jitted
+    function (or wrap the function with ``bind_backend`` so every trace is
+    covered).  Never jit one function object under two different backends —
+    see ``bind_backend``.
+    """
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    if name == "lut" and lut_spec is None:
+        raise ValueError("backend 'lut' needs a LutSpec (make_lut_spec)")
+    prev, prev_spec = _STATE.backend, _STATE.lut_spec
+    _STATE.backend, _STATE.lut_spec = name, lut_spec
+    try:
+        yield
+    finally:
+        _STATE.backend, _STATE.lut_spec = prev, prev_spec
+
+
+def backend_matmul(x, w_idx, codebook):
+    """``x @ codebook[w_idx]`` through the active non-dense backend.
+
+    x: (..., K) float; w_idx: (K, N) integer indices; codebook: (|W|,).
+    Returns (..., N) in x.dtype.  Callers guarantee ``matmul_backend()`` is
+    not 'dense' (the plain gather+dot lives in models.layers.dense).
+    """
+    from repro.kernels import ops  # lazy: keep pallas off the import path
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if _STATE.backend == "codebook":
+        y = ops.codebook_matmul(x2, w_idx, codebook)
+    elif _STATE.backend == "lut":
+        y = _lut_matmul(x2, w_idx, codebook, _STATE.lut_spec)
+    else:
+        raise ValueError(f"backend_matmul called with {_STATE.backend!r}")
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def _lut_matmul(x2, w_idx, codebook, spec: LutSpec):
+    """Faithful §4 contraction: snap activations to the level grid, gather
+    M[a_idx·C + w_idx] into an int32 accumulator, decode once at the end.
+
+    The multiplication table is constructed *outside* the kernel from the
+    codebook and the static grid — at deployment it is a precomputed
+    constant; here it folds into the jitted graph the same way.
+    """
+    from repro.kernels import ops
+
+    da, s = spec.da, spec.s
+    # narrow index dtypes store ids >= 128 as negatives (int8 two's
+    # complement); gathers wrap them pythonically but the kernel's flat
+    # a·C + w address arithmetic must see canonical [0, |W|) ids
+    n_w = codebook.shape[0]
+    w_can = w_idx.astype(jnp.int32)
+    w_can = jnp.where(w_can < 0, w_can + n_w, w_can)
+    a_idx = jnp.clip(jnp.round((x2.astype(jnp.float32) - spec.a_min) / da),
+                     0, spec.levels - 1).astype(jnp.int32)
+    avals = spec.a_min + jnp.arange(spec.levels, dtype=jnp.float32) * da
+    scale = (2.0 ** s) / da
+    table = jnp.rint(avals[:, None] * codebook.astype(jnp.float32)[None, :]
+                     * scale).astype(jnp.int32)              # (|A|, |W|)
+    acc = ops.lut_matmul(a_idx, w_can, table)
+    return acc.astype(jnp.float32) * (da / (2.0 ** s))

@@ -28,15 +28,26 @@ from repro.kernels import kmeans1d as _km
 from repro.kernels import lut_matmul as _lm
 
 __all__ = ["codebook_matmul", "lut_matmul", "act_quant", "kmeans_assign",
-           "on_tpu"]
+           "on_tpu", "supports_compiled_pallas"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def supports_compiled_pallas() -> bool:
+    """True when the platform can run these kernels compiled (Mosaic).
+
+    The kernels are written against the TPU memory hierarchy (VMEM-resident
+    tables, MXU accumulation); everywhere else they execute in Pallas
+    interpret mode — same numerics, HLO-level speed — so the serving
+    backends stay usable on CPU dev boxes and in CI.
+    """
+    return on_tpu()
+
+
 def _interp() -> bool:
-    return not on_tpu()
+    return not supports_compiled_pallas()
 
 
 # --- codebook matmul ---------------------------------------------------------

@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -12,8 +14,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """Single-pod (16, 16) = 256 chips or multi-pod (2, 16, 16) = 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -21,5 +22,4 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

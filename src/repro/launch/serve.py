@@ -1,10 +1,20 @@
 """Serving launcher: loads (or trains) a model, optionally compresses the
-weights to codebook-index form (paper §4 / DESIGN.md §2), and runs batched
-generation.
+weights to codebook-index form (paper §4 / DESIGN.md §2), and serves a
+request stream through the continuous-batching ServeEngine (DESIGN.md §3).
 
-CPU smoke run:
+Knobs:
+    --backend {dense,codebook,lut}   matmul path for index-form weights
+    --max-batch N                    slot-pool width (continuous batching)
+    --requests N                     queue length (> max-batch exercises
+                                     join/leave slot reuse)
+    --uniform                        use the single fixed-batch generate()
+                                     instead of the slot-pool serve()
+
+CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --compress --requests 4 --max-new 16
+        --compress --requests 8 --max-batch 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --compress --backend codebook --requests 4 --max-new 8
 """
 
 from __future__ import annotations
@@ -27,10 +37,16 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--backend", default="dense",
+                    choices=("dense", "codebook", "lut"))
     ap.add_argument("--n-weights", type=int, default=1000)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--uniform", action="store_true",
+                    help="fixed-batch generate() instead of the slot pool")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -49,17 +65,34 @@ def main():
         rep = memory_report(idx_tree, wq.num_weights, max(cfg.act_levels, 32))
         print("[memory]", rep.row())
         params = cparams
+    elif args.backend != "dense":
+        ap.error(f"--backend {args.backend} needs --compress (index-form "
+                 "weights)")
 
-    engine = ServeEngine(model, params, max_len=args.prompt_len + args.max_new + 8)
+    engine = ServeEngine(model, params,
+                         max_len=args.prompt_len + args.max_new + 8,
+                         temperature=args.temperature,
+                         backend=args.backend, max_batch=args.max_batch)
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab, args.prompt_len))
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]
                for _ in range(args.requests)]
+
+    # warm the compiles so the reported rate is steady-state — same batch
+    # and max_new as the timed run (jit retraces on any shape change)
+    warm = engine.generate if args.uniform else engine.serve
+    warm(prompts, args.max_new)
+
     t0 = time.time()
-    outs = engine.generate(prompts, max_new=args.max_new)
+    if args.uniform:
+        outs = engine.generate(prompts, max_new=args.max_new)
+    else:
+        outs = engine.serve(prompts, max_new=args.max_new)
     dt = time.time() - t0
     toks = args.requests * args.max_new
-    print(f"[serve] {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s on CPU, batch={args.requests})")
+    mode = "uniform" if args.uniform else f"slots={args.max_batch}"
+    print(f"[serve] {toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s on "
+          f"{jax.default_backend()}, backend={args.backend}, {mode}, "
+          f"{dt / args.requests * 1e3:.1f} ms/request)")
     print("sample:", outs[0][:args.prompt_len], "->",
           outs[0][args.prompt_len:])
 

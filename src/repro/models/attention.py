@@ -103,19 +103,41 @@ def rope(x, pos, theta: float = 1e4, sections: tuple = ()):
 # softmax max/sum all-reduce of (B, H, 1) scalars, partial PV + all-reduce.
 # A lax.scan over KV blocks here would instead force a cache gather.
 
+def _put_rows(dst, new, rows):
+    """Per-row cache write: dst (B, S, ...), new (B, 1, ...), rows (B,).
+
+    Each batch row (= serving slot) writes its token at its own sequence
+    offset — the vmapped dynamic_update_slice XLA lowers to a scatter the
+    while-loop buffer assignment still aliases in place."""
+    def put(d, n, i):
+        return jax.lax.dynamic_update_slice(d, n.astype(d.dtype),
+                                            (i,) + (0,) * (d.ndim - 1))
+    return jax.vmap(put)(dst, new, rows)
+
+
+def _per_row(val, B):
+    """Scalar decode bookkeeping broadcasts as-is; a (B,) vector (per-slot
+    positions, continuous batching) reshapes to broadcast over the score's
+    trailing KV-sequence axis."""
+    v = jnp.asarray(val)
+    return v.reshape(B, 1, 1, 1, 1) if v.ndim == 1 else v
+
+
 def decode_attention(q, k, v, kv_len, exclude=None, extra_kv=None):
     """q: (B,1,KV,G,hd); k/v: (B,S,KV,hd) cache (may be *stale*: the current
     token's K/V are passed via ``extra_kv`` so the cache carry can be read
     before it is written — the ordering XLA needs to alias the update in
-    place).  ``exclude``: ring slot being evicted this step (masked)."""
+    place).  ``exclude``: ring slot being evicted this step (masked).
+    ``kv_len``/``exclude`` may be scalars (uniform batch) or (B,) vectors
+    (per-slot cache positions, see ServeEngine continuous batching)."""
     B, Lq, KV, G, hd = q.shape
     Lk = k.shape[1]
     qf = q.astype(jnp.float32) * hd ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
     idx = jnp.arange(Lk)[None, None, None, None, :]
-    mask = idx < kv_len
+    mask = idx < _per_row(kv_len, B)
     if exclude is not None:
-        mask = mask & (idx != exclude)
+        mask = mask & (idx != _per_row(exclude, B))
     s = jnp.where(mask, s, NEG_INF)
     if extra_kv is not None:
         k_new, v_new = extra_kv                       # (B, 1, KV, hd)
@@ -418,8 +440,9 @@ def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
             v_all = put(v_all, v)
         return num, denom, m_glob, k_all, v_all, ks, vs
 
+    from repro.distributed.compat import shard_map
     ks, vs = scales if have_sc else (jnp.zeros((), jnp.int8),) * 2
-    num, denom, m_glob, k_all, v_all, ks, vs = jax.shard_map(
+    num, denom, m_glob, k_all, v_all, ks, vs = shard_map(
         f, mesh=mesh,
         in_specs=(qspec, P(b_ax, None, None, None), P(b_ax, None, None, None),
                   cspec, cspec,
@@ -454,12 +477,23 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
     back for the attention einsum.
 
     insert_at: ring/linear write position; valid_len: attendable prefix.
+    Both accept either scalars (uniform batch — training smoke tests, the
+    dry-run decode cells) or (B,) vectors (per-slot cache positions — the
+    ServeEngine's continuous batching, where every batch row is a slot at
+    its own sequence offset).  The vector form is CPU/TPU single-host only:
+    the shard_map flash-decode path keeps the scalar contract.
     scales: (ks_all, vs_all) (L, B, S, KV) when the cache is int8-quantized.
     Returns (out, k_all, v_all, new_scales).
     """
     B = x.shape[0]
     hd = cfg.hd
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    vec = jnp.ndim(insert_at) == 1
+
+    if vec and mesh is not None:
+        raise NotImplementedError(
+            "per-slot insert positions are not supported on the sharded "
+            "flash-decode path; run the serving engine without a mesh")
 
     if mesh is not None and k_all.shape[2] % mesh.shape["model"] == 0:
         # explicit flash-decode over the S-sharded cache (see
@@ -481,14 +515,17 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
     else:
         # READ the stale slice first — a carry read after the update forces
         # XLA to materialise a cache copy per step; read-before-write aliases.
-        k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
-        v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        k_raw = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+        v_raw = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        k_l, v_l = k_raw, v_raw
         if scales is not None:
             ks_all, vs_all = scales
-            k_l = dequantize_kv(k_l, jax.lax.dynamic_index_in_dim(
-                ks_all, layer, 0, keepdims=False))
-            v_l = dequantize_kv(v_l, jax.lax.dynamic_index_in_dim(
-                vs_all, layer, 0, keepdims=False))
+            ks_l = jax.lax.dynamic_index_in_dim(ks_all, layer, 0,
+                                                keepdims=False)
+            vs_l = jax.lax.dynamic_index_in_dim(vs_all, layer, 0,
+                                                keepdims=False)
+            k_l = dequantize_kv(k_raw, ks_l)
+            v_l = dequantize_kv(v_raw, vs_l)
         # stale cache: current slot may hold an evicted ring entry — exclude
         # it; the fresh K/V enter through extra_kv.
         out = decode_attention(q, k_l, v_l, valid_len, exclude=insert_at,
@@ -497,22 +534,40 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
         if scales is not None:
             kq, ksc = quantize_kv(k)
             vq, vsc = quantize_kv(v)
-            ks_all = jax.lax.dynamic_update_slice(
-                ks_all, ksc[None].astype(ks_all.dtype),
-                (layer, zero, insert_at, zero))
-            vs_all = jax.lax.dynamic_update_slice(
-                vs_all, vsc[None].astype(vs_all.dtype),
-                (layer, zero, insert_at, zero))
+            if vec:
+                ks_l = _put_rows(ks_l, ksc, insert_at)
+                vs_l = _put_rows(vs_l, vsc, insert_at)
+                ks_all = jax.lax.dynamic_update_index_in_dim(
+                    ks_all, ks_l.astype(ks_all.dtype), layer, 0)
+                vs_all = jax.lax.dynamic_update_index_in_dim(
+                    vs_all, vs_l.astype(vs_all.dtype), layer, 0)
+            else:
+                ks_all = jax.lax.dynamic_update_slice(
+                    ks_all, ksc[None].astype(ks_all.dtype),
+                    (layer, zero, insert_at, zero))
+                vs_all = jax.lax.dynamic_update_slice(
+                    vs_all, vsc[None].astype(vs_all.dtype),
+                    (layer, zero, insert_at, zero))
             k, v = kq, vq
             new_scales = (ks_all, vs_all)
         else:
             new_scales = None
-        k_all = jax.lax.dynamic_update_slice(
-            k_all, k[None].astype(k_all.dtype),
-            (layer, zero, insert_at, zero, zero))
-        v_all = jax.lax.dynamic_update_slice(
-            v_all, v[None].astype(v_all.dtype),
-            (layer, zero, insert_at, zero, zero))
+        if vec:
+            # per-row write offsets: vmap a row-local dynamic_update_slice
+            # over the batch/slot dimension
+            k_all = jax.lax.dynamic_update_index_in_dim(
+                k_all, _put_rows(k_raw, k, insert_at).astype(k_all.dtype),
+                layer, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(
+                v_all, _put_rows(v_raw, v, insert_at).astype(v_all.dtype),
+                layer, 0)
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                k_all, k[None].astype(k_all.dtype),
+                (layer, zero, insert_at, zero, zero))
+            v_all = jax.lax.dynamic_update_slice(
+                v_all, v[None].astype(v_all.dtype),
+                (layer, zero, insert_at, zero, zero))
     out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd))
     return out, k_all, v_all, new_scales
 

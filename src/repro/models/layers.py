@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import ActQuantConfig, act_apply
+from repro.kernels import dispatch
 
 __all__ = [
     "dense_init", "dense", "rms_norm_init", "rms_norm", "layer_norm_init",
@@ -30,10 +31,23 @@ def dense(p, x):
 
     The index form is the deployment representation from the paper's §4: the
     full weight matrix never exists in HBM — only narrow indices plus the
-    |W|-entry codebook.  On TPU the Pallas ``codebook_matmul`` implements
-    this; under jit elsewhere XLA lowers the gather+dot equivalently.
+    |W|-entry codebook.  How the contraction runs is decided by the serving
+    backend switch (``kernels.dispatch``, DESIGN.md §3):
+
+    * ``dense`` (default) — gather the codebook, then a plain XLA dot;
+      training and every non-serving path take this branch.
+    * ``codebook`` — the Pallas ``codebook_matmul`` (dequantize-in-VMEM
+      gather feeding the MXU; compiled on TPU, interpret elsewhere).
+    * ``lut`` — the faithful §4 integer engine ``lut_matmul``: activations
+      snapped to a level grid, int32 table-gather accumulation, no
+      multiplications in the contraction.
     """
     if "w_idx" in p:
+        if dispatch.matmul_backend() != "dense" and p["w_idx"].ndim == 2:
+            y = dispatch.backend_matmul(x, p["w_idx"], p["codebook"])
+            if "b" in p:
+                y = y + p["b"].astype(x.dtype)
+            return y
         w = p["codebook"][p["w_idx"].astype(jnp.int32)].astype(x.dtype)
     else:
         w = p["w"].astype(x.dtype)

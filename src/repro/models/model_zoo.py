@@ -9,6 +9,15 @@
     model.decode(params, tokens, cache, mesh) -> (logits, cache)
     model.init_cache(batch, max_len)     -> cache
     model.input_specs(shape_name, ...)   -> ShapeDtypeStruct batch (dry-run)
+
+Serving contracts (DESIGN.md §3): ``prefill`` accepts an optional
+``batch['lengths']`` (B,) vector marking right-padded prompts — logits come
+back at each row's last real position and ``cache['pos']`` as a (B,)
+vector; ``decode`` then treats a vector ``cache['pos']`` as per-slot
+positions (the ServeEngine's continuous batching).  KV-cache families
+only.  Matmul routing for codebook-index params (dense | codebook | lut)
+is ambient trace-time state — see ``kernels.dispatch``; the params, not
+this handle, carry the representation.
 """
 
 from __future__ import annotations

@@ -190,7 +190,8 @@ def moe_apply(p, x, cfg: MoEConfig, mesh=None):
                          w2.astype(x_l.dtype), cfg, e0, n_local, ep)
         return jax.lax.psum(y, cfg.model_axis)
 
-    return jax.shard_map(
+    from repro.distributed.compat import shard_map
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp, None, None), specs["router"]["w"], specs["w1"],
                   specs["w3"], specs["w2"]),

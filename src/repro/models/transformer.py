@@ -458,11 +458,27 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, mesh=None):
 
 
 def decode_step(params, cfg, tokens, cache, mesh=None):
-    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new cache)."""
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new cache).
+
+    ``cache['pos']`` is either a scalar (uniform batch: every row is at the
+    same sequence offset — training smoke tests, dry-run cells) or a (B,)
+    vector of per-slot positions (the ServeEngine's continuous batching,
+    where batch rows are slots holding requests of different ages).  The
+    vector form is supported for the KV-cache families (dense/vlm/moe/
+    audio); recurrent-state families decode uniform batches only.
+    """
     dt = _dtype(cfg)
-    pos_scalar = cache["pos"]
+    pos_any = cache["pos"]
     B = tokens.shape[0]
-    pos = jnp.broadcast_to(pos_scalar[None, None], (B, 1))
+    if pos_any.ndim == 1:
+        if cfg.family not in ("dense", "vlm", "moe", "audio"):
+            raise NotImplementedError(
+                f"per-slot decode positions need a KV cache; family "
+                f"{cfg.family!r} carries recurrent state")
+        pos = pos_any[:, None].astype(jnp.int32)            # (B, 1) RoPE
+    else:
+        pos = jnp.broadcast_to(pos_any[None, None], (B, 1))
+    pos_scalar = pos_any        # scalar in every branch below except dense kv
     x = L.embed_lookup(params["embed"], tokens).astype(dt)
     x = shard_act(x, mesh)
 
@@ -471,7 +487,14 @@ def decode_step(params, cfg, tokens, cache, mesh=None):
         # assignment updates it in place (a scan-xs/ys cache would be
         # double-buffered: +1× full cache of temp memory).
         memory = cache.get("memory")
-        vlen = pos_scalar + 1
+        S = cache["kv"]["k"].shape[2]
+        if pos_any.ndim == 1:
+            # clamp: retired slots keep lockstep-decoding garbage until the
+            # engine reuses them — never past the cache end
+            ins = jnp.minimum(pos_any, S - 1)
+            vlen = jnp.minimum(pos_any + 1, S)
+        else:
+            ins, vlen = pos_any, pos_any + 1
         norm = L.layer_norm if cfg.family == "audio" else L.rms_norm
         acfg = attn_cfg(cfg)
 
@@ -481,7 +504,7 @@ def decode_step(params, cfg, tokens, cache, mesh=None):
             h, kc, vc, sc, l = carry
             a, kc, vc, sc = A.attn_decode_cached(
                 p_l["attn"], norm(p_l["ln1"], h), acfg, pos=pos,
-                insert_at=pos_scalar, valid_len=vlen,
+                insert_at=ins, valid_len=vlen,
                 k_all=kc, v_all=vc, layer=l, scales=sc,
                 mesh=mesh, dp=dp_axes(mesh) if mesh is not None else None)
             h = shard_act(h + a, mesh)
@@ -583,10 +606,25 @@ def prefill(params, cfg, batch, mesh=None):
     The cache is *emitted* as scan outputs (per-layer K/V planes / final SSM
     states) rather than written into a preallocated zero cache — avoids a
     full extra cache of temp memory in the lowered step.
+
+    ``batch['lengths']`` ((B,) int32, optional) marks right-padded prompts:
+    row b's real tokens occupy positions [0, lengths[b]).  Causal masking
+    already keeps real queries from seeing the padded tail, so no extra
+    attention mask is needed; the returned logits are taken at each row's
+    last *real* position and ``cache['pos']`` comes back as the (B,) length
+    vector — the layout ServeEngine's batched prefill and per-slot decode
+    consume.  KV-cache families only: a recurrent state would march through
+    the padding and corrupt itself.
     """
     dt = _dtype(cfg)
     cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else dt
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
+    if lengths is not None and cfg.family not in ("dense", "vlm", "moe",
+                                                  "audio"):
+        raise NotImplementedError(
+            f"per-request prompt lengths need a KV cache; family "
+            f"{cfg.family!r} carries recurrent state through the padding")
     B, Sq = tokens.shape
     pos = None
     if cfg.family == "vlm":
@@ -664,7 +702,14 @@ def prefill(params, cfg, batch, mesh=None):
         raise ValueError(cfg.family)
 
     norm = L.layer_norm if cfg.family == "audio" else L.rms_norm
-    x = norm(params["final_norm"], x[:, -1:])
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        # per-row gather at the last real position; cache pos → (B,) vector
+        lv = lengths.astype(jnp.int32)
+        x_last = x[jnp.arange(B)[:, None], jnp.maximum(lv - 1, 0)[:, None]]
+        new_cache["pos"] = lv
+    x = norm(params["final_norm"], x_last)
     return _logits(params, cfg, x), new_cache
 
 

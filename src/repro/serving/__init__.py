@@ -1,2 +1,6 @@
+"""Serving: weight compression to index form + the batched inference
+engine with its dense/codebook/lut matmul backends (DESIGN.md §3)."""
+
 from repro.serving.compress import to_codebook_params, index_dtype_for
 from repro.serving.engine import ServeEngine
+from repro.kernels.dispatch import BACKENDS, LutSpec, make_lut_spec, use_backend

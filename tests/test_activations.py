@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.activations import (ACT_RANGES, ActQuantConfig, act_apply,

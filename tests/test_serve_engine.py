@@ -1,0 +1,140 @@
+"""ServeEngine: jitted prefill/decode loop, continuous batching, backends.
+
+Ground truth throughout is the *incremental* path: one request at a time,
+prompt fed token-by-token through ``decode_step`` from an empty cache (the
+seed engine's semantics).  The batched prefill, the while_loop decode, the
+slot-pool continuous batching, and the codebook/lut backends must all
+reproduce it greedily, token for token.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, to_codebook_params
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _incremental(model, params, prompt, max_new, max_len=64):
+    """Seed-style reference: token-by-token feed, greedy, batch of one."""
+    cfg = model.cfg
+    cache = model.init_cache(1, max_len, dtype=jnp.float32)
+    step = jax.jit(lambda p, t, c: model.decode(p, t, c))
+    logits = None
+    for t in prompt:
+        logits, cache = step(params, jnp.asarray([[t]], jnp.int32), cache)
+    out = list(prompt)
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0, -1, :cfg.vocab]))
+        out.append(nxt)
+        logits, cache = step(params, jnp.asarray([[nxt]], jnp.int32), cache)
+    return out
+
+
+def test_prefill_matches_incremental_decode(tiny):
+    """One jitted prefill == feeding the prompt token-by-token."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64)
+    got = eng.generate(PROMPTS, max_new=6)
+    want = [_incremental(model, params, p, 6) for p in PROMPTS]
+    assert got == want
+
+
+def test_generate_deterministic_and_shaped(tiny):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64)
+    o1 = eng.generate(PROMPTS, max_new=5)
+    o2 = eng.generate(PROMPTS, max_new=5)
+    assert o1 == o2
+    assert [len(o) for o in o1] == [len(p) + 5 for p in PROMPTS]
+    assert all(0 <= t < cfg.vocab for o in o1 for t in o)
+
+
+def test_continuous_batching_join_leave(tiny):
+    """A 2-slot pool over 4 requests with unequal stop lengths: every
+    request's tokens must be independent of who shared the batch with it."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2)
+    stops = [6, 3, 5, 1]
+    got = eng.serve(PROMPTS, max_new=stops)
+    want = [_incremental(model, params, p, s) for p, s in zip(PROMPTS, stops)]
+    assert got == want
+
+
+def test_serve_single_slot_queue(tiny):
+    """max_batch=1 degenerates to sequential serving — still correct."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=1)
+    got = eng.serve(PROMPTS[:2], max_new=4)
+    want = [_incremental(model, params, p, 4) for p in PROMPTS[:2]]
+    assert got == want
+
+
+def test_backends_agree_greedy(tiny):
+    """dense / codebook / lut backends produce identical greedy tokens on
+    index-form params (lut within its 4096-level activation grid)."""
+    cfg, model, params = tiny
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 1000,
+                               jax.random.PRNGKey(1))
+    cp = to_codebook_params(pq, wq, state, min_size=1024)
+    outs = {be: ServeEngine(model, cp, max_len=64,
+                            backend=be).generate(PROMPTS[:2], max_new=5)
+            for be in ("dense", "codebook", "lut")}
+    assert outs["codebook"] == outs["dense"]
+    assert outs["lut"] == outs["dense"]
+
+
+def test_backend_requires_index_params(tiny):
+    cfg, model, params = tiny
+    with pytest.raises(ValueError, match="codebook-index"):
+        ServeEngine(model, params, backend="codebook")
+    with pytest.raises(ValueError, match="backend"):
+        ServeEngine(model, params, backend="nope")
+
+
+def test_engine_rejects_recurrent_families():
+    cfg = C.get("rwkv6-7b").reduced().replace(n_layers=1, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="KV-cache"):
+        ServeEngine(model, params)
+
+
+def test_temperature_sampling_reproducible(tiny):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, temperature=0.8)
+    k = jax.random.PRNGKey(7)
+    o1 = eng.generate(PROMPTS[:2], max_new=5, key=k)
+    o2 = eng.generate(PROMPTS[:2], max_new=5, key=k)
+    o3 = eng.generate(PROMPTS[:2], max_new=5, key=jax.random.PRNGKey(8))
+    assert o1 == o2
+    assert all(0 <= t < cfg.vocab for o in o1 for t in o)
+    # a different key must actually reach the sampler
+    assert o1 != o3, "temperature sampling ignored the PRNG key"
+
+
+def test_int8_kv_cache_serving(tiny):
+    """kv_quant engine path: int8 cache with per-slot positions stays close
+    to the float path (greedy tokens may differ under quantization noise,
+    but the machinery must run and produce valid tokens)."""
+    cfg, model, params = tiny
+    qcfg = cfg.replace(kv_quant=True)
+    qmodel = build(qcfg)
+    eng = ServeEngine(qmodel, params, max_len=64, max_batch=2)
+    got = eng.serve(PROMPTS[:3], max_new=4)
+    assert [len(o) for o in got] == [len(p) + 4 for p in PROMPTS[:3]]
+    assert all(0 <= t < cfg.vocab for o in got for t in o)
