@@ -1,5 +1,5 @@
 """Serving throughput: seed per-token Python loop vs the jitted ServeEngine
-across backends and batch sizes.
+across backends and batch sizes, plus the paged-KV-cache memory story.
 
 Measures tokens/sec and mean per-request latency for:
 
@@ -10,17 +10,29 @@ Measures tokens/sec and mean per-request latency for:
 * ``codebook`` — same loop with matmuls through the Pallas
                  ``codebook_matmul`` (interpret mode off-TPU).
 * ``lut``      — same loop through the faithful §4 integer engine.
+* ``paged``    — the paged KV cache (DESIGN.md §8): chunked prefill,
+                 int8 pages, prefix caching.  Alongside tok/s it reports
+                 KV-cache HBM bytes (peak pages in use vs the dense slab),
+                 page-pool utilization, and the prefix-cache hit rate on a
+                 shared-prefix workload (N requests, one system prompt).
 
-Acceptance target (ISSUE 1): the jitted decode loop is >= 5x the seed
-per-token loop at batch 8 on CPU.
+Acceptance targets: the jitted decode loop >= 5x the seed per-token loop at
+batch 8 (ISSUE 1); the paged int8 cache >= 2x smaller than the bf16 dense
+slab at equal batch with a measured prefix hit rate > 0 (ISSUE 2).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
-        [--batches 1 8] [--max-new 16] [--layers 2]
+        [--batches 1 8] [--max-new 16] [--layers 2] [--smoke]
+
+``--smoke`` runs a fast paged-path regression gate (used by CI): paged
+bf16 must match the contiguous engine token-for-token, the int8 page pool
+must undercut the bf16 slab >= 2x, and the shared-prefix workload must
+register cache hits — exits nonzero otherwise.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -28,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
+from repro.core.export import kv_cache_bytes
 from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
 from repro.models.model_zoo import build
 from repro.serving import ServeEngine, to_codebook_params
@@ -64,6 +77,32 @@ def bench(fn, reps):
     return (time.perf_counter() - t0) / reps
 
 
+def shared_prefix_prompts(rng, vocab, n, prefix_len, suffix_len):
+    """N requests behind one system prompt — the prefix-cache workload."""
+    system = [int(t) for t in rng.integers(0, vocab, prefix_len)]
+    return [system + [int(t) for t in rng.integers(0, vocab, suffix_len)]
+            for _ in range(n)]
+
+
+def paged_report(eng, cfg, max_len):
+    """(peak paged bytes, bf16 dense-slab bytes, utilization, hit rate)."""
+    st = eng.pool.stats
+    peak = eng.pool.bytes_per_page() * st.peak_pages_in_use
+    slab = kv_cache_bytes(cfg.n_layers, cfg.n_kv, cfg.hd,
+                          eng.max_batch * max_len, dtype_bytes=2)
+    return peak, slab, st.peak_pages_in_use / eng.pool.usable_pages, st.hit_rate
+
+
+def run_paged(model, cfg, params, prompts, max_new, max_len, page, reps,
+              kv_dtype="int8"):
+    eng = ServeEngine(model, params, max_len=max_len, max_batch=8,
+                      paged=True, page_size=page, kv_dtype=kv_dtype)
+    dt = bench(lambda: eng.serve(prompts, max_new=max_new), reps)
+    eng.pool.reset_stats()
+    eng.serve(prompts, max_new=max_new)       # measured pass for the stats
+    return eng, dt
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -71,23 +110,30 @@ def main():
     ap.add_argument("--batches", type=int, nargs="+", default=[1, 8])
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--skip-lut", action="store_true",
                     help="lut runs the Pallas interpreter per dense layer; "
                          "skip it for quick runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast paged-path regression gate (CI)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced().replace(n_layers=args.layers,
                                                    dtype="float32")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.max_new + 8
+    rng = np.random.default_rng(0)
+
+    if args.smoke:
+        sys.exit(smoke(model, cfg, params, rng))
+
     wq = WeightQuantConfig(num_weights=256, method="kmeans")
     pq, state = cluster_params(params, wq, init_state(wq), 1000,
                                jax.random.PRNGKey(1))
     cparams = to_codebook_params(pq, wq, state, min_size=1024)
-    max_len = args.prompt_len + args.max_new + 8
 
-    rng = np.random.default_rng(0)
     rows = []
     speedup_at_8 = None
     for B in args.batches:
@@ -110,6 +156,31 @@ def main():
             if be == "dense" and B == 8:
                 speedup_at_8 = dt_seed / dt
 
+        eng, dt = run_paged(model, cfg, params, prompts, args.max_new,
+                            max_len, args.page_size, args.reps)
+        rows.append(("paged-int8", B, n_tok / dt, dt / B * 1e3))
+        peak, slab, util, _ = paged_report(eng, cfg, max_len)
+        print(f"[paged] B={B}: peak KV {peak / 1e6:.3f}MB vs bf16 slab "
+              f"{slab / 1e6:.3f}MB ({slab / max(peak, 1):.1f}x smaller), "
+              f"pool utilization {100 * util:.0f}%")
+
+    # shared-prefix workload: one long system prompt, distinct user tails
+    n_req = max(args.batches)
+    shared = shared_prefix_prompts(rng, cfg.vocab, n_req,
+                                   4 * args.page_size, args.prompt_len)
+    smax = len(shared[0]) + args.max_new + 8
+    eng = ServeEngine(model, params, max_len=smax, max_batch=8, paged=True,
+                      page_size=args.page_size, kv_dtype="int8")
+    t0 = time.perf_counter()
+    eng.serve(shared, max_new=args.max_new)
+    dts = time.perf_counter() - t0
+    peak, slab, util, hit = paged_report(eng, cfg, smax)
+    print(f"[paged] shared-prefix ({n_req} requests, common "
+          f"{4 * args.page_size}-token system prompt): "
+          f"{n_req * args.max_new / dts:.1f} tok/s, prefix hit rate "
+          f"{100 * hit:.0f}%, peak KV {peak / 1e6:.3f}MB vs bf16 slab "
+          f"{slab / 1e6:.3f}MB")
+
     print(f"\n{'backend':<10} {'batch':>5} {'tok/s':>10} {'ms/request':>12}")
     for name, B, tps, lat in rows:
         print(f"{name:<10} {B:>5} {tps:>10.1f} {lat:>12.1f}")
@@ -118,6 +189,48 @@ def main():
         ok = speedup_at_8 >= 5.0
         print(f"\n[target] jitted dense loop vs seed loop at batch 8: "
               f"{speedup_at_8:.1f}x ({'PASS' if ok else 'FAIL'}: >= 5x)")
+
+
+def smoke(model, cfg, params, rng) -> int:
+    """CI gate for the paged path; returns a process exit code."""
+    prompts = [list(map(int, rng.integers(0, cfg.vocab, n)))
+               for n in (3, 7, 5, 9)]
+    max_new, max_len, page = 6, 32, 4
+    fails = []
+
+    contig = ServeEngine(model, params, max_len=max_len, max_batch=2)
+    want = contig.serve(prompts, max_new=max_new)
+    paged = ServeEngine(model, params, max_len=max_len, max_batch=2,
+                        paged=True, page_size=page)
+    got = paged.serve(prompts, max_new=max_new)
+    if got != want:
+        fails.append("paged bf16 serve diverged from the contiguous engine")
+
+    eng8 = ServeEngine(model, params, max_len=max_len, max_batch=2,
+                       paged=True, page_size=page, kv_dtype="int8")
+    eng8.serve(prompts, max_new=max_new)
+    peak, slab, util, _ = paged_report(eng8, cfg, max_len)
+    ratio = slab / max(peak, 1)
+    print(f"[smoke] int8 paged peak {peak / 1e3:.1f}KB vs bf16 slab "
+          f"{slab / 1e3:.1f}KB: {ratio:.1f}x (need >= 2x), utilization "
+          f"{100 * util:.0f}%")
+    if ratio < 2.0:
+        fails.append(f"cache-memory reduction {ratio:.2f}x < 2x")
+
+    shared = shared_prefix_prompts(rng, cfg.vocab, 4, 2 * page, 3)
+    engs = ServeEngine(model, params, max_len=max_len, max_batch=2,
+                       paged=True, page_size=page, kv_dtype="int8")
+    engs.serve(shared, max_new=4)
+    hit = engs.pool.stats.hit_rate
+    print(f"[smoke] shared-prefix hit rate {100 * hit:.0f}% (need > 0)")
+    if hit <= 0:
+        fails.append("prefix cache registered no hits on the shared-prefix "
+                     "workload")
+
+    for f in fails:
+        print(f"[smoke] FAIL: {f}")
+    print(f"[smoke] {'FAIL' if fails else 'PASS'}")
+    return 1 if fails else 0
 
 
 if __name__ == "__main__":

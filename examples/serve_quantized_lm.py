@@ -9,7 +9,13 @@ The same compressed params are served three ways:
     lut       Pallas lut_matmul integer engine      (faithful §4: no
               multiplications in the contraction)
 
+then once more through the **paged KV cache** (DESIGN.md §8): requests
+share a common system prompt, so their full prompt pages are computed and
+stored once — the prefix-cache hit rate and the int8-page pool footprint
+are printed against the dense slab.
+
     PYTHONPATH=src python examples/serve_quantized_lm.py [--arch NAME]
+        [--page-size N] [--kv-dtype {bf16,int8}] [--no-prefix-cache]
 """
 
 import argparse
@@ -33,6 +39,10 @@ def main():
     ap.add_argument("--lut-max-new", type=int, default=8,
                     help="lut interprets the Pallas kernel per layer on "
                          "CPU; keep its demo short")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default="int8", choices=("bf16", "int8"))
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction)
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced().replace(kv_quant=True,
@@ -63,6 +73,30 @@ def main():
         print(f"[{backend:>8}] {n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s, "
               f"int8 KV cache, codebook weights)")
         print(f"           continuation: {outs[0][8:]}")
+
+    # --- paged KV cache + prefix reuse (DESIGN.md §8) ------------------------
+    # N requests sharing one system prompt: its full pages are computed and
+    # stored ONCE; every later request's admission re-links them (hit) and
+    # pays only for its distinct user suffix.
+    plain = build(cfg.replace(kv_quant=False))  # pages carry the quantization
+    system = [int(t) for t in rng.integers(0, cfg.vocab, 4 * args.page_size)]
+    shared = [system + [int(t) for t in rng.integers(0, cfg.vocab, 4)]
+              for _ in range(args.requests)]
+    engine = ServeEngine(plain, cparams,
+                         max_len=len(shared[0]) + args.max_new // 2 + 8,
+                         max_batch=args.requests, paged=True,
+                         page_size=args.page_size, kv_dtype=args.kv_dtype,
+                         prefix_cache=args.prefix_cache)
+    outs = engine.serve(shared, max_new=args.max_new // 2)
+    st = engine.pool.stats
+    print(f"[   paged] shared system prompt ({len(system)} tokens × "
+          f"{args.requests} requests): prefix hit rate "
+          f"{100 * st.hit_rate:.0f}% ({st.hit_pages} pages reused, "
+          f"{st.cow_copies} CoW), peak cache "
+          f"{engine.pool.bytes_per_page() * st.peak_pages_in_use / 1e6:.3f}MB"
+          f" vs {engine.dense_cache_bytes() / 1e6:.3f}MB dense slab "
+          f"({args.kv_dtype} pages, {args.page_size} tokens/page)")
+    print(f"           continuation: {outs[0][len(shared[0]):]}")
 
 
 if __name__ == "__main__":

@@ -26,9 +26,10 @@ from repro.kernels import act_quant as _aq
 from repro.kernels import codebook_matmul as _cm
 from repro.kernels import kmeans1d as _km
 from repro.kernels import lut_matmul as _lm
+from repro.kernels import page_gather as _pg
 
 __all__ = ["codebook_matmul", "lut_matmul", "act_quant", "kmeans_assign",
-           "on_tpu", "supports_compiled_pallas"]
+           "gather_pages", "on_tpu", "supports_compiled_pallas"]
 
 
 def on_tpu() -> bool:
@@ -82,6 +83,23 @@ codebook_matmul.defvjp(_cm_fwd, _cm_bwd)
 def lut_matmul(a_idx, w_idx, table):
     """Integer accumulators of the §4 engine (no gradient, by construction)."""
     return _lm.lut_matmul_pallas(a_idx, w_idx, table, interpret=_interp())
+
+
+# --- paged KV cache: page-table gather ---------------------------------------
+
+def gather_pages(pool, page_table):
+    """out[b, p] = pool[page_table[b, p]] — the paged-decode gather.
+
+    pool: (n_pages, page, *rest); page_table: (B, P) int32.  Returns
+    (B, P, page, *rest).  On TPU this is the compiled Pallas scalar-prefetch
+    kernel (one DMA per page, no index expansion); elsewhere the identical
+    gather is left to XLA — ``jnp.take`` fuses on CPU whereas interpret-mode
+    Pallas would re-enter Python inside every decode step.  No gradient
+    (serving-only, like ``lut_matmul``).
+    """
+    if supports_compiled_pallas():
+        return _pg.page_gather_pallas(pool, page_table, interpret=False)
+    return jnp.take(pool, page_table.astype(jnp.int32), axis=0)
 
 
 # --- fused activation quantization ------------------------------------------

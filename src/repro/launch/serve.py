@@ -9,12 +9,19 @@ Knobs:
                                      join/leave slot reuse)
     --uniform                        use the single fixed-batch generate()
                                      instead of the slot-pool serve()
+    --paged                          paged KV cache (DESIGN.md §8): chunked
+                                     prefill + page-gated admission
+    --page-size N                    tokens per cache page (paged mode)
+    --kv-dtype {bf16,int8}           page storage: model float dtype or
+                                     int8 + per-token-per-head scales
+    --prefix-cache / --no-prefix-cache
+                                     content-addressed prompt-page sharing
 
 CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --compress --requests 8 --max-batch 4 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --compress --backend codebook --requests 4 --max-new 8
+        --paged --kv-dtype int8 --requests 8 --max-batch 4 --max-new 16
 """
 
 from __future__ import annotations
@@ -29,7 +36,7 @@ import repro.configs as configs
 from repro.core.quantizer import cluster_params, init_state
 from repro.models.model_zoo import build
 from repro.serving import ServeEngine, to_codebook_params
-from repro.core.export import memory_report
+from repro.core.export import kv_cache_bytes, memory_report
 
 
 def main():
@@ -47,7 +54,16 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--uniform", action="store_true",
                     help="fixed-batch generate() instead of the slot pool")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: chunked prefill, prefix caching, "
+                         "page-gated admission (serve() only)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"))
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction)
     args = ap.parse_args()
+    if args.paged and args.uniform:
+        ap.error("--paged serves through the slot pool; drop --uniform")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -62,7 +78,20 @@ def main():
         cparams = to_codebook_params(params, wq, qstate)
         from repro.core.quantizer import codebook_indices
         idx_tree, _ = codebook_indices(params, wq, qstate)
-        rep = memory_report(idx_tree, wq.num_weights, max(cfg.act_levels, 32))
+        # end-to-end claim: weights AND serving state (dense float slab vs
+        # the paged int8 cache sized for the actual tokens in flight)
+        max_len = args.prompt_len + args.max_new + 8
+        fpb = 4 if cfg.dtype == "float32" else 2
+        kv_fp = kv_cache_bytes(cfg.n_layers, cfg.n_kv, cfg.hd,
+                               args.max_batch * max_len, dtype_bytes=fpb)
+        # page rounding is per request (each reserves whole pages), not on
+        # the aggregate token count
+        kv_packed = min(args.requests, args.max_batch) * kv_cache_bytes(
+            cfg.n_layers, cfg.n_kv, cfg.hd,
+            args.prompt_len + args.max_new,
+            quant=True, page_size=args.page_size)
+        rep = memory_report(idx_tree, wq.num_weights, max(cfg.act_levels, 32),
+                            kv_fp_bytes=kv_fp, kv_packed_bytes=kv_packed)
         print("[memory]", rep.row())
         params = cparams
     elif args.backend != "dense":
@@ -72,7 +101,10 @@ def main():
     engine = ServeEngine(model, params,
                          max_len=args.prompt_len + args.max_new + 8,
                          temperature=args.temperature,
-                         backend=args.backend, max_batch=args.max_batch)
+                         backend=args.backend, max_batch=args.max_batch,
+                         paged=args.paged, page_size=args.page_size,
+                         kv_dtype=args.kv_dtype,
+                         prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]
                for _ in range(args.requests)]
@@ -81,6 +113,8 @@ def main():
     # and max_new as the timed run (jit retraces on any shape change)
     warm = engine.generate if args.uniform else engine.serve
     warm(prompts, args.max_new)
+    if args.paged:
+        engine.pool.reset_stats()
 
     t0 = time.time()
     if args.uniform:
@@ -90,9 +124,19 @@ def main():
     dt = time.time() - t0
     toks = args.requests * args.max_new
     mode = "uniform" if args.uniform else f"slots={args.max_batch}"
+    if args.paged:
+        mode += f", paged({args.page_size}t/{args.kv_dtype})"
     print(f"[serve] {toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s on "
           f"{jax.default_backend()}, backend={args.backend}, {mode}, "
           f"{dt / args.requests * 1e3:.1f} ms/request)")
+    if args.paged:
+        st = engine.pool.stats
+        print(f"[kv] paged pool: peak "
+              f"{st.peak_pages_in_use}/{engine.pool.usable_pages} pages "
+              f"({engine.pool.bytes_per_page() * st.peak_pages_in_use / 1e6:.3f}MB"
+              f" peak vs {engine.dense_cache_bytes() / 1e6:.3f}MB dense slab), "
+              f"prefix hit rate {100 * st.hit_rate:.0f}%, "
+              f"{st.cow_copies} CoW, {st.evictions} evictions")
     print("sample:", outs[0][:args.prompt_len], "->",
           outs[0][args.prompt_len:])
 

@@ -19,7 +19,8 @@ from jax.sharding import PartitionSpec as P
 from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init
 
 __all__ = ["AttnConfig", "attn_init", "attn_apply", "init_kv_cache",
-           "rope", "flash_attention"]
+           "rope", "flash_attention", "chunk_attention", "attn_decode_paged",
+           "attn_prefill_chunk", "quantize_kv", "dequantize_kv"]
 
 NEG_INF = -1e30
 
@@ -152,6 +153,151 @@ def decode_attention(q, k, v, kv_len, exclude=None, extra_kv=None):
     else:
         out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# --- paged KV cache (DESIGN.md §8) -------------------------------------------
+#
+# The cache is a global pool of fixed-size pages (L, n_pages, page, KV, hd);
+# a slot's logical sequence is its page-table row gathered in order.  Pages
+# store int8 values + per-token-per-head scales (quantize_kv) or plain
+# floats.  Logical position s of slot b lives at
+# pool[page_table[b, s // page], s % page] — gathers therefore reassemble a
+# sequence whose index IS the logical position, so the masks of
+# decode_attention/chunk_attention apply unchanged.
+
+def _gather_paged_kv(k_pool, v_pool, page_table, layer, scales=None):
+    """Assemble (B, P·page, KV, hd) float K/V for one layer's pool slice.
+
+    k_pool/v_pool: (L, n_pages, page, KV, hd); page_table: (B, P);
+    scales: optional (ks, vs) each (L, n_pages, page, KV).  Gathers route
+    through ``kernels.ops.gather_pages`` (compiled Pallas on TPU).
+    """
+    from repro.kernels import ops
+
+    B, P = page_table.shape
+    page, KV, hd = k_pool.shape[2:]
+    k_pl = jax.lax.dynamic_index_in_dim(k_pool, layer, 0, keepdims=False)
+    v_pl = jax.lax.dynamic_index_in_dim(v_pool, layer, 0, keepdims=False)
+    k_l = ops.gather_pages(k_pl, page_table).reshape(B, P * page, KV, hd)
+    v_l = ops.gather_pages(v_pl, page_table).reshape(B, P * page, KV, hd)
+    if scales is not None:
+        ks_all, vs_all = scales
+        ks_pl = jax.lax.dynamic_index_in_dim(ks_all, layer, 0, keepdims=False)
+        vs_pl = jax.lax.dynamic_index_in_dim(vs_all, layer, 0, keepdims=False)
+        ks = ops.gather_pages(ks_pl, page_table).reshape(B, P * page, KV)
+        vs = ops.gather_pages(vs_pl, page_table).reshape(B, P * page, KV)
+        k_l = dequantize_kv(k_l, ks)
+        v_l = dequantize_kv(v_l, vs)
+    return k_l, v_l
+
+
+def chunk_attention(q, k_past, v_past, past_len, k_new, v_new):
+    """Chunked-prefill attention: full attention to the valid past, causal
+    within the chunk.
+
+    q: (B, C, KV, G, hd) — one page-sized chunk of queries at absolute
+    positions past_len..past_len+C−1.  k_past/v_past: (B, S, KV, hd)
+    gathered pages, valid prefix ``past_len`` (scalar or (B,)).  k_new/v_new:
+    (B, C, KV, hd) — the chunk's own K/V (not yet written to the pool; same
+    read-before-write posture as decode_attention's ``extra_kv``).
+    """
+    B, C, KV, G, hd = q.shape
+    S = k_past.shape[1]
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s_past = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_past.astype(jnp.float32))
+    idx = jnp.arange(S)[None, None, None, None, :]
+    s_past = jnp.where(idx < _per_row(past_len, B), s_past, NEG_INF)
+    s_new = jnp.einsum("bqkgd,bckd->bkgqc", qf, k_new.astype(jnp.float32))
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]     # q i ≥ k j
+    s_new = jnp.where(causal[None, None, None], s_new, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([s_past, s_new], axis=-1), axis=-1)
+    out = (jnp.einsum("bkgqs,bskd->bqkgd", p[..., :S],
+                      v_past.astype(jnp.float32))
+           + jnp.einsum("bkgqc,bckd->bqkgd", p[..., S:],
+                        v_new.astype(jnp.float32)))
+    return out.astype(q.dtype)
+
+
+def attn_decode_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
+                      write_off, valid_len, k_pool, v_pool, layer,
+                      scales=None):
+    """Paged decode step: gather pages, attend, scatter the token's K/V into
+    the tail page.
+
+    page_table: (B, P) physical page ids per slot; write_pid/write_off: (B,)
+    physical page + in-page offset receiving this token (the engine routes
+    retired slots to the trash page 0).  valid_len: (B,) attendable logical
+    prefix (= per-slot ``pos``; the fresh token enters via ``extra_kv``, so
+    the possibly-stale tail entry is masked out by ``idx < valid_len``).
+    scales present ⇒ int8 pages (quantize-what-you-store, DESIGN.md §4).
+    Returns (out, k_pool, v_pool, new_scales).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
+    out = decode_attention(q, k_l, v_l, valid_len, extra_kv=(k, v))
+    if scales is not None:
+        ks_all, vs_all = scales
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        ks_all = ks_all.at[layer, write_pid, write_off].set(
+            ksc[:, 0].astype(ks_all.dtype))
+        vs_all = vs_all.at[layer, write_pid, write_off].set(
+            vsc[:, 0].astype(vs_all.dtype))
+        k, v, new_scales = kq, vq, (ks_all, vs_all)
+    else:
+        new_scales = None
+    k_pool = k_pool.at[layer, write_pid, write_off].set(
+        k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, write_pid, write_off].set(
+        v[:, 0].astype(v_pool.dtype))
+    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd))
+    return out, k_pool, v_pool, new_scales
+
+
+def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
+                       past_len, k_pool, v_pool, layer, scales=None):
+    """One page-sized prefill chunk (batch of one) against the paged cache.
+
+    x: (1, C, D) with C == page size; ``past_len`` (scalar) tokens already
+    live in the pages of ``page_table`` (1, P).  The chunk's K/V are written
+    as ONE page at physical id ``write_pid`` (page-aligned chunking makes
+    the store a single dynamic_update_slice; ``write_pid`` 0 targets the
+    trash page — used when the chunk's page is a shared prefix-cache hit
+    recomputed only for its logits).  Returns (out, k_pool, v_pool, scales).
+    """
+    B, C, _ = x.shape
+    if B != 1:
+        # the page store below writes k[:, None] at (layer, pid, 0, 0, 0):
+        # a leading batch dim would silently span the LAYER axis
+        raise ValueError(f"attn_prefill_chunk is batch-of-one (got B={B}); "
+                         "prompts stream through chunks one request at a "
+                         "time")
+    q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
+    out = chunk_attention(q, k_l, v_l, past_len, k, v)
+    zero = jnp.zeros((), jnp.int32)
+    if scales is not None:
+        ks_all, vs_all = scales
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        ks_all = jax.lax.dynamic_update_slice(
+            ks_all, ksc[:, None].astype(ks_all.dtype),
+            (layer, write_pid, zero, zero))
+        vs_all = jax.lax.dynamic_update_slice(
+            vs_all, vsc[:, None].astype(vs_all.dtype),
+            (layer, write_pid, zero, zero))
+        k, v, new_scales = kq, vq, (ks_all, vs_all)
+    else:
+        new_scales = None
+    k_pool = jax.lax.dynamic_update_slice(
+        k_pool, k[:, None].astype(k_pool.dtype),
+        (layer, write_pid, zero, zero, zero))
+    v_pool = jax.lax.dynamic_update_slice(
+        v_pool, v[:, None].astype(v_pool.dtype),
+        (layer, write_pid, zero, zero, zero))
+    out = dense(p["wo"], out.reshape(B, C, cfg.n_kv * cfg.groups * cfg.hd))
+    return out, k_pool, v_pool, new_scales
 
 
 # --- flash-chunked attention -------------------------------------------------

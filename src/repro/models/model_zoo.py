@@ -54,6 +54,16 @@ class Model:
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return T.init_cache(self.cfg, batch, max_len, dtype)
 
+    # --- paged KV cache (DESIGN.md §8) ---------------------------------------
+    def init_paged_cache(self, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        """Page-pool cache pytree; dtype=int8 → quantized pages + scales."""
+        return T.init_paged_cache(self.cfg, n_pages, page_size, dtype)
+
+    def prefill_chunk(self, params, batch, cache, mesh=None):
+        """One page-sized chunk of one request's prompt (chunked prefill)."""
+        return T.prefill_chunk(params, self.cfg, batch, cache, mesh)
+
     # --- dry-run stand-ins ----------------------------------------------------
     def input_specs(self, shape_name: str) -> dict:
         """ShapeDtypeStruct batch for a shape cell (no allocation).

@@ -35,7 +35,10 @@ from repro.distributed.sharding import shard_act, dp_axes
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["init_params", "loss_fn", "forward", "prefill", "decode_step",
-           "init_cache", "attn_cfg", "moe_cfg", "ssm_cfg", "rwkv_cfg"]
+           "init_cache", "init_paged_cache", "prefill_chunk",
+           "attn_cfg", "moe_cfg", "ssm_cfg", "rwkv_cfg"]
+
+_PAGED_FAMILIES = ("dense", "moe")   # KV-cache LMs the paged path serves
 
 
 # --- sub-configs -------------------------------------------------------------
@@ -457,6 +460,151 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, mesh=None):
     raise ValueError(cfg.family)
 
 
+def init_paged_cache(cfg, n_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """Paged KV page pool (DESIGN.md §8): (L, n_pages, page, KV, hd) arrays.
+
+    ``dtype=jnp.int8`` stores pages quantized with per-token-per-head scales
+    (``attention.quantize_kv`` — the serving-state analogue of the paper's
+    §4 weight indices); any float dtype stores them plain.  Page 0 is the
+    allocator's trash page (serving/kvcache.py): retired slots keep
+    lockstep-decoding into it, so it is never handed out.
+    """
+    if cfg.family not in _PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache serves families {_PAGED_FAMILIES}; got "
+            f"{cfg.family!r}")
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv, cfg.hd)
+    if dtype == jnp.int8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _paged_scales(cache):
+    if "k_scale" in cache:
+        return (cache["k_scale"], cache["v_scale"])
+    return None
+
+
+def prefill_chunk(params, cfg, batch, cache, mesh=None):
+    """Chunked prefill: one page-sized chunk of ONE request's prompt.
+
+    Long prompts stream through this in page-sized chunks instead of forcing
+    a new power-of-two prefill bucket — the compile footprint of the paged
+    engine is a single chunk shape.  batch keys:
+
+        tokens    (1, C) int32, C == page size (final chunk right-padded —
+                  padded keys are causally invisible to real queries and the
+                  page's padded tail is fenced by the decode valid-length
+                  mask until overwritten)
+        start     scalar int32, absolute position of tokens[0] (page-aligned)
+        length    scalar int32, real tokens in this chunk (logits are taken
+                  at start+length−1)
+        page_row  (P,) int32, the slot's page table
+        write_pid scalar int32, physical page receiving this chunk's K/V
+                  (0 = trash: shared prefix-cache pages are recomputed for
+                  logits only, never rewritten)
+
+    cache: paged pool (init_paged_cache).  Returns (logits (1, 1, V) at the
+    chunk's last real position, new cache).
+    """
+    if cfg.family not in _PAGED_FAMILIES:
+        raise NotImplementedError(cfg.family)
+    if mesh is not None:
+        raise NotImplementedError("paged serving is single-host")
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    start = jnp.asarray(batch["start"], jnp.int32)
+    length = jnp.asarray(batch["length"], jnp.int32)
+    page_table = jnp.asarray(batch["page_row"], jnp.int32)[None]    # (1, P)
+    write_pid = jnp.asarray(batch["write_pid"], jnp.int32)
+    B, C = tokens.shape
+    pos = start + jnp.arange(C)[None]                               # (1, C)
+    x = L.embed_lookup(params["embed"], tokens).astype(dt)
+    acfg = attn_cfg(cfg)
+
+    def body(carry, p_l):
+        h, kc, vc, sc, l = carry
+        a, kc, vc, sc = A.attn_prefill_chunk(
+            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=pos,
+            page_table=page_table, write_pid=write_pid, past_len=start,
+            k_pool=kc, v_pool=vc, layer=l, scales=sc)
+        h = h + a
+        if "moe" in p_l:
+            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                            moe_cfg(cfg), mesh)
+        else:
+            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                         cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1), None
+
+    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"], _paged_scales(cache),
+               jnp.zeros((), jnp.int32)),
+        params["blocks"], unroll=_unroll(cfg))
+    new_cache = {**cache, "k": nk, "v": nv}
+    if nsc is not None:
+        new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    x_last = L.rms_norm(params["final_norm"], x_last)
+    return _logits(params, cfg, x_last), new_cache
+
+
+def _decode_step_paged(params, cfg, tokens, cache, mesh):
+    """One paged decode step: per-slot page tables, (B,) positions.
+
+    ``cache['pos']`` MUST be a (B,) vector (every batch row is a serving
+    slot); logical position s of slot b lives at
+    pool[page_table[b, s // page], s % page].  Retired slots carry an
+    all-zero page-table row, so their lockstep writes land in the trash
+    page and never touch pages reallocated to newcomers.
+    """
+    if cfg.family not in _PAGED_FAMILIES:
+        raise NotImplementedError(cfg.family)
+    if mesh is not None:
+        raise NotImplementedError("paged serving is single-host")
+    dt = _dtype(cfg)
+    pos = cache["pos"]
+    pt = cache["page_table"]
+    B = tokens.shape[0]
+    page = cache["k"].shape[2]
+    S_cap = pt.shape[1] * page
+    ins = jnp.minimum(pos, S_cap - 1)
+    vlen = jnp.minimum(pos, S_cap)          # fresh token enters via extra_kv
+    write_pid = pt[jnp.arange(B), ins // page]
+    write_off = ins % page
+    x = L.embed_lookup(params["embed"], tokens).astype(dt)
+    acfg = attn_cfg(cfg)
+
+    def body(carry, p_l):
+        h, kc, vc, sc, l = carry
+        a, kc, vc, sc = A.attn_decode_paged(
+            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg,
+            pos=pos[:, None].astype(jnp.int32), page_table=pt,
+            write_pid=write_pid, write_off=write_off, valid_len=vlen,
+            k_pool=kc, v_pool=vc, layer=l, scales=sc)
+        h = h + a
+        if "moe" in p_l:
+            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                            moe_cfg(cfg), mesh)
+        else:
+            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                         cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1), None
+
+    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"], _paged_scales(cache),
+               jnp.zeros((), jnp.int32)),
+        params["blocks"], unroll=_unroll(cfg))
+    new_cache = {**cache, "k": nk, "v": nv, "pos": pos + 1}
+    if nsc is not None:
+        new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    x = L.rms_norm(params["final_norm"], x)
+    return _logits(params, cfg, x), new_cache
+
+
 def decode_step(params, cfg, tokens, cache, mesh=None):
     """One decode step.  tokens: (B, 1) int32.  Returns (logits, new cache).
 
@@ -466,7 +614,13 @@ def decode_step(params, cfg, tokens, cache, mesh=None):
     where batch rows are slots holding requests of different ages).  The
     vector form is supported for the KV-cache families (dense/vlm/moe/
     audio); recurrent-state families decode uniform batches only.
+
+    A cache carrying a ``page_table`` is a paged page pool
+    (``init_paged_cache``) and takes the paged path instead of the
+    contiguous slab.
     """
+    if "page_table" in cache:
+        return _decode_step_paged(params, cfg, tokens, cache, mesh)
     dt = _dtype(cfg)
     pos_any = cache["pos"]
     B = tokens.shape[0]

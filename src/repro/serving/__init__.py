@@ -3,4 +3,5 @@ engine with its dense/codebook/lut matmul backends (DESIGN.md §3)."""
 
 from repro.serving.compress import to_codebook_params, index_dtype_for
 from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import Admission, PagePool, PoolStats
 from repro.kernels.dispatch import BACKENDS, LutSpec, make_lut_spec, use_backend

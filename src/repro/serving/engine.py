@@ -33,6 +33,15 @@ in the contraction).  ``codebook``/``lut`` require index-form params
 (``serving.to_codebook_params``).  Engine families: KV-cache token LMs
 (``dense``/``moe``); recurrent-state families would march their state
 through the padding.
+
+**Paged mode** (``paged=True``, DESIGN.md §8): ``serve`` swaps the dense
+slab for a page pool (``serving.kvcache.PagePool``) — prompts stream
+through page-sized prefill chunks (one compile shape, no bucket ladder),
+decode runs against per-slot page tables, pages store int8 + scales
+(``kv_dtype='int8'``), identical prompt prefixes share refcounted pages
+(``prefix_cache``), and admission waits on free *pages* instead of free
+slots.  ``generate`` stays contiguous — it is the equivalence reference
+the paged path is tested against.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ import numpy as np
 
 from repro.kernels import dispatch
 from repro.models.model_zoo import Model
+from repro.serving.kvcache import PagePool
 
 __all__ = ["ServeEngine"]
 
@@ -89,6 +99,19 @@ class ServeEngine:
     backend:     'dense' | 'codebook' | 'lut' (see module docstring).
     lut_levels / lut_range: activation grid of the 'lut' backend's
                  multiplication table (|A| entries over [a_min, a_max]).
+    paged:       serve() through the paged KV cache (DESIGN.md §8): chunked
+                 prefill, per-slot page tables, admission gated on free
+                 *pages* rather than free slots.  generate() stays on the
+                 contiguous slab (the paged-equivalence reference).
+    page_size:   tokens per page (paged mode).
+    kv_dtype:    'bf16' — pages in the model's cache float dtype (f32 for
+                 f32 models, matching the contiguous slab); 'int8' —
+                 quantized pages + per-token-per-head scales.
+    prefix_cache: content-addressed sharing of full prompt pages across
+                 requests (and serve() calls — the pool persists on the
+                 engine).
+    n_pages:     global pool size; 0 → 1 trash page + max_batch × ⌈max_len /
+                 page_size⌉ (capacity parity with the contiguous slab).
     """
 
     model: Model
@@ -100,6 +123,11 @@ class ServeEngine:
     max_batch: int = 8
     lut_levels: int = 4096
     lut_range: tuple = (-16.0, 16.0)
+    paged: bool = False
+    page_size: int = 16
+    kv_dtype: str = "bf16"
+    prefix_cache: bool = True
+    n_pages: int = 0
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -127,10 +155,24 @@ class ServeEngine:
         bb = partial(dispatch.bind_backend, name=self.backend,
                      lut_spec=self._lut_spec)
         self._prefill = jax.jit(bb(self._prefill_fn))
+        # the cache operand is donated everywhere it is threaded through:
+        # callers always reassign from the result, and without donation XLA
+        # copies the full pool/slab per call (per 16-token prefill chunk in
+        # paged mode — O(pool) bandwidth for a one-page update)
         self._decode_loop = jax.jit(bb(self._loop_fn),
-                                    static_argnames=("stop_on_event",))
-        self._admit = jax.jit(self._admit_fn)       # pure memory traffic
+                                    static_argnames=("stop_on_event",),
+                                    donate_argnums=(1,))
+        self._admit = jax.jit(self._admit_fn,       # pure memory traffic
+                              donate_argnums=(0,))
         self._grow = jax.jit(self._grow_fn)
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype {self.kv_dtype!r} not in "
+                             "('bf16', 'int8')")
+        self._prefill_chunk = jax.jit(bb(self._prefill_chunk_fn),
+                                      donate_argnums=(1,))
+        self._pool: PagePool | None = None
+        if self.paged and self.mesh is not None:
+            raise NotImplementedError("paged serving is single-host")
 
     # --- jitted bodies -------------------------------------------------------
 
@@ -213,6 +255,134 @@ class ServeEngine:
                 stops.at[slot].set(stop),
                 out.at[slot].set(row))
 
+    # --- paged path (DESIGN.md §8) -------------------------------------------
+
+    def _prefill_chunk_fn(self, params, cache, tokens, page_row, start,
+                          length, write_pid):
+        return self.model.prefill_chunk(
+            params, {"tokens": tokens, "start": start, "length": length,
+                     "page_row": page_row, "write_pid": write_pid},
+            cache, self.mesh)
+
+    @property
+    def pool(self) -> PagePool:
+        """The engine's page pool (created lazily; persists across serve()
+        calls so the prefix cache keeps earning hits)."""
+        if self._pool is None:
+            pps = -(-self.max_len // self.page_size)
+            n_pages = self.n_pages or 1 + self.max_batch * pps
+            dtype = (jnp.int8 if self.kv_dtype == "int8"
+                     else self._cache_dtype)
+            self._pool = PagePool(
+                self.model, n_pages=n_pages, page_size=self.page_size,
+                pages_per_slot=pps, kv_dtype=dtype,
+                prefix_cache=self.prefix_cache)
+        return self._pool
+
+    def dense_cache_bytes(self) -> int:
+        """HBM bytes of the PR 1 contiguous slab at this engine's shape —
+        the baseline the paged pool is compared against."""
+        cache = jax.eval_shape(lambda: self.model.init_cache(
+            self.max_batch, self.max_len, dtype=self._cache_dtype))
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(cache["kv"]))
+
+    def _chunked_prefill(self, pool, prompt, adm):
+        """Stream one admitted prompt through page-sized chunks; returns the
+        logits of the last real position (chunk compiles once: every call
+        is the same (1, page) shape)."""
+        page = self.page_size
+        plen = len(prompt)
+        row = jnp.asarray(np.asarray(adm.pids + [0] * (pool.pages_per_slot
+                                                       - len(adm.pids)),
+                                     np.int32))
+        logits = None
+        for ci, c in enumerate(range(adm.compute_from, adm.n_chunks)):
+            toks = np.zeros((1, page), np.int32)
+            chunk = prompt[c * page:(c + 1) * page]
+            toks[0, :len(chunk)] = chunk
+            logits, pool.cache = self._prefill_chunk(
+                self.params, pool.cache, jnp.asarray(toks), row,
+                np.int32(c * page), np.int32(len(chunk)),
+                np.int32(adm.write_pids[ci]))
+        return logits
+
+    def _serve_paged(self, prompts, stops_req, key):
+        pool = self.pool
+        page = self.page_size
+        for p, s in zip(prompts, stops_req):
+            if pool.pages_needed(len(p), s) > pool.usable_pages:
+                raise ValueError(
+                    f"request (prompt {len(p)} + {s} new) can never fit the "
+                    f"{pool.usable_pages}-page pool")
+        n = len(prompts)
+        B, cap, P = self.max_batch, max(stops_req), pool.pages_per_slot
+
+        pt_np = np.zeros((B, P), np.int32)            # all-trash rows
+        pos = jnp.zeros((B,), jnp.int32)
+        last = jnp.zeros((B,), jnp.int32)
+        active = jnp.zeros((B,), bool)
+        n_gen = jnp.zeros((B,), jnp.int32)
+        stops = jnp.ones((B,), jnp.int32)
+        out = jnp.zeros((B, cap), jnp.int32)
+
+        queue = deque(range(n))
+        slot_rid: list[int | None] = [None] * B
+        slot_adm: list = [None] * B
+        results: dict[int, list[int]] = {}
+
+        while queue or any(r is not None for r in slot_rid):
+            # admission: gated on free PAGES (a free slot with an
+            # under-provisioned pool waits; retirement frees pages)
+            for b in [b for b in range(B) if slot_rid[b] is None]:
+                if not queue:
+                    break
+                rid = queue[0]
+                adm = pool.admit(prompts[rid], stops_req[rid])
+                if adm is None:
+                    break                              # wait for pages
+                queue.popleft()
+                logits = self._chunked_prefill(pool, prompts[rid], adm)
+                pool.register_prefill(adm)
+                pool.cow(adm)     # shared tail page → private before decode
+                pt_np[b] = 0
+                pt_np[b, :len(adm.pids)] = adm.pids
+                key, sub = jax.random.split(key)
+                first = int(self._sample(logits, sub)[0])
+                stop = stops_req[rid]
+                pos = pos.at[b].set(len(prompts[rid]))
+                last = last.at[b].set(first)
+                active = active.at[b].set(stop > 1)
+                n_gen = n_gen.at[b].set(1)
+                stops = stops.at[b].set(stop)
+                out = out.at[b].set(
+                    jnp.zeros((cap,), out.dtype).at[0].set(first))
+                slot_rid[b], slot_adm[b] = rid, adm
+            if queue and all(r is None for r in slot_rid):
+                raise RuntimeError(
+                    "paged admission deadlock: no request in flight and the "
+                    "pool cannot admit the next one")
+            cache = {**pool.cache, "page_table": jnp.asarray(pt_np),
+                     "pos": pos}
+            cache, last, active, n_gen, out, key = self._decode_loop(
+                self.params, cache, last, active, n_gen, stops, out, key,
+                stop_on_event=True)
+            pos = cache["pos"]
+            pool.cache = {k: v for k, v in cache.items()
+                          if k not in ("page_table", "pos")}
+            act, gen = np.asarray(active), np.asarray(n_gen)
+            out_np = np.asarray(out)
+            for b in range(B):
+                rid = slot_rid[b]
+                if rid is not None and not act[b]:
+                    results[rid] = (list(prompts[rid])
+                                    + out_np[b, :gen[b]].tolist())
+                    pool.retire(slot_adm[b])
+                    pt_np[b] = 0                      # retired → trash page
+                    pos = pos.at[b].set(0)
+                    slot_rid[b], slot_adm[b] = None, None
+        return [results[i] for i in range(n)]
+
     # --- prompt plumbing -----------------------------------------------------
 
     def _pad_prompts(self, prompts):
@@ -264,18 +434,25 @@ class ServeEngine:
         ``max_new`` may be an int or a per-request list.  Requests beyond
         ``max_batch`` wait; every time one in flight finishes, its slot is
         harvested and the next queued request joins *between* decode steps.
-        Returns prompt + continuation per request, in submission order.
+        With ``paged=True`` admission additionally waits on free cache
+        pages (the real capacity resource) and prompts stream through
+        page-sized prefill chunks.  Returns prompt + continuation per
+        request, in submission order.
         """
         n = len(prompts)
         stops_req = ([max_new] * n if isinstance(max_new, int)
                      else list(max_new))
         for p, s in zip(prompts, stops_req):
+            if len(p) < 1:
+                raise ValueError("empty prompt")
             if len(p) + s > self.max_len:
                 raise ValueError("prompt + max_new exceeds max_len")
             if s < 1:
                 raise ValueError("max_new must be >= 1")
-        B, cap = self.max_batch, max(stops_req)
         key = jax.random.PRNGKey(0) if key is None else key
+        if self.paged:
+            return self._serve_paged(prompts, stops_req, key)
+        B, cap = self.max_batch, max(stops_req)
 
         cache = self.model.init_cache(B, self.max_len,
                                       dtype=self._cache_dtype)

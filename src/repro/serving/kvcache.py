@@ -1,0 +1,355 @@
+"""Paged, quantized KV-cache subsystem (DESIGN.md §8).
+
+The serving-state counterpart of the paper's weight story: just as §4 stores
+a weight as a narrow index into a tiny codebook, the paged cache stores
+serving state as fixed-size pages (int8 + per-token-per-head scales,
+``attention.quantize_kv``) allocated on demand from a global pool — max
+concurrency becomes a function of actual tokens in flight, not
+``max_batch × max_len``.
+
+Split of responsibilities:
+
+* **Device** (``transformer.init_paged_cache`` pytree): the page pool
+  arrays ``(L, n_pages, page, KV, hd)`` [+ scales] plus the per-slot page
+  table / position vectors threaded through ``prefill_chunk`` and the paged
+  ``decode_step``.  Page 0 is the **trash page**: never allocated, the
+  write target of retired slots lockstep-decoding until the loop exits, and
+  the discard target for recomputed shared chunks.
+* **Host** (``PagePool``, this module): free-list allocation, per-page
+  refcounts, the content-addressed prefix cache, LRU eviction, and
+  copy-on-write.  All host structures are O(n_pages) ints — no tensors.
+
+Prefix caching is content-addressed by hash *chains*: page c of a prompt is
+keyed by ``(key(c−1), tokens_in_page_c)``, so a page is shared only when
+the entire prefix matches — exactly the condition under which its K/V
+(functions of all tokens ≤ its last position, at absolute RoPE positions)
+are bit-identical.  Full prompt pages are registered right after prefill
+(immutable from then on; in-flight requests can already share them).  A
+non-aligned prompt's partial tail page is registered at retirement: its
+pollution from decode writes beyond the prompt is fenced by the reader's
+valid-length mask, and any sharer copies-on-write before its own decode
+writes land (``Admission.cow_tail``).
+
+Admission (``admit``) is what the engine gates on: it returns None when the
+pool cannot supply the request's worst-case page count (prompt + stop
+tokens) even after evicting cache-only pages — free *pages*, not free
+slots, are the capacity resource.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from collections import OrderedDict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagePool", "PoolStats", "Admission"]
+
+_ROOT = ("root",)            # hash-chain seed for page 0 of every prompt
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Cumulative pool counters (benchmarks read these)."""
+
+    hit_pages: int = 0           # prompt pages reused from the prefix cache
+    miss_pages: int = 0          # prompt pages computed fresh
+    cow_copies: int = 0
+    evictions: int = 0
+    peak_pages_in_use: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_pages + self.miss_pages
+        return self.hit_pages / total if total else 0.0
+
+
+@dataclasses.dataclass
+class Admission:
+    """One admitted request's page plan (host-side bookkeeping handle).
+
+    pids:         physical page per logical page, length = worst-case pages
+                  for prompt + stop tokens (decode never allocates mid-loop).
+    n_chunks:     logical prompt pages (= prefill chunks).
+    compute_from: first chunk index to run through ``prefill_chunk`` (earlier
+                  chunks are full-page prefix-cache hits; the chunk holding
+                  the last prompt token is always computed — its logits seed
+                  sampling).
+    write_pids:   per computed chunk, the physical page receiving its K/V —
+                  0 (trash) for shared pages recomputed only for logits.
+    full_keys:    (chunk_idx, chain_key) of every full prompt page, for
+                  registration after prefill.
+    partial_key:  chain key of a non-aligned prompt's tail page (registered
+                  at retirement), else None.
+    cow_tail:     logical index of a *shared* tail page the request must
+                  copy-on-write before decode writes into it, else None.
+    """
+
+    pids: list
+    n_chunks: int
+    compute_from: int
+    write_pids: list
+    full_keys: list
+    partial_key: tuple | None
+    cow_tail: int | None
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_page(cache, src, dst):
+    """cache[:, dst] = cache[:, src] for every pool array (all layers).
+    The pool is donated (the caller reassigns) so the copy is in place."""
+    out = {}
+    for name, arr in cache.items():
+        pg = jax.lax.dynamic_slice_in_dim(arr, src, 1, axis=1)
+        out[name] = jax.lax.dynamic_update_slice_in_dim(arr, pg, dst, axis=1)
+    return out
+
+
+class PagePool:
+    """Block-pool page allocator + content-addressed prefix cache.
+
+    Refcount protocol: allocation gives the requesting slot one reference;
+    registration in the prefix cache adds one held by the cache; each
+    sharer adds one.  Retirement drops the request's references — pages
+    reaching zero return to the free list, registered pages survive at
+    refcount 1 (cache-only) and are the LRU *eviction* pool when the free
+    list runs dry.
+    """
+
+    def __init__(self, model, *, n_pages: int, page_size: int,
+                 pages_per_slot: int, kv_dtype=jnp.bfloat16,
+                 prefix_cache: bool = True):
+        if n_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is the trash "
+                             "page)")
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.pages_per_slot = int(pages_per_slot)
+        self.prefix_enabled = bool(prefix_cache)
+        self.cache = model.init_paged_cache(n_pages, page_size, kv_dtype)
+        self.free: list[int] = list(range(n_pages - 1, 0, -1))
+        self.ref = np.zeros(n_pages, np.int64)
+        self.table: OrderedDict[tuple, int] = OrderedDict()  # key -> pid
+        self.key_of: dict[int, tuple] = {}                   # pid -> key
+        self.stats = PoolStats()
+
+    # --- capacity -------------------------------------------------------------
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1                       # minus the trash page
+
+    def pages_in_use(self) -> int:
+        return int((self.ref > 0).sum())
+
+    def _evictable(self, exclude=()) -> int:
+        """Cache-only pages reclaimable by eviction.  ``exclude``: pages an
+        admission plan is about to share — taking a reference pins them, so
+        they must not be counted as reclaimable supply for that same plan."""
+        return sum(1 for pid in self.key_of
+                   if self.ref[pid] == 1 and pid not in exclude)
+
+    def can_admit(self, n_new: int, exclude=()) -> bool:
+        return len(self.free) + self._evictable(exclude) >= n_new
+
+    def bytes_per_page(self) -> int:
+        return sum(int(a.nbytes) for a in self.cache.values()) // self.n_pages
+
+    def bytes_total(self) -> int:
+        return sum(int(a.nbytes) for a in self.cache.values())
+
+    def bytes_in_use(self) -> int:
+        return self.pages_in_use() * self.bytes_per_page()
+
+    def utilization(self) -> float:
+        return self.pages_in_use() / self.usable_pages
+
+    def pages_needed(self, prompt_len: int, stop: int) -> int:
+        """Worst-case pages for a request: prompt + stop generated tokens
+        (K/V written up to position prompt_len + stop − 2; no mid-loop
+        allocation, so the whole span is reserved at admission)."""
+        last = max(prompt_len, prompt_len + stop - 1)
+        return max(_ceil_div(prompt_len, self.page_size),
+                   _ceil_div(last, self.page_size))
+
+    # --- allocator ------------------------------------------------------------
+
+    def _note_usage(self):
+        used = self.pages_in_use()
+        if used > self.stats.peak_pages_in_use:
+            self.stats.peak_pages_in_use = used
+
+    def _alloc(self) -> int:
+        if not self.free:
+            self._evict_one()
+        pid = self.free.pop()
+        self.ref[pid] = 1
+        return pid
+
+    def _evict_one(self):
+        for key, pid in self.table.items():           # LRU order: front first
+            if self.ref[pid] == 1:                    # cache-only holder
+                del self.table[key]
+                del self.key_of[pid]
+                self._release(pid)
+                self.stats.evictions += 1
+                return
+        raise RuntimeError("page pool exhausted: every page is referenced "
+                           "by an in-flight request")
+
+    def _release(self, pid: int):
+        self.ref[pid] -= 1
+        assert self.ref[pid] >= 0, f"refcount underflow on page {pid}"
+        if self.ref[pid] == 0:
+            self.free.append(pid)
+
+    # --- prefix cache ---------------------------------------------------------
+
+    def _lookup(self, key):
+        pid = self.table.get(key)
+        if pid is not None:
+            self.table.move_to_end(key)               # LRU touch
+        return pid
+
+    def _register(self, key, pid: int):
+        if key in self.table or pid in self.key_of:
+            return                                    # racer already cached it
+        self.table[key] = pid
+        self.key_of[pid] = key
+        self.ref[pid] += 1
+
+    # --- request lifecycle ----------------------------------------------------
+
+    def admit(self, tokens: list[int], stop: int) -> Admission | None:
+        """Plan + allocate one request's pages, or None when the pool cannot
+        supply them yet (admission waits on free pages, not free slots).
+
+        Demand accounting: sharing a page pins it (its reference makes it
+        unevictable for this very plan), and a shared partial tail still
+        costs one private page — the engine copies-on-write before decode.
+        When the sharing plan is unaffordable, the request is re-planned
+        without prefix hits (eviction may then reclaim the cache-only pages
+        it would have shared) before admission is deferred."""
+        page = self.page_size
+        plen = len(tokens)
+        n_chunks = _ceil_div(plen, page)
+        needed = self.pages_needed(plen, stop)
+        if needed > self.pages_per_slot or needed > self.usable_pages:
+            raise ValueError(
+                f"request needs {needed} pages (prompt {plen} + {stop} new, "
+                f"page {page}) but the slot holds {self.pages_per_slot} and "
+                f"the pool {self.usable_pages}")
+
+        n_full = plen // page
+        keys, key = [], _ROOT
+        for c in range(n_full):
+            key = (key, tuple(tokens[c * page:(c + 1) * page]))
+            keys.append(key)
+        rem = plen % page
+        partial_key = None
+        if rem:
+            partial_key = (keys[-1] if n_full else _ROOT,
+                           tuple(tokens[n_full * page:]))
+
+        for use_prefix in ((True, False) if self.prefix_enabled else
+                           (False,)):
+            matched, hit_pids, partial_pid = 0, [], None
+            if use_prefix:
+                for c in range(n_full):
+                    pid = self._lookup(keys[c])
+                    if pid is None:
+                        break
+                    hit_pids.append(pid)
+                    matched += 1
+                if rem and matched == n_full:
+                    partial_pid = self._lookup(partial_key)
+            n_shared = matched + (1 if partial_pid is not None else 0)
+            # + 1: the CoW page the engine allocates for a shared tail
+            demand = (needed - n_shared
+                      + (1 if partial_pid is not None else 0))
+            pinned = set(hit_pids)
+            if partial_pid is not None:
+                pinned.add(partial_pid)
+            if self.can_admit(demand, exclude=pinned):
+                break
+        else:
+            return None
+
+        pids = []
+        for c in range(needed):
+            if c < matched:
+                pid = hit_pids[c]
+                self.ref[pid] += 1
+            elif c == n_chunks - 1 and partial_pid is not None:
+                pid = partial_pid
+                self.ref[pid] += 1
+            else:
+                pid = self._alloc()
+            pids.append(pid)
+        self._note_usage()
+
+        shared = set(range(matched))
+        if partial_pid is not None:
+            shared.add(n_chunks - 1)
+        compute_from = min(matched, n_chunks - 1)
+        write_pids = [0 if c in shared else pids[c]
+                      for c in range(compute_from, n_chunks)]
+        self.stats.hit_pages += len(shared)
+        self.stats.miss_pages += n_chunks - len(shared)
+        return Admission(
+            pids=pids, n_chunks=n_chunks, compute_from=compute_from,
+            write_pids=write_pids,
+            full_keys=[(c, keys[c]) for c in range(n_full)],
+            partial_key=partial_key,
+            cow_tail=(n_chunks - 1) if partial_pid is not None else None)
+
+    def register_prefill(self, adm: Admission):
+        """Register the request's full prompt pages (immutable once written;
+        concurrent requests may share them immediately)."""
+        if not self.prefix_enabled:
+            return
+        for c, key in adm.full_keys:
+            self._register(key, adm.pids[c])
+
+    def cow(self, adm: Admission) -> int | None:
+        """Copy-on-write the shared tail page before decode writes into it.
+
+        Allocates a private page, copies the shared page's contents across
+        all layers (one jitted dynamic-slice pair), swaps it into the
+        admission, and drops the request's reference on the shared page.
+        Returns the logical index rewritten (for the engine's page table),
+        or None when no CoW is due.  The shared page is never written.
+        """
+        if adm.cow_tail is None:
+            return None
+        c = adm.cow_tail
+        old = adm.pids[c]
+        new = self._alloc()
+        self.cache = _copy_page(self.cache, np.int32(old), np.int32(new))
+        self._release(old)
+        adm.pids[c] = new
+        adm.cow_tail = None
+        self.stats.cow_copies += 1
+        self._note_usage()
+        return c
+
+    def retire(self, adm: Admission):
+        """Drop the retired request's page references.  A non-aligned
+        prompt's tail page is registered first (decode pollution beyond the
+        prompt is fenced by readers' valid-length masks and replaced under
+        copy-on-write by any future sharer)."""
+        if self.prefix_enabled and adm.partial_key is not None:
+            self._register(adm.partial_key, adm.pids[adm.n_chunks - 1])
+        for pid in adm.pids:
+            self._release(pid)
+
+    def reset_stats(self):
+        self.stats = PoolStats()

@@ -12,8 +12,8 @@ except ImportError:        # dev extras absent: skip only the property test
     given = None
 
 import repro.configs as C
-from repro.core.export import (bits_per_index, entropy_bits, memory_report,
-                               pack_indices, unpack_indices)
+from repro.core.export import (bits_per_index, entropy_bits, kv_cache_bytes,
+                               memory_report, pack_indices, unpack_indices)
 from repro.core.quantizer import (WeightQuantConfig, cluster_params,
                                   codebook_indices, init_state)
 from repro.models.model_zoo import build
@@ -92,6 +92,32 @@ def test_serve_engine_greedy_deterministic():
     assert o1 == o2
     assert all(len(o) == 8 for o in o1)
     assert all(0 <= t < cfg.vocab for o in o1 for t in o)
+
+
+def test_kv_cache_bytes_accounting():
+    """Serving-state accounting: int8 pages + scales vs a float slab, page
+    rounding, and the end-to-end deployed figure in memory_report."""
+    # 2 layers, 4 kv heads, hd 64: bf16 token = 2·64·2 B per head
+    assert kv_cache_bytes(2, 4, 64, 10) == 2 * 4 * (2 * 64 * 2) * 10
+    # int8 token = 2·64 + 4 scale bytes per head
+    assert kv_cache_bytes(2, 4, 64, 10, quant=True) == 2 * 4 * (128 + 4) * 10
+    # page rounding: 10 tokens at 16/page allocate a whole page
+    assert (kv_cache_bytes(2, 4, 64, 10, quant=True, page_size=16)
+            == kv_cache_bytes(2, 4, 64, 16, quant=True))
+    # int8 pages beat the bf16 slab >2x whenever hd dominates the scale
+    assert (kv_cache_bytes(2, 4, 64, 256, dtype_bytes=2)
+            > 1.9 * kv_cache_bytes(2, 4, 64, 256, quant=True))
+
+    idx = {"w": jnp.zeros((1_000_000,), jnp.int32)}
+    rep = memory_report(idx, 1000, 32,
+                        kv_fp_bytes=1_000_000, kv_packed_bytes=100_000)
+    assert rep.deployed_fp_bytes == rep.fp32_bytes + 1_000_000
+    assert rep.deployed_packed_bytes == rep.packed_bytes + 100_000
+    assert 0.0 < rep.deployed_savings < 1.0
+    assert "deployed" in rep.row()
+    # backward compatible: kv fields default to zero and stay silent
+    rep0 = memory_report(idx, 1000, 32)
+    assert rep0.kv_fp_bytes == 0 and "deployed" not in rep0.row()
 
 
 def test_codebook_indices_memory_on_trained_lm():

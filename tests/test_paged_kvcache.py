@@ -1,0 +1,221 @@
+"""Paged, quantized KV cache (DESIGN.md §8).
+
+Ground truth is the incremental path (one request, token-by-token decode
+from an empty contiguous cache).  The paged engine — chunked prefill,
+page-table decode, int8 pages, prefix caching, copy-on-write, page-gated
+admission — must reproduce it greedily, token for token, on the dense
+family across all three matmul backends.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, to_codebook_params
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def reference(tiny):
+    cfg, model, params = tiny
+    return [_incremental(model, params, p, 6) for p in PROMPTS]
+
+
+def _incremental(model, params, prompt, max_new, max_len=64):
+    cfg = model.cfg
+    cache = model.init_cache(1, max_len, dtype=jnp.float32)
+    step = jax.jit(lambda p, t, c: model.decode(p, t, c))
+    logits = None
+    for t in prompt:
+        logits, cache = step(params, jnp.asarray([[t]], jnp.int32), cache)
+    out = list(prompt)
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0, -1, :cfg.vocab]))
+        out.append(nxt)
+        logits, cache = step(params, jnp.asarray([[nxt]], jnp.int32), cache)
+    return out
+
+
+def test_page_gather_kernel_matches_xla_gather():
+    """The Pallas scalar-prefetch kernel (interpret mode off-TPU) and the
+    XLA fallback implement the same gather, for K/V pages and scale pages."""
+    from repro.kernels.page_gather import page_gather_pallas
+
+    rng = np.random.default_rng(0)
+    pt = jnp.asarray(rng.integers(0, 16, (3, 5)), jnp.int32)
+    for shape, dtype in (((16, 4, 2, 8), jnp.float32),
+                         ((16, 4, 2, 8), jnp.int8),
+                         ((16, 4, 2), jnp.bfloat16)):
+        pool = jnp.asarray(rng.integers(-100, 100, shape)).astype(dtype)
+        got = page_gather_pallas(pool, pt, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.take(pool, pt, axis=0)))
+
+
+def test_paged_matches_incremental_multichunk(tiny, reference):
+    """page=4 makes every prompt span chunks and decode cross page
+    boundaries; tokens must still match the incremental path exactly."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4)
+    assert eng.serve(PROMPTS, max_new=6) == reference
+
+
+def test_paged_backends_match_contiguous(tiny):
+    """dense / codebook / lut: the paged engine reproduces the contiguous
+    engine token-for-token on index-form params."""
+    cfg, model, params = tiny
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 1000,
+                               jax.random.PRNGKey(1))
+    cp = to_codebook_params(pq, wq, state, min_size=1024)
+    for be in ("dense", "codebook", "lut"):
+        want = ServeEngine(model, cp, max_len=64, max_batch=2,
+                           backend=be).serve(PROMPTS[:2], max_new=4)
+        got = ServeEngine(model, cp, max_len=64, max_batch=2, backend=be,
+                          paged=True, page_size=4).serve(PROMPTS[:2],
+                                                         max_new=4)
+        assert got == want, be
+
+
+def test_paged_int8_matches_contiguous(tiny, reference):
+    """Acceptance: int8 paged cache == contiguous greedy decode token for
+    token.  Single-chunk prompts make the comparison exact even against the
+    contiguous int8 slab (identical quantize_kv on both sides); multi-chunk
+    prefill additionally reads back quantized pages (same posture as
+    vLLM-style fp8 chunked prefill), which can perturb near-ties on a
+    random-init model and is therefore not asserted bitwise."""
+    cfg, model, params = tiny
+    got = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=8, kv_dtype="int8").serve(PROMPTS, max_new=6)
+    assert got == reference                         # vs float contiguous
+    qmodel = build(cfg.replace(kv_quant=True))
+    want8 = ServeEngine(qmodel, params, max_len=64,
+                        max_batch=2).serve(PROMPTS, max_new=6)
+    assert got == want8                             # vs int8 contiguous
+
+
+def test_prefix_cache_shared_pages_identical_tokens(tiny, reference):
+    """A repeated prompt re-links cached pages instead of recomputing them —
+    and produces the very same greedy continuation."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4)
+    first = eng.serve(PROMPTS, max_new=6)
+    assert first == reference
+    st0 = eng.pool.stats
+    assert st0.hit_pages == 0 and st0.miss_pages > 0
+    again = eng.serve(PROMPTS, max_new=6)           # pool persists on engine
+    assert again == reference
+    assert eng.pool.stats.hit_pages > 0
+    assert eng.pool.stats.hit_rate > 0
+
+
+def test_refcounts_drop_to_zero_on_retirement(tiny):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, prefix_cache=False)
+    eng.serve(PROMPTS, max_new=4)
+    pool = eng.pool
+    assert pool.pages_in_use() == 0                 # every ref released
+    assert sorted(pool.free) == list(range(1, pool.n_pages))
+    assert int(pool.ref.sum()) == 0
+
+    # with the prefix cache on, retired pages survive at refcount 1 (the
+    # cache's own hold) — and nothing else keeps them pinned
+    eng2 = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                       page_size=4)
+    eng2.serve(PROMPTS, max_new=4)
+    pool2 = eng2.pool
+    registered = set(pool2.key_of)
+    assert registered and all(pool2.ref[p] == 1 for p in registered)
+    assert all(pool2.ref[p] == 0 for p in range(1, pool2.n_pages)
+               if p not in registered)
+
+
+def test_cow_never_mutates_shared_page(tiny):
+    """A request sharing a retired twin's partial tail page must copy before
+    its decode writes land: the cached page's bytes stay bit-identical and
+    both requests emit identical tokens."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, kv_dtype="int8")
+    prompt = [7, 8, 9, 10, 11, 12]                  # 6 % 4 ≠ 0: partial tail
+    a = eng.serve([prompt], max_new=5)[0]
+    pool = eng.pool
+    # the partial tail page was registered at retirement
+    tail_pids = [pid for pid, key in pool.key_of.items()
+                 if len(key[1]) != eng.page_size]
+    assert len(tail_pids) == 1
+    pid = tail_pids[0]
+    before = {k: np.asarray(v[:, pid]).copy() for k, v in pool.cache.items()}
+
+    b = eng.serve([prompt], max_new=5)[0]
+    assert pool.stats.cow_copies >= 1
+    assert b == a
+    after = {k: np.asarray(v[:, pid]) for k, v in pool.cache.items()}
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k], err_msg=k)
+
+
+def test_pool_exhaustion_gates_admission(tiny, reference):
+    """A pool too small for two requests serves them sequentially (admission
+    waits on pages, not slots); a request that can never fit raises."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=4, paged=True,
+                      page_size=4, n_pages=4, prefix_cache=False)
+    got = eng.serve(PROMPTS[:3], max_new=6)
+    assert got == reference[:3]
+    assert eng.pool.stats.peak_pages_in_use <= 3    # never two in flight
+    with pytest.raises(ValueError, match="never fit"):
+        eng.serve([[1] * 13], max_new=4)            # needs 4 of 3 pages
+
+
+def test_tight_pool_prefix_reuse_no_crash(tiny):
+    """Admission accounting under pressure: a repeated request whose prefix
+    hits pin the only evictable pages (and whose shared tail costs a CoW
+    page) must either fit exactly or fall back to recomputing — never blow
+    up mid-serve with an exhausted allocator."""
+    cfg, model, params = tiny
+    prompt = [7, 8, 9, 10, 11, 12]                  # needs 3 pages @ stop=5
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, n_pages=4, kv_dtype="int8")
+    a = eng.serve([prompt], max_new=5)[0]
+    # full page + partial tail stay registered; one page freed
+    assert eng.pool.pages_in_use() == 2 and len(eng.pool.free) == 1
+    b = eng.serve([prompt], max_new=5)[0]           # sharing unaffordable:
+    assert b == a                                   # falls back, stays right
+    c = eng.serve([prompt, prompt], max_new=5)      # and again under queueing
+    assert c == [a, a]
+
+
+def test_chunked_prefill_long_prompt(tiny):
+    """A prompt spanning many pages streams through page-sized chunks (no
+    power-of-two prefill bucket) and still matches the incremental path."""
+    cfg, model, params = tiny
+    prompt = [int(t) for t in
+              np.random.default_rng(3).integers(0, cfg.vocab, 19)]
+    want = _incremental(model, params, prompt, 5)
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4)
+    assert eng.serve([prompt], max_new=5) == [want]
+
+
+def test_paged_rejects_recurrent_families():
+    cfg = C.get("rwkv6-7b").reduced().replace(n_layers=1, dtype="float32")
+    model = build(cfg)
+    with pytest.raises(NotImplementedError):
+        model.init_paged_cache(4, 4)
