@@ -1,5 +1,6 @@
 """Serving throughput: seed per-token Python loop vs the jitted ServeEngine
-across backends and batch sizes, plus the paged-KV-cache memory story.
+across backends and batch sizes, the paged-KV-cache memory story, and
+speculative decoding (DESIGN.md §9).
 
 Measures tokens/sec and mean per-request latency for:
 
@@ -15,23 +16,34 @@ Measures tokens/sec and mean per-request latency for:
                  KV-cache HBM bytes (peak pages in use vs the dense slab),
                  page-pool utilization, and the prefix-cache hit rate on a
                  shared-prefix workload (N requests, one system prompt).
+* ``spec``     — speculative decoding with the n-gram self-draft on a
+                 repetitive-suffix workload (prompts whose greedy
+                 continuation settles into a constant run — probed against
+                 the live model): tokens/sec vs baseline decode plus the
+                 per-step acceptance rate.
+
+Every run (full and ``--smoke``) also emits a machine-readable
+``BENCH_serve.json`` (``--json-out``) — tokens/sec per backend/batch, KV
+bytes, prefix hit rate, spec acceptance — so the perf trajectory is
+tracked across PRs.
 
 Acceptance targets: the jitted decode loop >= 5x the seed per-token loop at
 batch 8 (ISSUE 1); the paged int8 cache >= 2x smaller than the bf16 dense
-slab at equal batch with a measured prefix hit rate > 0 (ISSUE 2).
+slab at equal batch with a measured prefix hit rate > 0 (ISSUE 2); spec
+decode token-identical to baseline at temperature 0 with acceptance > 0
+and >1x decode speedup on the repetitive-suffix workload (ISSUE 3).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         [--batches 1 8] [--max-new 16] [--layers 2] [--smoke]
 
-``--smoke`` runs a fast paged-path regression gate (used by CI): paged
-bf16 must match the contiguous engine token-for-token, the int8 page pool
-must undercut the bf16 slab >= 2x, and the shared-prefix workload must
-register cache hits — exits nonzero otherwise.
+``--smoke`` runs a fast regression gate (used by CI): the paged checks
+above plus the spec-decode gate — exits nonzero otherwise.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -43,7 +55,7 @@ import repro.configs as configs
 from repro.core.export import kv_cache_bytes
 from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
 from repro.models.model_zoo import build
-from repro.serving import ServeEngine, to_codebook_params
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
 
 
 def seed_generate(model, params, prompts, max_new, max_len):
@@ -84,6 +96,67 @@ def shared_prefix_prompts(rng, vocab, n, prefix_len, suffix_len):
             for _ in range(n)]
 
 
+def repetitive_workload(eng, vocab, *, n_prompts=2, motif_len=3, reps=6,
+                        max_new=64, max_seeds=80):
+    """Prompts whose BASELINE greedy continuation settles into a constant
+    run — the workload the n-gram self-draft is built for.  Random-init
+    models fall into short cycles, but *which* prompts cycle depends on the
+    weights, so candidates are probed against the live model (a full
+    max_batch-wide serve per probe batch, not one request at a time)."""
+    good = []
+    B = eng.max_batch
+    cands = [[int(t) for t in
+              np.random.default_rng(s).integers(0, vocab, motif_len)] * reps
+             for s in range(max_seeds)]
+    for i in range(0, max_seeds, B):
+        batch = cands[i:i + B]
+        for p, out in zip(batch, eng.serve(batch, max_new=max_new)):
+            tail = out[len(p):]
+            if len(set(tail[6:])) == 1:
+                good.append(p)
+        if len(good) >= n_prompts:
+            break
+    return good[:n_prompts]
+
+
+def bench_spec(model, params, *, max_new=64, k=6, reps=3):
+    """n-gram speculative decode vs baseline on the repetitive-suffix
+    workload.  Returns a JSON-ready dict with a ``parity`` flag (the
+    smoke gate turns parity=False into a FAIL instead of crashing the
+    remaining checks), or None when no cycling prompt was found."""
+    probe = ServeEngine(model, params, max_len=96, max_batch=4)
+    prompts = repetitive_workload(probe, model.cfg.vocab, max_new=max_new)
+    if len(prompts) < 2:
+        return None
+    ml = len(prompts[0]) + max_new + 8
+    base = ServeEngine(model, params, max_len=ml, max_batch=4)
+    spec = ServeEngine(model, params, max_len=ml, max_batch=4,
+                       spec=SpecConfig(draft="ngram", k=k))
+    want = base.serve(prompts, max_new=max_new)         # warm + reference
+    got = spec.serve(prompts, max_new=max_new)          # warm
+    tb = min(bench(lambda: base.serve(prompts, max_new=max_new), 1)
+             for _ in range(reps))
+    ts = min(bench(lambda: spec.serve(prompts, max_new=max_new), 1)
+             for _ in range(reps))
+    spec.spec_stats.reset()
+    spec.serve(prompts, max_new=max_new)                # measured stats pass
+    st = spec.spec_stats
+    n_tok = len(prompts) * max_new
+    return {"draft": "ngram", "k": k, "n_prompts": len(prompts),
+            "max_new": max_new, "parity": got == want,
+            "baseline_tok_s": n_tok / tb, "spec_tok_s": n_tok / ts,
+            "speedup": tb / ts, "acceptance_rate": st.acceptance_rate,
+            "tokens_per_round": st.tokens_per_round, "rounds": st.rounds}
+
+
+def write_bench_json(path, payload):
+    payload = {"bench": "serve_throughput",
+               "device": jax.default_backend(), **payload}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[json] wrote {path}")
+
+
 def paged_report(eng, cfg, max_len):
     """(peak paged bytes, bf16 dense-slab bytes, utilization, hit rate)."""
     st = eng.pool.stats
@@ -116,7 +189,9 @@ def main():
                     help="lut runs the Pallas interpreter per dense layer; "
                          "skip it for quick runs")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast paged-path regression gate (CI)")
+                    help="fast paged + spec regression gate (CI)")
+    ap.add_argument("--json-out", default="BENCH_serve.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced().replace(n_layers=args.layers,
@@ -127,7 +202,7 @@ def main():
     rng = np.random.default_rng(0)
 
     if args.smoke:
-        sys.exit(smoke(model, cfg, params, rng))
+        sys.exit(smoke(model, cfg, params, rng, args.json_out))
 
     wq = WeightQuantConfig(num_weights=256, method="kmeans")
     pq, state = cluster_params(params, wq, init_state(wq), 1000,
@@ -181,6 +256,19 @@ def main():
           f"{100 * hit:.0f}%, peak KV {peak / 1e6:.3f}MB vs bf16 slab "
           f"{slab / 1e6:.3f}MB")
 
+    # speculative decoding on the repetitive-suffix workload
+    spec = bench_spec(model, params)
+    if spec is None:
+        print("[spec] no cycling prompt found on this model — skipped")
+    else:
+        print(f"[spec] ngram k={spec['k']}: {spec['spec_tok_s']:.1f} tok/s "
+              f"vs baseline {spec['baseline_tok_s']:.1f} "
+              f"({spec['speedup']:.2f}x), acceptance "
+              f"{100 * spec['acceptance_rate']:.0f}%, "
+              f"{spec['tokens_per_round']:.1f} tok/round"
+              + ("" if spec["parity"] else
+                 " — WARNING: diverged from baseline at temperature 0"))
+
     print(f"\n{'backend':<10} {'batch':>5} {'tok/s':>10} {'ms/request':>12}")
     for name, B, tps, lat in rows:
         print(f"{name:<10} {B:>5} {tps:>10.1f} {lat:>12.1f}")
@@ -190,9 +278,19 @@ def main():
         print(f"\n[target] jitted dense loop vs seed loop at batch 8: "
               f"{speedup_at_8:.1f}x ({'PASS' if ok else 'FAIL'}: >= 5x)")
 
+    if args.json_out:
+        write_bench_json(args.json_out, {
+            "mode": "full", "arch": args.arch, "layers": args.layers,
+            "rows": [{"backend": n, "batch": b, "tok_s": t,
+                      "ms_per_request": l} for n, b, t, l in rows],
+            "seed_speedup_at_8": speedup_at_8,
+            "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
+                      "pool_utilization": util, "prefix_hit_rate": hit},
+            "spec": spec})
 
-def smoke(model, cfg, params, rng) -> int:
-    """CI gate for the paged path; returns a process exit code."""
+
+def smoke(model, cfg, params, rng, json_out="") -> int:
+    """CI gate for the paged + speculative paths; returns an exit code."""
     prompts = [list(map(int, rng.integers(0, cfg.vocab, n)))
                for n in (3, 7, 5, 9)]
     max_new, max_len, page = 6, 32, 4
@@ -226,6 +324,45 @@ def smoke(model, cfg, params, rng) -> int:
     if hit <= 0:
         fails.append("prefix cache registered no hits on the shared-prefix "
                      "workload")
+
+    # --- speculative decoding (DESIGN.md §9) ---------------------------------
+    # temperature=0 parity vs baseline decode, contiguous AND paged
+    sc = SpecConfig(draft="ngram", k=3)
+    spec_c = ServeEngine(model, params, max_len=max_len, max_batch=2,
+                         spec=sc).serve(prompts, max_new=max_new)
+    if spec_c != want:
+        fails.append("spec decode (contiguous) diverged from baseline at "
+                     "temperature 0")
+    spec_p = ServeEngine(model, params, max_len=max_len, max_batch=2,
+                         paged=True, page_size=page,
+                         spec=sc).serve(prompts, max_new=max_new)
+    if spec_p != want:
+        fails.append("spec decode (paged) diverged from baseline at "
+                     "temperature 0")
+    # >1x decode speedup with acceptance > 0 on the repetitive workload
+    spec = bench_spec(model, params)
+    if spec is None:
+        fails.append("no repetitive-suffix workload found to gate spec "
+                     "decode speedup")
+    else:
+        print(f"[smoke] spec ngram: {spec['speedup']:.2f}x vs baseline "
+              f"(need > 1x), acceptance {100 * spec['acceptance_rate']:.0f}%"
+              f" (need > 0)")
+        if not spec["parity"]:
+            fails.append("spec decode diverged from baseline at temperature "
+                         "0 on the repetitive-suffix workload")
+        if spec["acceptance_rate"] <= 0:
+            fails.append("spec decode accepted no draft tokens")
+        if spec["speedup"] <= 1.0:
+            fails.append(f"spec decode speedup {spec['speedup']:.2f}x <= 1x "
+                         "on the repetitive-suffix workload")
+
+    if json_out:
+        write_bench_json(json_out, {
+            "mode": "smoke",
+            "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
+                      "reduction_x": ratio, "prefix_hit_rate": hit},
+            "spec": spec, "fails": fails})
 
     for f in fails:
         print(f"[smoke] FAIL: {f}")

@@ -14,8 +14,15 @@ share a common system prompt, so their full prompt pages are computed and
 stored once — the prefix-cache hit rate and the int8-page pool footprint
 are printed against the dense slab.
 
+Finally, **speculative decoding** (DESIGN.md §9) pairs the two ends of the
+paper's precision spectrum: the SAME compressed params run as a coarse-grid
+lut-tier *draft* proposing k tokens per round for the codebook-tier
+*target*, which verifies all k+1 positions in one forward — identical
+greedy tokens, fewer target rounds.
+
     PYTHONPATH=src python examples/serve_quantized_lm.py [--arch NAME]
         [--page-size N] [--kv-dtype {bf16,int8}] [--no-prefix-cache]
+        [--spec-k N]
 """
 
 import argparse
@@ -28,7 +35,7 @@ import repro.configs as configs
 from repro.core.export import memory_report
 from repro.core.quantizer import cluster_params, codebook_indices, init_state
 from repro.models.model_zoo import build
-from repro.serving import ServeEngine, to_codebook_params
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
 
 
 def main():
@@ -43,6 +50,8 @@ def main():
     ap.add_argument("--kv-dtype", default="int8", choices=("bf16", "int8"))
     ap.add_argument("--prefix-cache", default=True,
                     action=argparse.BooleanOptionalAction)
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per speculative verify round")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced().replace(kv_quant=True,
@@ -97,6 +106,33 @@ def main():
           f" vs {engine.dense_cache_bytes() / 1e6:.3f}MB dense slab "
           f"({args.kv_dtype} pages, {args.page_size} tokens/page)")
     print(f"           continuation: {outs[0][len(shared[0]):]}")
+
+    # --- speculative decoding (DESIGN.md §9) ---------------------------------
+    # Both ends of the paper's spectrum in one engine: the SAME index-form
+    # params propose through the faithful integer engine on a COARSE 512-
+    # level grid (the cheap tier) and verify through the codebook MXU path
+    # (the accurate tier).  Greedy output is identical to non-speculative
+    # serving; the target runs one k+1-token forward per round instead of
+    # one forward per token.
+    k = args.spec_k
+    target = ServeEngine(model, cparams, max_len=64 + k, max_batch=4,
+                         backend="codebook")
+    spec_eng = ServeEngine(model, cparams, max_len=64 + k, max_batch=4,
+                           backend="codebook",
+                           spec=SpecConfig(draft="model", k=k,
+                                           draft_params=cparams,
+                                           draft_backend="lut",
+                                           lut_levels=512))
+    want = target.serve(prompts, max_new=args.max_new // 2)
+    got = spec_eng.serve(prompts, max_new=args.max_new // 2)
+    st = spec_eng.spec_stats
+    print(f"[    spec] lut(512)-tier draft -> codebook-tier target, k={k}: "
+          f"{'identical tokens' if got == want else 'DIVERGED'}, "
+          f"{st.rounds} verify rounds for "
+          f"{args.requests * (args.max_new // 2)} tokens "
+          f"(acceptance {100 * st.acceptance_rate:.0f}%, "
+          f"{st.tokens_per_round:.1f} tokens/round)")
+    print(f"           continuation: {got[0][8:]}")
 
 
 if __name__ == "__main__":

@@ -31,8 +31,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BACKENDS", "LutSpec", "make_lut_spec", "use_backend",
-           "matmul_backend", "backend_matmul", "bind_backend"]
+__all__ = ["BACKENDS", "LutSpec", "BackendSpec", "make_lut_spec",
+           "use_backend", "matmul_backend", "backend_matmul", "bind_backend"]
 
 BACKENDS = ("dense", "codebook", "lut")
 
@@ -81,6 +81,35 @@ def make_lut_spec(codebook, fan_in: int, *, levels: int = 4096,
             f"no int{acc_bits} scale fits fan_in={fan_in}, max|w|={wmax:.3g}, "
             f"grid ±{amax}: coarsen the grid or widen the accumulator")
     return LutSpec(a_min=a_min, a_max=a_max, levels=levels, s=s)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """A (backend, lut grid) pair naming how ONE model's matmuls run.
+
+    Speculative decoding traces TWO models inside one jitted step — e.g. a
+    coarse-grid ``lut``-tier draft proposing tokens that a ``codebook``-tier
+    target verifies (serving/spec.py).  The ambient backend state is scoped
+    and re-entrant, so per-model overrides nest freely within a single
+    trace:
+
+        with target.scope():            # e.g. codebook
+            ... trace the verify forward ...
+            with draft.scope():         # e.g. lut, its own (coarser) grid
+                ... trace the draft proposal loop ...
+
+    Each scope applies only to the ops traced under it; the executable that
+    comes out runs both models' contractions through their own kernels.
+    The one-backend-per-jitted-function rule of ``bind_backend`` still
+    holds at the *outer* level: a function whose trace mixes scopes must
+    itself be jitted once per (target, draft) pairing.
+    """
+
+    name: str = "dense"
+    lut_spec: LutSpec | None = None
+
+    def scope(self):
+        return use_backend(self.name, self.lut_spec)
 
 
 class _State:

@@ -16,12 +16,21 @@ Knobs:
                                      int8 + per-token-per-head scales
     --prefix-cache / --no-prefix-cache
                                      content-addressed prompt-page sharing
+    --spec-draft {none,ngram,model}  speculative decoding (DESIGN.md §9):
+                                     parameter-free n-gram self-draft, or a
+                                     lower-tier model draft (the SAME
+                                     compressed params through the coarse
+                                     lut grid; needs --compress)
+    --spec-k N                       draft tokens per verify round
+    --top-k / --top-p                sampling filters (temperature > 0)
 
 CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --compress --requests 8 --max-batch 4 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --paged --kv-dtype int8 --requests 8 --max-batch 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --spec-draft ngram --spec-k 4 --requests 8 --max-new 24
 """
 
 from __future__ import annotations
@@ -35,7 +44,7 @@ import numpy as np
 import repro.configs as configs
 from repro.core.quantizer import cluster_params, init_state
 from repro.models.model_zoo import build
-from repro.serving import ServeEngine, to_codebook_params
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
 from repro.core.export import kv_cache_bytes, memory_report
 
 
@@ -61,9 +70,21 @@ def main():
     ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"))
     ap.add_argument("--prefix-cache", default=True,
                     action=argparse.BooleanOptionalAction)
+    ap.add_argument("--spec-draft", default="none",
+                    choices=("none", "ngram", "model"),
+                    help="speculative decoding draft (DESIGN.md §9)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per verify round")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
     if args.paged and args.uniform:
         ap.error("--paged serves through the slot pool; drop --uniform")
+    if args.spec_draft != "none" and args.uniform:
+        ap.error("speculative decoding runs through serve(); drop --uniform")
+    if args.spec_draft == "model" and not args.compress:
+        ap.error("--spec-draft model drafts with the compressed params "
+                 "through the lut backend; add --compress")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -98,13 +119,23 @@ def main():
         ap.error(f"--backend {args.backend} needs --compress (index-form "
                  "weights)")
 
+    spec = None
+    if args.spec_draft != "none":
+        spec = SpecConfig(
+            draft=args.spec_draft, k=args.spec_k,
+            # the model draft is the paper's lower tier: the SAME index-form
+            # params contracted through a coarse integer grid
+            draft_params=params if args.spec_draft == "model" else None,
+            draft_backend="lut", lut_levels=512)
     engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.max_new + 8,
+                         max_len=args.prompt_len + args.max_new + 8
+                         + (args.spec_k if spec else 0),
                          temperature=args.temperature,
                          backend=args.backend, max_batch=args.max_batch,
                          paged=args.paged, page_size=args.page_size,
                          kv_dtype=args.kv_dtype,
-                         prefix_cache=args.prefix_cache)
+                         prefix_cache=args.prefix_cache,
+                         top_k=args.top_k, top_p=args.top_p, spec=spec)
     rng = np.random.default_rng(0)
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]
                for _ in range(args.requests)]
@@ -115,6 +146,8 @@ def main():
     warm(prompts, args.max_new)
     if args.paged:
         engine.pool.reset_stats()
+    if spec is not None:
+        engine.spec_stats.reset()
 
     t0 = time.time()
     if args.uniform:
@@ -136,7 +169,15 @@ def main():
               f"({engine.pool.bytes_per_page() * st.peak_pages_in_use / 1e6:.3f}MB"
               f" peak vs {engine.dense_cache_bytes() / 1e6:.3f}MB dense slab), "
               f"prefix hit rate {100 * st.hit_rate:.0f}%, "
-              f"{st.cow_copies} CoW, {st.evictions} evictions")
+              f"{st.cow_copies} CoW, {st.evictions} evictions"
+              + (f", {st.truncated_pages} pages rolled back"
+                 if spec else ""))
+    if spec is not None:
+        ss = engine.spec_stats
+        print(f"[spec] {args.spec_draft} draft, k={args.spec_k}: "
+              f"{ss.rounds} rounds, acceptance "
+              f"{100 * ss.acceptance_rate:.0f}%, "
+              f"{ss.tokens_per_round:.1f} tokens/round")
     print("sample:", outs[0][:args.prompt_len], "->",
           outs[0][args.prompt_len:])
 

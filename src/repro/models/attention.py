@@ -20,7 +20,8 @@ from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init
 
 __all__ = ["AttnConfig", "attn_init", "attn_apply", "init_kv_cache",
            "rope", "flash_attention", "chunk_attention", "attn_decode_paged",
-           "attn_prefill_chunk", "quantize_kv", "dequantize_kv"]
+           "attn_prefill_chunk", "attn_verify_cached", "attn_verify_paged",
+           "quantize_kv", "dequantize_kv"]
 
 NEG_INF = -1e30
 
@@ -297,6 +298,95 @@ def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
         v_pool, v[:, None].astype(v_pool.dtype),
         (layer, write_pid, zero, zero, zero))
     out = dense(p["wo"], out.reshape(B, C, cfg.n_kv * cfg.groups * cfg.hd))
+    return out, k_pool, v_pool, new_scales
+
+
+# --- speculative verify (DESIGN.md §9) ---------------------------------------
+#
+# One batched forward scores the pending token plus K draft proposals per
+# slot.  The attention math is chunk_attention's: full attention to the valid
+# cached prefix (per-row ``valid_len``), causal among the K1 fresh tokens,
+# whose K/V enter via ``k_new``/``v_new`` before being written back — the
+# same read-before-write posture that lets XLA alias the cache in place.
+# Rejection needs NO cache surgery here: rejected tokens' K/V remain as
+# stale rows above the engine's rolled-back per-slot ``pos`` and every later
+# step's valid-length mask fences them until they are overwritten.
+
+def attn_verify_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
+                       k_all, v_all, layer, scales=None):
+    """Multi-token verify against the stacked (L, B, S, KV, hd) cache.
+
+    x: (B, K1, D) — per slot, the pending last token plus K draft proposals;
+    pos: (B, K1) absolute RoPE positions; insert_at: (B,) first cache row
+    written (K1 rows land contiguously, clamped to the cache end so retired
+    slots lockstep-verify harmlessly into their own tail); valid_len: (B,)
+    attendable cached prefix (== the engine's per-slot ``pos``).
+    scales: (ks_all, vs_all) when the cache is int8-quantized.
+    Returns (out (B, K1, D), k_all, v_all, new_scales).
+    """
+    B, K1, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    k_raw = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+    v_raw = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+    k_l, v_l = k_raw, v_raw
+    if scales is not None:
+        ks_all, vs_all = scales
+        ks_l = jax.lax.dynamic_index_in_dim(ks_all, layer, 0, keepdims=False)
+        vs_l = jax.lax.dynamic_index_in_dim(vs_all, layer, 0, keepdims=False)
+        k_l = dequantize_kv(k_raw, ks_l)
+        v_l = dequantize_kv(v_raw, vs_l)
+    out = chunk_attention(q, k_l, v_l, valid_len, k, v)
+    S = k_all.shape[2]
+    rows = jnp.clip(insert_at, 0, S - K1)
+    if scales is not None:
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        ks_all = jax.lax.dynamic_update_index_in_dim(
+            ks_all, _put_rows(ks_l, ksc, rows).astype(ks_all.dtype), layer, 0)
+        vs_all = jax.lax.dynamic_update_index_in_dim(
+            vs_all, _put_rows(vs_l, vsc, rows).astype(vs_all.dtype), layer, 0)
+        k, v, new_scales = kq, vq, (ks_all, vs_all)
+    else:
+        new_scales = None
+    k_all = jax.lax.dynamic_update_index_in_dim(
+        k_all, _put_rows(k_raw, k, rows).astype(k_all.dtype), layer, 0)
+    v_all = jax.lax.dynamic_update_index_in_dim(
+        v_all, _put_rows(v_raw, v, rows).astype(v_all.dtype), layer, 0)
+    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd))
+    return out, k_all, v_all, new_scales
+
+
+def attn_verify_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
+                      write_off, valid_len, k_pool, v_pool, layer,
+                      scales=None):
+    """Multi-token verify against gathered pages (the paged twin of
+    ``attn_verify_cached``).
+
+    write_pid/write_off: (B, K1) per-token physical page + in-page offset —
+    the K1 speculative tokens may straddle a page boundary, so each is
+    scattered individually; the engine routes positions beyond a slot's
+    live page span (speculative overshoot past the admission reservation)
+    and retired slots to the trash page 0.  valid_len: (B,) attendable
+    logical prefix.  Returns (out, k_pool, v_pool, new_scales).
+    """
+    B, K1, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
+    out = chunk_attention(q, k_l, v_l, valid_len, k, v)
+    if scales is not None:
+        ks_all, vs_all = scales
+        kq, ksc = quantize_kv(k)
+        vq, vsc = quantize_kv(v)
+        ks_all = ks_all.at[layer, write_pid, write_off].set(
+            ksc.astype(ks_all.dtype))
+        vs_all = vs_all.at[layer, write_pid, write_off].set(
+            vsc.astype(vs_all.dtype))
+        k, v, new_scales = kq, vq, (ks_all, vs_all)
+    else:
+        new_scales = None
+    k_pool = k_pool.at[layer, write_pid, write_off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[layer, write_pid, write_off].set(v.astype(v_pool.dtype))
+    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd))
     return out, k_pool, v_pool, new_scales
 
 

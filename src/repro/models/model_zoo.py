@@ -51,6 +51,13 @@ class Model:
     def decode(self, params, tokens, cache, mesh=None):
         return T.decode_step(params, self.cfg, tokens, cache, mesh)
 
+    def verify(self, params, tokens, cache, mesh=None):
+        """Score K1 tokens per slot in ONE forward (speculative verify,
+        DESIGN.md §9): logits at every position, K/V written at
+        pos..pos+K1−1, ``cache['pos']`` left for the caller to advance by
+        the accepted count.  Dispatches on ``page_table`` like decode."""
+        return T.verify_step(params, self.cfg, tokens, cache, mesh)
+
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return T.init_cache(self.cfg, batch, max_len, dtype)
 

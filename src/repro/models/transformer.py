@@ -35,7 +35,7 @@ from repro.distributed.sharding import shard_act, dp_axes
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["init_params", "loss_fn", "forward", "prefill", "decode_step",
-           "init_cache", "init_paged_cache", "prefill_chunk",
+           "init_cache", "init_paged_cache", "prefill_chunk", "verify_step",
            "attn_cfg", "moe_cfg", "ssm_cfg", "rwkv_cfg"]
 
 _PAGED_FAMILIES = ("dense", "moe")   # KV-cache LMs the paged path serves
@@ -603,6 +603,123 @@ def _decode_step_paged(params, cfg, tokens, cache, mesh):
         new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
     x = L.rms_norm(params["final_norm"], x)
     return _logits(params, cfg, x), new_cache
+
+
+def _verify_step_paged(params, cfg, tokens, cache, mesh):
+    """Paged multi-token verify: K1 tokens per slot against gathered pages.
+
+    Per-token write routing: logical position ``pos + i`` of slot b lives at
+    page ``page_table[b, (pos+i) // page]``; positions past the slot's page
+    span (speculative overshoot beyond the admission reservation — those
+    tokens are guaranteed to be clamped away by the engine) and retired
+    slots (all-zero page-table rows) route to the trash page 0.
+    """
+    if cfg.family not in _PAGED_FAMILIES:
+        raise NotImplementedError(cfg.family)
+    if mesh is not None:
+        raise NotImplementedError("paged serving is single-host")
+    dt = _dtype(cfg)
+    pos = cache["pos"]
+    pt = cache["page_table"]
+    B, K1 = tokens.shape
+    page = cache["k"].shape[2]
+    P = pt.shape[1]
+    S_cap = P * page
+    ppos = pos[:, None] + jnp.arange(K1)[None]                  # (B, K1)
+    pidx = ppos // page
+    write_pid = jnp.where(
+        pidx < P, pt[jnp.arange(B)[:, None], jnp.minimum(pidx, P - 1)], 0)
+    write_off = ppos % page
+    vlen = jnp.minimum(pos, S_cap)
+    x = L.embed_lookup(params["embed"], tokens).astype(dt)
+    acfg = attn_cfg(cfg)
+
+    def body(carry, p_l):
+        h, kc, vc, sc, l = carry
+        a, kc, vc, sc = A.attn_verify_paged(
+            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
+            page_table=pt, write_pid=write_pid, write_off=write_off,
+            valid_len=vlen, k_pool=kc, v_pool=vc, layer=l, scales=sc)
+        h = h + a
+        if "moe" in p_l:
+            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                            moe_cfg(cfg), mesh)
+        else:
+            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                         cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1), None
+
+    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"], _paged_scales(cache),
+               jnp.zeros((), jnp.int32)),
+        params["blocks"], unroll=_unroll(cfg))
+    new_cache = {**cache, "k": nk, "v": nv}
+    if nsc is not None:
+        new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    x = L.rms_norm(params["final_norm"], x)
+    return _logits(params, cfg, x), new_cache
+
+
+def verify_step(params, cfg, tokens, cache, mesh=None):
+    """Multi-token speculative verify (DESIGN.md §9).  tokens: (B, K1) — per
+    slot, the pending last token followed by K draft proposals.  Returns
+    (logits (B, K1, V) at EVERY position, new cache).
+
+    ``logits[:, i]`` is the target distribution for the token *after*
+    ``tokens[:, i]`` — one jitted forward replaces K1 sequential decode
+    steps.  K/V for all K1 tokens are written at rows pos..pos+K1−1 per
+    slot; ``cache['pos']`` comes back UNCHANGED — the caller advances it by
+    however many tokens survive rejection sampling.  Rolling back after a
+    rejection is therefore free: the rejected suffix is stale rows above
+    ``pos``, fenced by every later step's valid-length mask exactly like a
+    retired slot's tail.  ``cache['pos']`` must be the (B,) per-slot vector
+    form (scalars are broadcast); a cache carrying a ``page_table`` takes
+    the paged path.  KV-cache engine families only (dense/moe).
+    """
+    if "page_table" in cache:
+        return _verify_step_paged(params, cfg, tokens, cache, mesh)
+    if cfg.family not in _PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"verify_step serves KV-cache families {_PAGED_FAMILIES}; got "
+            f"{cfg.family!r}")
+    dt = _dtype(cfg)
+    B, K1 = tokens.shape
+    pos_any = cache["pos"]
+    pos_v = (pos_any if pos_any.ndim == 1
+             else jnp.broadcast_to(pos_any, (B,))).astype(jnp.int32)
+    S = cache["kv"]["k"].shape[2]
+    ins = jnp.minimum(pos_v, S - K1)           # clamp: retired slots
+    vlen = jnp.minimum(pos_v, S)
+    ppos = pos_v[:, None] + jnp.arange(K1)[None]                # (B, K1) RoPE
+    x = L.embed_lookup(params["embed"], tokens).astype(dt)
+    acfg = attn_cfg(cfg)
+    qkv = cfg.kv_quant
+
+    def body(carry, p_l):
+        h, kc, vc, sc, l = carry
+        a, kc, vc, sc = A.attn_verify_cached(
+            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
+            insert_at=ins, valid_len=vlen, k_all=kc, v_all=vc, layer=l,
+            scales=sc)
+        h = h + a
+        if "moe" in p_l:
+            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                            moe_cfg(cfg), mesh)
+        else:
+            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                         cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1), None
+
+    sc0 = ((cache["kv"]["k_scale"], cache["kv"]["v_scale"]) if qkv else None)
+    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+        body, (x, cache["kv"]["k"], cache["kv"]["v"], sc0,
+               jnp.zeros((), jnp.int32)),
+        params["blocks"], unroll=_unroll(cfg))
+    new_kv = {"k": nk, "v": nv}
+    if qkv:
+        new_kv.update(k_scale=nsc[0], v_scale=nsc[1])
+    x = L.rms_norm(params["final_norm"], x)
+    return _logits(params, cfg, x), {**cache, "kv": new_kv}
 
 
 def decode_step(params, cfg, tokens, cache, mesh=None):

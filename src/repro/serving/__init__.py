@@ -1,7 +1,10 @@
 """Serving: weight compression to index form + the batched inference
-engine with its dense/codebook/lut matmul backends (DESIGN.md §3)."""
+engine with its dense/codebook/lut matmul backends (DESIGN.md §3), the
+paged KV cache (§8), and speculative decoding (§9)."""
 
 from repro.serving.compress import to_codebook_params, index_dtype_for
 from repro.serving.engine import ServeEngine
 from repro.serving.kvcache import Admission, PagePool, PoolStats
-from repro.kernels.dispatch import BACKENDS, LutSpec, make_lut_spec, use_backend
+from repro.serving.spec import SpecConfig, SpecStats
+from repro.kernels.dispatch import (BACKENDS, BackendSpec, LutSpec,
+                                    make_lut_spec, use_backend)

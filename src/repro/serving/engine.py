@@ -42,6 +42,18 @@ decode runs against per-slot page tables, pages store int8 + scales
 (``prefix_cache``), and admission waits on free *pages* instead of free
 slots.  ``generate`` stays contiguous — it is the equivalence reference
 the paged path is tested against.
+
+**Speculative mode** (``spec=SpecConfig(...)``, DESIGN.md §9): each decode
+iteration becomes a *round* — a draft (parameter-free n-gram self-draft,
+or a second model at a lower discretization tier under its own matmul
+backend) proposes ``k`` tokens, the target scores all ``k+1`` positions in
+one ``verify_step`` forward, and rejection sampling keeps the accepted
+prefix plus one corrected/bonus token.  temperature=0 output is
+token-for-token identical to baseline decode; temperature>0 output is
+distributionally unbiased (and composes with ``top_k``/``top_p``).  The
+contiguous spec loop is still a single ``lax.while_loop`` (the n-gram
+draft is device-side); the paged spec path steps rounds from Python and
+rolls rejected pages back through ``PagePool.truncate``/``extend``.
 """
 
 from __future__ import annotations
@@ -57,6 +69,9 @@ import numpy as np
 from repro.kernels import dispatch
 from repro.models.model_zoo import Model
 from repro.serving.kvcache import PagePool
+from repro.serving.spec import (SpecConfig, SpecStats, filter_logits,
+                                ngram_propose, ngram_propose_host,
+                                spec_accept)
 
 __all__ = ["ServeEngine"]
 
@@ -68,6 +83,18 @@ def _bucket(n: int, lo: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _splice_rows(buf, toks, start, m):
+    """buf[b, start[b] + i] = toks[b, i] for i < m[b] — per-row variable-
+    length append, expressed as a full-row select (no scatter: clipped
+    duplicate column indices would have undefined write order)."""
+    B, W = buf.shape
+    rel = jnp.arange(W)[None] - start[:, None]               # (B, W)
+    pick = (rel >= 0) & (rel < m[:, None])
+    vals = jnp.take_along_axis(toks, jnp.clip(rel, 0, toks.shape[1] - 1),
+                               axis=1)
+    return jnp.where(pick, vals, buf)
 
 
 def _index_form_stats(params):
@@ -112,6 +139,14 @@ class ServeEngine:
                  engine).
     n_pages:     global pool size; 0 → 1 trash page + max_batch × ⌈max_len /
                  page_size⌉ (capacity parity with the contiguous slab).
+    top_k/top_p: sampling filters (temperature > 0 only): keep the k
+                 highest logits / the smallest nucleus whose mass reaches
+                 p.  Rejection sampling in spec mode composes with the
+                 SAME filtered distribution, so speculation stays unbiased.
+    spec:        a ``serving.spec.SpecConfig`` enables speculative decoding
+                 for ``serve()`` (DESIGN.md §9); ``generate()`` stays
+                 baseline — it is the parity reference spec mode is tested
+                 against.  ``spec_stats`` accumulates acceptance counters.
     """
 
     model: Model
@@ -128,6 +163,9 @@ class ServeEngine:
     kv_dtype: str = "bf16"
     prefix_cache: bool = True
     n_pages: int = 0
+    top_k: int = 0                 # 0 = off; sampling only (greedy is argmax)
+    top_p: float = 1.0             # 1.0 = off; nucleus filtering
+    spec: SpecConfig | None = None  # speculative decoding (DESIGN.md §9)
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -173,6 +211,55 @@ class ServeEngine:
         self._pool: PagePool | None = None
         if self.paged and self.mesh is not None:
             raise NotImplementedError("paged serving is single-host")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+        # --- speculative decoding (DESIGN.md §9) -----------------------------
+        self.spec_stats = SpecStats()
+        self._draft_bs = None
+        if self.spec is not None:
+            sp = self.spec
+            if sp.draft not in ("ngram", "model"):
+                raise ValueError(f"spec.draft {sp.draft!r} not in "
+                                 "('ngram', 'model')")
+            if sp.k < 1:
+                raise ValueError(f"spec.k must be >= 1, got {sp.k}")
+            if self.mesh is not None:
+                raise NotImplementedError("speculative serving is "
+                                          "single-host")
+            if sp.draft == "model":
+                if sp.draft_params is None:
+                    raise ValueError("spec.draft='model' needs "
+                                     "spec.draft_params")
+                dhas, dfan, dbook = _index_form_stats(sp.draft_params)
+                dlut = None
+                if sp.draft_backend not in dispatch.BACKENDS:
+                    raise ValueError(f"draft backend {sp.draft_backend!r} "
+                                     f"not in {dispatch.BACKENDS}")
+                if sp.draft_backend != "dense":
+                    if not dhas:
+                        raise ValueError(
+                            f"draft backend {sp.draft_backend!r} needs "
+                            "codebook-index draft_params")
+                    if sp.draft_backend == "lut":
+                        dlut = dispatch.make_lut_spec(
+                            dbook, dfan, levels=sp.lut_levels,
+                            a_range=sp.lut_range)
+                self._draft_bs = dispatch.BackendSpec(sp.draft_backend, dlut)
+                self._draft_prefill = jax.jit(dispatch.bind_backend(
+                    self._prefill_fn, name=sp.draft_backend, lut_spec=dlut))
+                self._draft_propose_j = jax.jit(self._draft_propose,
+                                                donate_argnums=(1,))
+            # contiguous spec decode: one while_loop, k+1 tokens per round
+            self._spec_loop = jax.jit(bb(self._spec_loop_fn),
+                                      static_argnames=("stop_on_event",),
+                                      donate_argnums=(2, 3, 4))
+            self._admit_kv = jax.jit(self._admit_kv_fn, donate_argnums=(0,))
+            # paged spec decode: Python-stepped rounds
+            self._verify = jax.jit(bb(self._verify_fn), donate_argnums=(1,))
+            self._accept = jax.jit(self._accept_fn)
 
     # --- jitted bodies -------------------------------------------------------
 
@@ -181,10 +268,13 @@ class ServeEngine:
                                            "lengths": lengths}, self.mesh)
 
     def _sample(self, logits, key):
+        """Greedy argmax, or temperature sampling through the top-k / top-p
+        filters (filtering is a no-op for argmax: the max always survives).
+        """
         lg = logits[:, -1, :self.model.cfg.vocab].astype(jnp.float32)
         if self.temperature > 0:
-            return jax.random.categorical(
-                key, lg / self.temperature).astype(jnp.int32)
+            lg = filter_logits(lg / self.temperature, self.top_k, self.top_p)
+            return jax.random.categorical(key, lg).astype(jnp.int32)
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
     def _grow_fn(self, cache):
@@ -230,6 +320,18 @@ class ServeEngine:
         c = jax.lax.while_loop(cond, body, c)
         return c[0], c[1], c[2], c[3], c[5], c[6]   # cache,last,active,n_gen,out,key
 
+    @staticmethod
+    def _splice(cache, c1, slot):
+        """Copy a batch-1 prefill cache into slot ``slot`` of a pooled
+        contiguous cache (KV planes + per-slot pos)."""
+        kv = dict(cache["kv"])
+        for k, src in c1["kv"].items():
+            start = (0, slot) + (0,) * (src.ndim - 2)
+            kv[k] = jax.lax.dynamic_update_slice(
+                cache["kv"][k], src.astype(cache["kv"][k].dtype), start)
+        pos = cache["pos"].at[slot].set(c1["pos"][0])
+        return {**cache, "kv": kv, "pos": pos}
+
     def _admit_fn(self, cache, c1, slot, first_tok, stop,
                   last, active, n_gen, stops, out):
         """Splice a freshly prefilled request (batch 1) into slot ``slot``.
@@ -238,13 +340,7 @@ class ServeEngine:
         (smaller) ``pos`` plus the decode-time valid-length mask evict
         whatever stale suffix remains without touching it.
         """
-        kv = dict(cache["kv"])
-        for k, src in c1["kv"].items():
-            start = (0, slot) + (0,) * (src.ndim - 2)
-            kv[k] = jax.lax.dynamic_update_slice(
-                cache["kv"][k], src.astype(cache["kv"][k].dtype), start)
-        pos = cache["pos"].at[slot].set(c1["pos"][0])
-        cache = {**cache, "kv": kv, "pos": pos}
+        cache = self._splice(cache, c1, slot)
         row = jnp.zeros((out.shape[1],), out.dtype).at[0].set(first_tok)
         return (cache,
                 last.at[slot].set(first_tok),
@@ -254,6 +350,197 @@ class ServeEngine:
                 n_gen.at[slot].set(1),
                 stops.at[slot].set(stop),
                 out.at[slot].set(row))
+
+    def _admit_kv_fn(self, cache, c1, slot):
+        """KV-only admission splice (the draft model's cache in spec mode —
+        the engine-side state updates already happened on the target)."""
+        return self._splice(cache, c1, slot)
+
+    # --- speculative decoding (DESIGN.md §9) ---------------------------------
+
+    def _draft_propose(self, dparams, dcache, last, key):
+        """k autoregressive draft steps under the draft's OWN backend scope
+        (it nests inside the target's — dispatch.BackendSpec).
+
+        Returns (proposals (B, k), q_dist (B, k, V) | None, dcache).  The
+        scan runs k+1 steps — the extra step writes the LAST proposal's K/V
+        (its own sampled token is discarded), so after a fully-accepted
+        round the draft cache is valid for every emitted token and the
+        caller's rollback (``dcache['pos'] = accepted length``) never
+        exposes an unwritten row.  Rejected draft rows become stale tail
+        entries fenced by the valid-length mask, exactly like the target's.
+        """
+        sp = self.spec
+        vocab = self.model.cfg.vocab
+        with self._draft_bs.scope():
+            def step(carry, k_i):
+                dc, tok = carry
+                logits, dc = self.model.decode(dparams, tok[:, None], dc,
+                                               None)
+                lg = logits[:, -1, :vocab].astype(jnp.float32)
+                if self.temperature > 0:
+                    lg = filter_logits(lg / self.temperature, self.top_k,
+                                       self.top_p)
+                    nxt = jax.random.categorical(k_i, lg).astype(jnp.int32)
+                    dist = jax.nn.softmax(lg, axis=-1)
+                else:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                    dist = jnp.zeros((), jnp.float32)   # unused at T=0
+                return (dc, nxt), (nxt, dist)
+
+            keys = jax.random.split(key, sp.k + 1)
+            (dcache, _), (toks, dists) = jax.lax.scan(
+                step, (dcache, last), keys)
+        q_dist = (dists[:sp.k].transpose(1, 0, 2)
+                  if self.temperature > 0 else None)
+        return toks[:sp.k].T, q_dist, dcache
+
+    def _accept_fn(self, logits, d_toks, q_dist, key):
+        lg = logits[..., :self.model.cfg.vocab].astype(jnp.float32)
+        return spec_accept(lg, d_toks, q_dist, key,
+                           temperature=self.temperature,
+                           top_k=self.top_k, top_p=self.top_p)
+
+    def _verify_fn(self, params, cache, tokens):
+        return self.model.verify(params, tokens, cache, self.mesh)
+
+    def _spec_loop_fn(self, params, dparams, cache, dcache, ctx, ctx_len,
+                      last, active, n_gen, stops, out, key, *,
+                      stop_on_event: bool):
+        """while_loop speculative decode: one iteration == one ROUND — k
+        draft proposals, one k+1-token verify forward, rejection sampling —
+        emitting 1..k+1 tokens per active slot.
+
+        ctx (B, C) / ctx_len (B,) hold each slot's full token history
+        (prompt + emitted): the n-gram self-draft reads it ON DEVICE, so
+        Python is still re-entered only O(#requests) times.  Rollback is
+        ``pos += emitted`` (< k+1 on rejection): the rejected suffix stays
+        as stale cache rows above pos, fenced by the next round's
+        valid-length mask.
+        """
+        sp = self.spec
+        K, K1 = sp.k, sp.k + 1
+        B, cap = out.shape
+
+        def cond(c):
+            active, steps, event = c[7], c[10], c[11]
+            go = jnp.any(active) & (steps < cap)
+            if stop_on_event:
+                go = go & ~event
+            return go
+
+        def body(c):
+            (cache, dcache, ctx, ctx_len, last, n_gen, stops, active, out,
+             key, steps, _ev, stt) = c
+            key, kd, ka = jax.random.split(key, 3)
+            if sp.draft == "ngram":
+                d_toks, q_dist = ngram_propose(
+                    ctx, ctx_len, k=K, n=sp.ngram), None
+            else:
+                d_toks, q_dist, dcache = self._draft_propose(
+                    dparams, dcache, last, kd)
+            tokens = jnp.concatenate([last[:, None], d_toks], axis=1)
+            logits, cache = self.model.verify(params, tokens, cache,
+                                              self.mesh)
+            n_acc, toks = self._accept_fn(logits, d_toks, q_dist, ka)
+            remaining = jnp.maximum(stops - n_gen, 0)
+            m = jnp.where(active, jnp.minimum(n_acc + 1, remaining), 0)
+            # full-row emission splice (a scatter at clipped columns would
+            # collide at the buffer edge; duplicate-index order is undefined)
+            out = _splice_rows(out, toks, n_gen, m)
+            ctx = _splice_rows(ctx, toks, ctx_len, m)
+            last = jnp.where(
+                active, toks[jnp.arange(B), jnp.maximum(m - 1, 0)], last)
+            cache = {**cache, "pos": cache["pos"] + m}
+            ctx_len = ctx_len + m
+            n_gen = n_gen + m
+            if sp.draft == "model":
+                # draft rollback: its cache is valid for every emitted token
+                # except the pending last (which it has not seen)
+                dcache = {**dcache, "pos": jnp.maximum(ctx_len - 1, 0)}
+            newly = active & (n_gen >= stops)
+            n_act = jnp.any(active).astype(jnp.int32)
+            stt = (stt[0] + n_act,                              # rounds
+                   stt[1] + jnp.sum(jnp.where(active, K, 0)),   # proposed
+                   stt[2] + jnp.sum(jnp.minimum(n_acc, m)),     # accepted
+                   stt[3] + jnp.sum(m))                         # emitted
+            return (cache, dcache, ctx, ctx_len, last, n_gen, stops,
+                    active & ~newly, out, key, steps + 1, jnp.any(newly),
+                    stt)
+
+        z = jnp.zeros((), jnp.int32)
+        c = (cache, dcache, ctx, ctx_len, last, n_gen, stops, active, out,
+             key, z, jnp.asarray(False), (z, z, z, z))
+        c = jax.lax.while_loop(cond, body, c)
+        # cache,dcache,ctx,ctx_len,last,n_gen,active,out,key,stats
+        return (c[0], c[1], c[2], c[3], c[4], c[5], c[7], c[8], c[9], c[12])
+
+    def _serve_spec(self, prompts, stops_req, key):
+        """Continuous batching with speculative rounds (contiguous cache):
+        the baseline serve() skeleton, with the while_loop swapped for
+        ``_spec_loop`` and a per-slot context buffer feeding the draft."""
+        sp = self.spec
+        n = len(prompts)
+        B, cap, C = self.max_batch, max(stops_req), self.max_len
+
+        cache = self.model.init_cache(B, self.max_len,
+                                      dtype=self._cache_dtype)
+        cache = {**cache, "pos": jnp.zeros((B,), jnp.int32)}
+        if sp.draft == "model":
+            dparams = sp.draft_params
+            dcache = self.model.init_cache(B, self.max_len,
+                                           dtype=self._cache_dtype)
+            dcache = {**dcache, "pos": jnp.zeros((B,), jnp.int32)}
+        else:
+            dparams = dcache = jnp.zeros((), jnp.int32)
+        ctx = jnp.zeros((B, C), jnp.int32)
+        ctx_len = jnp.zeros((B,), jnp.int32)
+        last = jnp.zeros((B,), jnp.int32)
+        active = jnp.zeros((B,), bool)
+        n_gen = jnp.zeros((B,), jnp.int32)
+        stops = jnp.ones((B,), jnp.int32)
+        out = jnp.zeros((B, cap), jnp.int32)
+
+        queue = deque(range(n))
+        slot_rid: list[int | None] = [None] * B
+        results: dict[int, list[int]] = {}
+
+        while queue or any(r is not None for r in slot_rid):
+            for b in [b for b in range(B) if slot_rid[b] is None]:
+                if not queue:
+                    break
+                rid = queue.popleft()
+                plen = len(prompts[rid])
+                toks1, len1 = self._pad_prompts([prompts[rid]])
+                lg1, c1 = self._prefill(self.params, toks1, len1)
+                key, sub = jax.random.split(key)
+                first = self._sample(lg1, sub)
+                cache, last, active, n_gen, stops, out = self._admit(
+                    cache, c1, b, first[0], stops_req[rid],
+                    last, active, n_gen, stops, out)
+                if sp.draft == "model":
+                    _, dc1 = self._draft_prefill(dparams, toks1, len1)
+                    dcache = self._admit_kv(dcache, dc1, b)
+                row = np.zeros((C,), np.int32)
+                row[:plen] = prompts[rid]
+                row[plen] = int(first[0])
+                ctx = ctx.at[b].set(jnp.asarray(row))
+                ctx_len = ctx_len.at[b].set(plen + 1)
+                slot_rid[b] = rid
+            (cache, dcache, ctx, ctx_len, last, n_gen, active, out, key,
+             stt) = self._spec_loop(
+                self.params, dparams, cache, dcache, ctx, ctx_len, last,
+                active, n_gen, stops, out, key, stop_on_event=True)
+            self.spec_stats.add(*(int(s) for s in stt))
+            act, gen = np.asarray(active), np.asarray(n_gen)
+            out_np = np.asarray(out)
+            for b in range(B):
+                rid = slot_rid[b]
+                if rid is not None and not act[b]:
+                    results[rid] = (list(prompts[rid])
+                                    + out_np[b, :gen[b]].tolist())
+                    slot_rid[b] = None
+        return [results[i] for i in range(n)]
 
     # --- paged path (DESIGN.md §8) -------------------------------------------
 
@@ -383,6 +670,151 @@ class ServeEngine:
                     slot_rid[b], slot_adm[b] = None, None
         return [results[i] for i in range(n)]
 
+    def _serve_paged_spec(self, prompts, stops_req, key):
+        """Paged continuous batching with speculative rounds, stepped from
+        Python: before each round every active slot ``extend``s its live
+        pages to cover the speculative span (pos + k + 1), and after
+        rejection sampling ``truncate`` returns the emptied tail pages to
+        the pool — rejected speculation is not just masked out (the
+        contiguous rollback), its pages stop existing.  The freed pages
+        stay reserved for the request, so the next extend cannot deadlock
+        (serving/kvcache.py).
+        """
+        sp = self.spec
+        pool = self.pool
+        for p, s in zip(prompts, stops_req):
+            if pool.pages_needed(len(p), s) > pool.usable_pages:
+                raise ValueError(
+                    f"request (prompt {len(p)} + {s} new) can never fit the "
+                    f"{pool.usable_pages}-page pool")
+        n = len(prompts)
+        B, cap, P = self.max_batch, max(stops_req), pool.pages_per_slot
+        K, K1 = sp.k, sp.k + 1
+
+        pt_np = np.zeros((B, P), np.int32)
+        pos_np = np.zeros((B,), np.int64)
+        last_np = np.zeros((B,), np.int64)
+        act_np = np.zeros((B,), bool)
+        gen_np = np.zeros((B,), np.int64)
+        stop_np = np.ones((B,), np.int64)
+        out_np = np.zeros((B, cap), np.int64)
+        slot_ctx: list[list | None] = [None] * B
+        if sp.draft == "model":
+            dparams = sp.draft_params
+            dcache = self.model.init_cache(B, self.max_len,
+                                           dtype=self._cache_dtype)
+            dcache = {**dcache, "pos": jnp.zeros((B,), jnp.int32)}
+
+        queue = deque(range(n))
+        slot_rid: list[int | None] = [None] * B
+        slot_adm: list = [None] * B
+        results: dict[int, list[int]] = {}
+
+        def set_row(b):
+            pt_np[b] = 0
+            pids = slot_adm[b].pids
+            pt_np[b, :len(pids)] = pids
+
+        while queue or any(r is not None for r in slot_rid):
+            for b in [b for b in range(B) if slot_rid[b] is None]:
+                if not queue:
+                    break
+                rid = queue[0]
+                adm = pool.admit(prompts[rid], stops_req[rid])
+                if adm is None:
+                    break
+                queue.popleft()
+                plen = len(prompts[rid])
+                logits = self._chunked_prefill(pool, prompts[rid], adm)
+                pool.register_prefill(adm)
+                pool.cow(adm)
+                key, sub = jax.random.split(key)
+                first = int(self._sample(logits, sub)[0])
+                slot_rid[b], slot_adm[b] = rid, adm
+                # release the worst-case tail: rounds extend() it back
+                # page-by-page as speculation actually needs it
+                pool.truncate(adm, plen)
+                set_row(b)
+                pos_np[b], last_np[b] = plen, first
+                act_np[b] = stops_req[rid] > 1
+                gen_np[b], stop_np[b] = 1, stops_req[rid]
+                out_np[b] = 0
+                out_np[b, 0] = first
+                slot_ctx[b] = list(prompts[rid]) + [first]
+                if sp.draft == "model":
+                    toks1, len1 = self._pad_prompts([prompts[rid]])
+                    _, dc1 = self._draft_prefill(dparams, toks1, len1)
+                    dcache = self._admit_kv(dcache, dc1, b)
+            if queue and all(r is None for r in slot_rid):
+                raise RuntimeError(
+                    "paged admission deadlock: no request in flight and the "
+                    "pool cannot admit the next one")
+
+            if any(act_np[b] for b in range(B) if slot_rid[b] is not None):
+                # --- one speculative round over the in-flight slots ----------
+                for b in range(B):
+                    if slot_rid[b] is not None and act_np[b]:
+                        pool.extend(slot_adm[b], int(pos_np[b]) + K1)
+                        set_row(b)
+                last_dev = jnp.asarray(last_np, jnp.int32)
+                if sp.draft == "ngram":
+                    d_np = np.zeros((B, K), np.int64)
+                    for b in range(B):
+                        if slot_rid[b] is not None and act_np[b]:
+                            d_np[b] = ngram_propose_host(
+                                slot_ctx[b], k=K, n=sp.ngram)
+                    d_toks, q_dist = jnp.asarray(d_np, jnp.int32), None
+                else:
+                    key, kd = jax.random.split(key)
+                    d_toks, q_dist, dcache = self._draft_propose_j(
+                        dparams, dcache, last_dev, kd)
+                tokens = jnp.concatenate([last_dev[:, None], d_toks], axis=1)
+                cache = {**pool.cache, "page_table": jnp.asarray(pt_np),
+                         "pos": jnp.asarray(pos_np, jnp.int32)}
+                logits, cache = self._verify(self.params, cache, tokens)
+                pool.cache = {k: v for k, v in cache.items()
+                              if k not in ("page_table", "pos")}
+                key, ka = jax.random.split(key)
+                n_acc, toks = self._accept(logits, d_toks, q_dist, ka)
+                n_acc, toks = np.asarray(n_acc), np.asarray(toks)
+                proposed = accepted = emitted = 0
+                for b in range(B):
+                    if slot_rid[b] is None or not act_np[b]:
+                        continue
+                    m = int(min(n_acc[b] + 1, stop_np[b] - gen_np[b]))
+                    emit = toks[b, :m].tolist()
+                    out_np[b, gen_np[b]:gen_np[b] + m] = emit
+                    slot_ctx[b].extend(int(t) for t in emit)
+                    pos_np[b] += m
+                    gen_np[b] += m
+                    last_np[b] = emit[-1]
+                    proposed += K
+                    accepted += min(int(n_acc[b]), m)
+                    emitted += m
+                    # rollback: emptied speculative tail pages go home
+                    pool.truncate(slot_adm[b], int(pos_np[b]))
+                    set_row(b)
+                    if gen_np[b] >= stop_np[b]:
+                        act_np[b] = False
+                self.spec_stats.add(1, proposed, accepted, emitted)
+                if sp.draft == "model":
+                    dpos = np.array(
+                        [len(slot_ctx[b]) - 1 if slot_ctx[b] else 0
+                         for b in range(B)], np.int32)
+                    dcache = {**dcache, "pos": jnp.asarray(dpos)}
+
+            for b in range(B):
+                rid = slot_rid[b]
+                if rid is not None and not act_np[b]:
+                    results[rid] = (list(prompts[rid])
+                                    + out_np[b, :gen_np[b]].tolist())
+                    pool.retire(slot_adm[b])
+                    pt_np[b] = 0
+                    pos_np[b] = 0
+                    slot_ctx[b] = None
+                    slot_rid[b], slot_adm[b] = None, None
+        return [results[i] for i in range(n)]
+
     # --- prompt plumbing -----------------------------------------------------
 
     def _pad_prompts(self, prompts):
@@ -436,8 +868,11 @@ class ServeEngine:
         harvested and the next queued request joins *between* decode steps.
         With ``paged=True`` admission additionally waits on free cache
         pages (the real capacity resource) and prompts stream through
-        page-sized prefill chunks.  Returns prompt + continuation per
-        request, in submission order.
+        page-sized prefill chunks.  With ``spec`` set, decode runs in
+        speculative rounds (k drafted tokens verified per forward,
+        DESIGN.md §9) — temperature=0 output is identical to non-spec
+        serve, token for token.  Returns prompt + continuation per request,
+        in submission order.
         """
         n = len(prompts)
         stops_req = ([max_new] * n if isinstance(max_new, int)
@@ -449,9 +884,17 @@ class ServeEngine:
                 raise ValueError("prompt + max_new exceeds max_len")
             if s < 1:
                 raise ValueError("max_new must be >= 1")
+            if self.spec is not None and len(p) + s + self.spec.k > self.max_len:
+                raise ValueError(
+                    "prompt + max_new + spec.k exceeds max_len (the verify "
+                    "forward needs k rows of speculative headroom)")
         key = jax.random.PRNGKey(0) if key is None else key
         if self.paged:
+            if self.spec is not None:
+                return self._serve_paged_spec(prompts, stops_req, key)
             return self._serve_paged(prompts, stops_req, key)
+        if self.spec is not None:
+            return self._serve_spec(prompts, stops_req, key)
         B, cap = self.max_batch, max(stops_req)
 
         cache = self.model.init_cache(B, self.max_len,

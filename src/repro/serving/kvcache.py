@@ -34,6 +34,13 @@ Admission (``admit``) is what the engine gates on: it returns None when the
 pool cannot supply the request's worst-case page count (prompt + stop
 tokens) even after evicting cache-only pages — free *pages*, not free
 slots, are the capacity resource.
+
+Speculative rollback (DESIGN.md §9): ``truncate`` returns
+rejection-emptied tail pages to the free list while keeping them
+*reserved* for their request (``reserved_extra`` — invisible to new
+admissions, so ``extend`` back up to the admission-time worst case can
+never deadlock), and copy-on-write-splits a shared boundary page before
+the request's next writes can land in it.
 """
 
 from __future__ import annotations
@@ -65,6 +72,7 @@ class PoolStats:
     cow_copies: int = 0
     evictions: int = 0
     peak_pages_in_use: int = 0
+    truncated_pages: int = 0     # pages returned by speculative rollback
 
     @property
     def hit_rate(self) -> float:
@@ -91,6 +99,11 @@ class Admission:
                   at retirement), else None.
     cow_tail:     logical index of a *shared* tail page the request must
                   copy-on-write before decode writes into it, else None.
+    reserve:      admission-time worst-case page count — the request's
+                  standing claim on the pool even while ``truncate`` has
+                  released some of its pages (speculative rollback).
+    n_live:       leading pids currently allocated; pids beyond it are 0
+                  (trash) placeholders until ``extend`` re-grows the span.
     """
 
     pids: list
@@ -100,6 +113,8 @@ class Admission:
     full_keys: list
     partial_key: tuple | None
     cow_tail: int | None
+    reserve: int = 0
+    n_live: int = 0
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -140,6 +155,10 @@ class PagePool:
         self.table: OrderedDict[tuple, int] = OrderedDict()  # key -> pid
         self.key_of: dict[int, tuple] = {}                   # pid -> key
         self.stats = PoolStats()
+        # pages released by truncate() but still owed to their in-flight
+        # request's reservation: invisible to new admissions so extend()
+        # back up to the reserve can never deadlock (DESIGN.md §9)
+        self.reserved_extra = 0
 
     # --- capacity -------------------------------------------------------------
 
@@ -158,7 +177,8 @@ class PagePool:
                    if self.ref[pid] == 1 and pid not in exclude)
 
     def can_admit(self, n_new: int, exclude=()) -> bool:
-        return len(self.free) + self._evictable(exclude) >= n_new
+        return (len(self.free) + self._evictable(exclude)
+                - self.reserved_extra >= n_new)
 
     def bytes_per_page(self) -> int:
         return sum(int(a.nbytes) for a in self.cache.values()) // self.n_pages
@@ -309,7 +329,8 @@ class PagePool:
             write_pids=write_pids,
             full_keys=[(c, keys[c]) for c in range(n_full)],
             partial_key=partial_key,
-            cow_tail=(n_chunks - 1) if partial_pid is not None else None)
+            cow_tail=(n_chunks - 1) if partial_pid is not None else None,
+            reserve=needed, n_live=needed)
 
     def register_prefill(self, adm: Admission):
         """Register the request's full prompt pages (immutable once written;
@@ -341,15 +362,76 @@ class PagePool:
         self._note_usage()
         return c
 
+    # --- speculative rollback (DESIGN.md §9) ----------------------------------
+
+    def truncate(self, adm: Admission, n_tokens: int) -> int:
+        """Roll a request's live page span back to ``n_tokens`` tokens.
+
+        Speculative rejection empties tail pages; they return to the free
+        list immediately (the pool pays for tokens actually alive, not for
+        speculation that lost) but stay **reserved** for this request
+        (``reserved_extra``): new admissions cannot claim them, so a later
+        ``extend`` back up to the admission-time worst case never
+        deadlocks.  The new boundary page — the one future decode/verify
+        writes will land in — is copy-on-write split first when it is
+        shared (refcount > 1: a prefix-cache registration or a concurrent
+        sharer), so rollback can never scribble over bytes another holder
+        still reads; its prefix-cache entry keeps pointing at the untouched
+        original, hash intact.  Returns the number of pages released.
+        Callers must rebuild their page-table row afterwards (both the CoW
+        swap and the freed tail change the physical mapping).
+        """
+        keep = _ceil_div(max(n_tokens, 0), self.page_size)
+        if keep > adm.n_live:
+            raise ValueError(
+                f"truncate to {n_tokens} tokens needs {keep} pages but only "
+                f"{adm.n_live} are live — extend() first")
+        if keep and n_tokens % self.page_size:
+            c = keep - 1                     # partially-filled boundary page
+            pid = adm.pids[c]
+            if self.ref[pid] > 1:
+                new = self._alloc()
+                self.cache = _copy_page(self.cache, np.int32(pid),
+                                        np.int32(new))
+                self._release(pid)
+                adm.pids[c] = new
+                self.stats.cow_copies += 1
+        freed = adm.n_live - keep
+        for c in range(keep, adm.n_live):
+            self._release(adm.pids[c])
+            adm.pids[c] = 0
+        adm.n_live = keep
+        self.reserved_extra += freed
+        self.stats.truncated_pages += freed
+        return freed
+
+    def extend(self, adm: Admission, n_tokens: int) -> None:
+        """Re-grow a request's live span to cover ``n_tokens`` tokens,
+        drawing back from the pages ``truncate`` released.  Capped at the
+        admission-time reservation: speculative overshoot beyond it routes
+        to the trash page instead — no page need exist for a token that is
+        guaranteed to be clamped away."""
+        need = min(_ceil_div(max(n_tokens, 0), self.page_size), adm.reserve)
+        if need <= adm.n_live:
+            return
+        for c in range(adm.n_live, need):
+            adm.pids[c] = self._alloc()
+        self.reserved_extra -= need - adm.n_live
+        adm.n_live = need
+        self._note_usage()
+
     def retire(self, adm: Admission):
         """Drop the retired request's page references.  A non-aligned
         prompt's tail page is registered first (decode pollution beyond the
         prompt is fenced by readers' valid-length masks and replaced under
         copy-on-write by any future sharer)."""
-        if self.prefix_enabled and adm.partial_key is not None:
+        if (self.prefix_enabled and adm.partial_key is not None
+                and adm.n_chunks <= adm.n_live):
             self._register(adm.partial_key, adm.pids[adm.n_chunks - 1])
-        for pid in adm.pids:
+        for pid in adm.pids[:adm.n_live]:
             self._release(pid)
+        self.reserved_extra -= adm.reserve - adm.n_live
+        adm.n_live = adm.reserve = 0
 
     def reset_stats(self):
         self.stats = PoolStats()

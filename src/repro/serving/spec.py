@@ -1,0 +1,265 @@
+"""Speculative decoding: discretized drafts verified by the full model
+(DESIGN.md §9).
+
+The paper's spectrum of networks — "fully continuous versions down to
+networks with bi-level weights and activations" — is exactly the
+draft/target pairing speculative decoding wants: a heavily-discretized
+draft (the same architecture through the coarse-grid ``lut`` backend, or a
+parameter-free n-gram self-draft) proposes ``k`` tokens per round, and the
+full-precision target scores all ``k+1`` positions in ONE batched forward
+(``transformer.verify_step``) instead of ``k+1`` sequential decode steps.
+
+Pieces (the ServeEngine wires them together):
+
+* **SpecConfig / SpecStats** — the knobs and the acceptance counters.
+* **ngram_propose** — device-side self-draft: match each slot's n-token
+  context suffix against every earlier position, propose the continuation
+  of the most recent match.  Pure gather/compare ops, so the whole
+  speculative decode loop stays a ``lax.while_loop`` (contiguous path) —
+  Python is re-entered O(#requests) times, same as baseline serve.
+* **spec_accept** — the Leviathan-style rejection rule.  temperature=0
+  reduces to "accept while the draft token equals the target argmax",
+  which makes speculative output token-for-token identical to baseline
+  decode; temperature>0 accepts ``x_i`` with prob ``min(1, p(x_i)/q(x_i))``
+  and resamples the first rejection from ``norm(max(0, p − q))``, so the
+  emitted prefix is distributionally unbiased with respect to the
+  (top-k / top-p filtered) target.
+* **filter_logits / target_dist** — shared top-k / nucleus filtering; the
+  engine's ``_sample`` and the rejection rule use the SAME filtered
+  distribution, so filtering composes with speculation instead of biasing
+  it.
+
+Rollback contract: verify writes K/V for all K1 tokens; acceptance advances
+each slot's ``pos`` by the emitted count only.  Contiguous caches need no
+surgery (stale rows above ``pos`` are fenced by valid-length masks);
+paged caches additionally return rejection-emptied tail pages to the pool
+through ``PagePool.truncate`` (they stay *reserved*, so the later
+``extend`` can never deadlock — see serving/kvcache.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SpecConfig", "SpecStats", "filter_logits", "target_dist",
+           "ngram_propose", "ngram_propose_host", "spec_accept"]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for ServeEngine.
+
+    draft:         'ngram' — parameter-free self-draft (repetition
+                   completion; zero extra FLOPs, wins on repetitive
+                   suffixes); 'model' — a second model of the same
+                   architecture run at a lower discretization tier
+                   (``draft_params`` + ``draft_backend``, e.g. index-form
+                   params through a coarse ``lut`` grid).
+    k:             draft tokens proposed per round (the verify forward
+                   scores k+1 positions).
+    ngram:         suffix length the self-draft matches.
+    draft_params:  params for the 'model' draft (index form for
+                   codebook/lut backends).
+    draft_backend: matmul backend the draft traces under — may differ from
+                   the target's (dispatch.BackendSpec scopes nest inside
+                   one jitted step).
+    lut_levels / lut_range: the draft's activation grid when
+                   draft_backend='lut'; a coarser grid than the target's
+                   IS the lower tier of the paper's spectrum.
+    """
+
+    draft: str = "ngram"
+    k: int = 4
+    ngram: int = 2
+    draft_params: object = None
+    draft_backend: str = "lut"
+    lut_levels: int = 4096
+    lut_range: tuple = (-16.0, 16.0)
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Cumulative acceptance counters (benchmarks read these)."""
+
+    rounds: int = 0            # verify forwards run
+    proposed: int = 0          # draft tokens offered to verification
+    accepted: int = 0          # draft tokens that survived (and were emitted)
+    emitted: int = 0           # total tokens emitted by spec rounds
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def tokens_per_round(self) -> float:
+        return self.emitted / self.rounds if self.rounds else 0.0
+
+    def add(self, rounds, proposed, accepted, emitted):
+        self.rounds += int(rounds)
+        self.proposed += int(proposed)
+        self.accepted += int(accepted)
+        self.emitted += int(emitted)
+
+    def reset(self):
+        self.rounds = self.proposed = self.accepted = self.emitted = 0
+
+
+# --- top-k / top-p filtering -------------------------------------------------
+
+def filter_logits(lg, top_k: int = 0, top_p: float = 1.0):
+    """Top-k / nucleus filtering on (..., V) f32 logits (already divided by
+    temperature).  Filtered entries drop to −1e30; ``top_k=0`` and
+    ``top_p>=1`` are no-ops.  Ties at the top-p threshold are kept (the
+    standard superset caveat); the argmax always survives, so greedy decode
+    is invariant under any filter setting.
+    """
+    V = lg.shape[-1]
+    if top_k and top_k < V:
+        kth = jnp.sort(lg, axis=-1)[..., V - top_k, None]
+        lg = jnp.where(lg < kth, NEG_INF, lg)
+    if top_p < 1.0:
+        srt = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = (cum - probs) < top_p          # mass BEFORE the token < p
+        thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        lg = jnp.where(lg < thr, NEG_INF, lg)
+    return lg
+
+
+def target_dist(logits, temperature: float, top_k: int = 0,
+                top_p: float = 1.0):
+    """The sampling distribution both ``ServeEngine._sample`` and
+    ``spec_accept`` draw from: temperature first, then filtering."""
+    return jax.nn.softmax(filter_logits(logits / temperature, top_k, top_p),
+                          axis=-1)
+
+
+# --- drafts ------------------------------------------------------------------
+
+def ngram_propose(ctx, ctx_len, *, k: int, n: int):
+    """Parameter-free self-draft: propose the k tokens that followed the
+    most recent earlier occurrence of each slot's n-token context suffix.
+
+    ctx: (B, C) token history (prompt + emitted so far); ctx_len: (B,)
+    valid lengths.  Pure compare/gather ops over the context buffer — cheap
+    enough to live inside the jitted decode loop.  Matches whose
+    continuation fits entirely inside the known context are preferred (a
+    match right at the end proposes mostly-unknown tokens); slots with no
+    match repeat their last token (any proposal is admissible — the verify
+    pass is what decides).  Returns (B, k) int32.
+    """
+    B, C = ctx.shape
+    pos = jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+    match = jnp.ones((B, C), bool)
+    for i in range(n):
+        suff = jnp.take_along_axis(
+            ctx, jnp.maximum(ctx_len[:, None] - n + i, 0), axis=1)   # (B, 1)
+        cand = jnp.take_along_axis(
+            ctx, jnp.clip(pos - (n - 1) + i, 0, C - 1), axis=1)      # (B, C)
+        match &= cand == suff
+    # j = end position of a candidate match; the suffix itself ends at
+    # ctx_len−1 and is excluded
+    valid = (pos >= n - 1) & (pos <= ctx_len[:, None] - 2)
+    full = valid & (pos + k <= ctx_len[:, None] - 1)    # continuation known
+    j_full = jnp.max(jnp.where(match & full, pos, -1), axis=1)
+    j_any = jnp.max(jnp.where(match & valid, pos, -1), axis=1)
+    j = jnp.where(j_full >= 0, j_full, j_any)                        # (B,)
+    take = j[:, None] + 1 + jnp.arange(k)[None]                      # (B, k)
+    prop = jnp.take_along_axis(ctx, jnp.clip(take, 0, C - 1), axis=1)
+    last = jnp.take_along_axis(ctx, jnp.maximum(ctx_len[:, None] - 1, 0),
+                               axis=1)
+    # positions past the known context (a match near the end) propose the
+    # last token instead of reading stale buffer bytes
+    prop = jnp.where(take <= ctx_len[:, None] - 1, prop, last)
+    return jnp.where(j[:, None] >= 0, prop, last).astype(jnp.int32)
+
+
+def ngram_propose_host(tokens, *, k: int, n: int) -> list[int]:
+    """Host-side twin of ``ngram_propose`` for the Python-stepped paged
+    path: one slot's token history in, k proposals out."""
+    t = np.asarray(tokens, np.int64)
+    L = len(t)
+    if L < n + 1:
+        return [int(t[-1])] * k
+    suff = t[L - n:]
+    best = -1
+    for j in range(L - 2, n - 2, -1):                 # most recent first
+        if np.array_equal(t[j - n + 1:j + 1], suff):
+            if best < 0:
+                best = j
+            if j + k <= L - 1:                        # full continuation
+                best = j
+                break
+    if best < 0:
+        return [int(t[-1])] * k
+    cont = t[best + 1:best + 1 + k]
+    out = [int(c) for c in cont]
+    return out + [int(t[-1])] * (k - len(out))
+
+
+# --- rejection sampling ------------------------------------------------------
+
+def spec_accept(logits, draft_tokens, draft_dist, key, *, temperature: float,
+                top_k: int = 0, top_p: float = 1.0):
+    """Resolve one verify round: accept a prefix of the draft, emit one
+    extra token (the rejection's resample, or the bonus token when every
+    proposal survived).
+
+    logits: (B, K+1, V) target verify logits (vocab-sliced, f32).
+    draft_tokens: (B, K) proposals.  draft_dist: (B, K, V) the draft's own
+    (filtered, post-temperature) distribution at each position, or None for
+    point-mass drafts (n-gram) — then q = onehot(draft) and the accept
+    probability degenerates to p(x_i).
+
+    Returns (n_acc (B,), toks (B, K+1)): ``toks[:, :n_acc]`` are the
+    accepted draft tokens and ``toks[:, n_acc]`` the correction/bonus — the
+    round emits ``n_acc + 1`` tokens (before the engine's stop-length
+    clamp).  temperature=0: accept while draft == target argmax, correction
+    = argmax ⇒ byte-identical to baseline greedy decode.  temperature>0:
+    the Leviathan et al. 2023 rule over the top-k/p filtered target, which
+    keeps the emitted distribution exactly the target's.
+    """
+    B, K1, V = logits.shape
+    K = K1 - 1
+    if temperature <= 0:
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, K1)
+        acc = draft_tokens == tgt[:, :K]
+        n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        # accepted drafts equal the argmax, so tgt doubles as the emission
+        return n_acc, tgt
+    p = target_dist(logits, temperature, top_k, top_p)            # (B, K1, V)
+    p_draft = jnp.take_along_axis(p[:, :K], draft_tokens[..., None],
+                                  axis=-1)[..., 0]                # (B, K)
+    if draft_dist is None:
+        q_draft = jnp.ones_like(p_draft)
+        q_full = jax.nn.one_hot(draft_tokens, V, dtype=p.dtype)
+    else:
+        q_full = draft_dist
+        q_draft = jnp.take_along_axis(q_full, draft_tokens[..., None],
+                                      axis=-1)[..., 0]
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, K))
+    acc = u * jnp.maximum(q_draft, 1e-30) < p_draft   # u < min(1, p/q)
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    rows = jnp.arange(B)
+    idx = jnp.minimum(n_acc, K)
+    p_sel = p[rows, idx]                                          # (B, V)
+    q_pad = jnp.concatenate([q_full,
+                             jnp.zeros((B, 1, V), q_full.dtype)], axis=1)
+    res = jnp.clip(p_sel - q_pad[rows, idx], 0.0, None)
+    # q ≥ p everywhere ⇒ empty residual (can only happen under filtering
+    # mismatches / numerics); fall back to the target itself
+    res = jnp.where(jnp.sum(res, axis=-1, keepdims=True) > 1e-9, res, p_sel)
+    corr = jax.random.categorical(
+        kr, jnp.log(jnp.maximum(res, 1e-30)), axis=-1).astype(jnp.int32)
+    toks = jnp.concatenate(
+        [draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    toks = toks.at[rows, idx].set(corr)
+    return n_acc, toks

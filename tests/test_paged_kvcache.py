@@ -219,3 +219,117 @@ def test_paged_rejects_recurrent_families():
     model = build(cfg)
     with pytest.raises(NotImplementedError):
         model.init_paged_cache(4, 4)
+
+
+# --- speculative rollback: truncate / extend (DESIGN.md §9) ------------------
+
+def test_truncate_frees_tail_pages_and_extend_regrows(tiny):
+    """Rollback returns emptied tail pages to the free list but keeps them
+    reserved (invisible to admission) so extend can never deadlock."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, prefix_cache=False)
+    pool = eng.pool
+    prompt = [1, 2, 3, 4, 5]                       # 2 prompt pages
+    adm = pool.admit(prompt, 10)                   # worst case: 4 pages
+    assert adm.reserve == adm.n_live == 4
+    free0 = len(pool.free)
+
+    freed = pool.truncate(adm, len(prompt))        # keep ceil(5/4) = 2
+    assert freed == 2 and adm.n_live == 2
+    assert len(pool.free) == free0 + 2
+    assert pool.reserved_extra == 2
+    assert adm.pids[2:] == [0, 0]                  # trash placeholders
+    # the freed pages are NOT admissible supply for newcomers
+    assert not pool.can_admit(len(pool.free) + pool._evictable())
+
+    pool.extend(adm, len(prompt) + 6)              # ceil(11/4) = 3 pages
+    assert adm.n_live == 3 and pool.reserved_extra == 1
+    assert all(p != 0 for p in adm.pids[:3])
+    pool.extend(adm, 100)                          # capped at the reserve
+    assert adm.n_live == adm.reserve == 4
+    assert pool.reserved_extra == 0
+
+    with pytest.raises(ValueError, match="extend"):
+        pool.truncate(adm, 64)                     # beyond the live span
+
+    pool.retire(adm)
+    assert pool.reserved_extra == 0
+    assert pool.pages_in_use() == 0
+    assert sorted(pool.free) == list(range(1, pool.n_pages))
+
+
+def test_truncate_cow_splits_shared_boundary_page(tiny):
+    """A rollback whose boundary page is shared via the prefix cache must
+    copy-on-write first: the cached page's bytes and its hash entry stay
+    intact while the request gets a private twin."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4)
+    prompt = [7, 8, 9, 10, 11, 12]                 # partial tail (6 % 4)
+    eng.serve([prompt], max_new=5)                 # registers tail at retire
+    pool = eng.pool
+    table_before = dict(pool.table)
+
+    adm = pool.admit(prompt, 5)                    # shares the cached pages
+    assert adm.cow_tail is not None
+    shared_pid = adm.pids[adm.n_chunks - 1]
+    assert pool.ref[shared_pid] > 1
+    before = {k: np.asarray(v[:, shared_pid]).copy()
+              for k, v in pool.cache.items()}
+
+    cows0 = pool.stats.cow_copies
+    pool.truncate(adm, len(prompt))                # boundary page is shared
+    assert pool.stats.cow_copies == cows0 + 1
+    assert adm.pids[adm.n_chunks - 1] != shared_pid
+    after = {k: np.asarray(v[:, shared_pid]) for k, v in pool.cache.items()}
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k], err_msg=k)
+    assert dict(pool.table) == table_before        # hashes consistent
+    assert pool.key_of[shared_pid] in table_before
+    pool.retire(adm)
+
+
+def test_spec_paged_serve_pool_invariants(tiny):
+    """After a speculative paged serve every rollback claim is settled:
+    reserved_extra is zero, refcounts are zero or cache-only, and a second
+    serve of the same prompts still earns prefix hits with identical
+    output."""
+    from repro.serving import SpecConfig
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, spec=SpecConfig(draft="ngram", k=3))
+    first = eng.serve(PROMPTS, max_new=6)
+    pool = eng.pool
+    assert pool.reserved_extra == 0
+    assert pool.stats.truncated_pages > 0          # rollback actually ran
+    registered = set(pool.key_of)
+    assert all(pool.ref[p] == 1 for p in registered)
+    assert all(pool.ref[p] == 0 for p in range(1, pool.n_pages)
+               if p not in registered)
+    again = eng.serve(PROMPTS, max_new=6)
+    assert again == first
+    assert pool.stats.hit_pages > 0
+
+
+# --- DESIGN.md §8 caveat: int8 chunked-prefill quantized readback ------------
+
+def test_int8_chunked_prefill_drift_bounded(tiny):
+    """Later chunks of an int8 paged prefill read back quantized earlier
+    pages; the resulting last-position logit drift vs float pages must stay
+    bounded (regression tripwire for the §8 caveat — measured ~0.6% of the
+    logit spread on the test model, asserted < 5%)."""
+    cfg, model, params = tiny
+    prompt = [int(t) for t in
+              np.random.default_rng(3).integers(0, cfg.vocab, 19)]
+    lg = {}
+    for kv in ("bf16", "int8"):    # 'bf16' stores f32 pages for f32 models
+        eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                          page_size=4, kv_dtype=kv, prefix_cache=False)
+        adm = eng.pool.admit(prompt, 2)
+        out = eng._chunked_prefill(eng.pool, prompt, adm)
+        lg[kv] = np.asarray(out[0, 0, :cfg.vocab])
+        eng.pool.retire(adm)
+    spread = lg["bf16"].max() - lg["bf16"].min()
+    drift = np.abs(lg["bf16"] - lg["int8"]).max()
+    assert drift / spread < 0.05, (drift, spread)

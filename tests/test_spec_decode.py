@@ -1,0 +1,284 @@
+"""Speculative decoding (DESIGN.md §9).
+
+Ground truth is the baseline ServeEngine: at temperature=0 speculative
+serve must reproduce it token for token — for both contiguous and paged
+caches, across dense/codebook/lut target backends, for the n-gram
+self-draft and the model draft (including the marquee pairing: a
+coarse-grid lut-tier draft proposing for a codebook-tier target).  At
+temperature>0 the output must be reproducible per PRNG key and compose
+with top-k / top-p filtering.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
+from repro.serving.spec import (filter_logits, ngram_propose,
+                                ngram_propose_host, spec_accept)
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]
+STOPS = [6, 3, 5, 1]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def cparams(tiny):
+    cfg, model, params = tiny
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 1000,
+                               jax.random.PRNGKey(1))
+    return to_codebook_params(pq, wq, state, min_size=1024)
+
+
+@pytest.fixture(scope="module")
+def baseline(tiny):
+    cfg, model, params = tiny
+    return ServeEngine(model, params, max_len=64,
+                       max_batch=2).serve(PROMPTS, max_new=STOPS)
+
+
+# --- pieces ------------------------------------------------------------------
+
+def test_spec_accept_greedy_prefix():
+    """T=0: accept while draft == target argmax; emission is the argmax row,
+    so the emitted sequence equals k+1 baseline greedy steps."""
+    logits = np.full((1, 4, 8), -5.0, np.float32)
+    for i, t in enumerate((3, 1, 4, 2)):            # target argmax per pos
+        logits[0, i, t] = 5.0
+    n_acc, toks = spec_accept(jnp.asarray(logits),
+                              jnp.asarray([[3, 1, 7]]), None,
+                              jax.random.PRNGKey(0), temperature=0.0)
+    assert int(n_acc[0]) == 2                       # 3, 1 accepted; 7 != 4
+    assert toks[0, :3].tolist() == [3, 1, 4]        # correction at idx 2
+
+    n_acc, toks = spec_accept(jnp.asarray(logits),
+                              jnp.asarray([[3, 1, 4]]), None,
+                              jax.random.PRNGKey(0), temperature=0.0)
+    assert int(n_acc[0]) == 3                       # all in + bonus
+    assert toks[0].tolist() == [3, 1, 4, 2]
+
+
+def test_spec_accept_certain_target_always_accepts():
+    """T>0 with a near-deterministic target: proposals matching its mode are
+    accepted with probability ~1, mismatches rejected and corrected."""
+    logits = np.full((1, 3, 8), -30.0, np.float32)
+    for i, t in enumerate((5, 2, 6)):
+        logits[0, i, t] = 30.0
+    for seed in range(5):
+        n_acc, toks = spec_accept(jnp.asarray(logits),
+                                  jnp.asarray([[5, 2]]), None,
+                                  jax.random.PRNGKey(seed), temperature=1.0)
+        assert int(n_acc[0]) == 2 and toks[0].tolist() == [5, 2, 6]
+        n_acc, toks = spec_accept(jnp.asarray(logits),
+                                  jnp.asarray([[5, 0]]), None,
+                                  jax.random.PRNGKey(seed), temperature=1.0)
+        assert int(n_acc[0]) == 1 and toks[0, :2].tolist() == [5, 2]
+
+
+def test_filter_logits_topk_topp():
+    lg = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])
+    k2 = filter_logits(lg, top_k=2)
+    assert (np.asarray(k2[0]) > -1e29).tolist() == [False, False, True, True]
+    # top-p just over the top token's mass keeps the top two
+    p = jax.nn.softmax(lg, -1)[0]
+    pp = filter_logits(lg, top_p=float(p[3]) + 1e-3)
+    assert (np.asarray(pp[0]) > -1e29).tolist() == [False, False, True, True]
+    # argmax always survives any filter
+    assert int(jnp.argmax(filter_logits(lg, top_k=1, top_p=0.01))) == 3
+
+
+def test_ngram_propose_repeats_pattern():
+    """A periodic context proposes its own continuation, on device and on
+    host identically."""
+    pat = [7, 8, 9]
+    ctx_list = pat * 4
+    C_ = 32
+    ctx = np.zeros((1, C_), np.int32)
+    ctx[0, :len(ctx_list)] = ctx_list
+    dev = ngram_propose(jnp.asarray(ctx),
+                        jnp.asarray([len(ctx_list)], jnp.int32), k=4, n=2)
+    host = ngram_propose_host(ctx_list, k=4, n=2)
+    assert dev[0].tolist() == host == [7, 8, 9, 7]
+
+
+def test_ngram_propose_no_match_falls_back():
+    ctx = np.zeros((1, 16), np.int32)
+    ctx[0, :4] = [1, 2, 3, 4]
+    dev = ngram_propose(jnp.asarray(ctx), jnp.asarray([4], jnp.int32),
+                       k=3, n=2)
+    assert dev[0].tolist() == [4, 4, 4]             # repeat last token
+    assert ngram_propose_host([1, 2, 3, 4], k=3, n=2) == [4, 4, 4]
+
+
+# --- greedy parity (the acceptance bar) --------------------------------------
+
+def test_ngram_spec_matches_baseline_contiguous(tiny, baseline):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2,
+                      spec=SpecConfig(draft="ngram", k=3))
+    assert eng.serve(PROMPTS, max_new=STOPS) == baseline
+    assert eng.spec_stats.rounds > 0 and eng.spec_stats.emitted > 0
+
+
+def test_model_draft_spec_matches_baseline(tiny, baseline):
+    """Draft == target (dense): every proposal survives verification up to
+    the stop-length clamp, and output is byte-identical."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2,
+                      spec=SpecConfig(draft="model", k=3,
+                                      draft_params=params,
+                                      draft_backend="dense"))
+    assert eng.serve(PROMPTS, max_new=STOPS) == baseline
+    st = eng.spec_stats
+    assert st.accepted > 0 and st.tokens_per_round > 1.0
+
+
+def test_spec_quantized_target_backends(tiny, cparams):
+    """codebook / lut targets: spec serve == baseline serve on index-form
+    params, token for token."""
+    cfg, model, params = tiny
+    for be in ("codebook", "lut"):
+        want = ServeEngine(model, cparams, max_len=64, max_batch=2,
+                           backend=be).serve(PROMPTS[:2], max_new=4)
+        got = ServeEngine(model, cparams, max_len=64, max_batch=2,
+                          backend=be,
+                          spec=SpecConfig(draft="ngram", k=3)
+                          ).serve(PROMPTS[:2], max_new=4)
+        assert got == want, be
+
+
+def test_lut_draft_codebook_target(tiny, cparams):
+    """The paper-spectrum pairing: the SAME index-form params served as a
+    coarse-grid lut-tier draft proposing for the codebook-tier target —
+    two backends, two LUT grids, one jitted round."""
+    cfg, model, params = tiny
+    want = ServeEngine(model, cparams, max_len=64, max_batch=2,
+                       backend="codebook").serve(PROMPTS[:2], max_new=5)
+    eng = ServeEngine(model, cparams, max_len=64, max_batch=2,
+                      backend="codebook",
+                      spec=SpecConfig(draft="model", k=3,
+                                      draft_params=cparams,
+                                      draft_backend="lut", lut_levels=512))
+    assert eng.serve(PROMPTS[:2], max_new=5) == want
+    assert eng.spec_stats.proposed > 0
+
+
+def test_paged_spec_matches_baseline(tiny, baseline):
+    """Paged spec (Python-stepped rounds + PagePool truncate/extend
+    rollback) reproduces the contiguous baseline, bf16 and int8 pages."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4, spec=SpecConfig(draft="ngram", k=3))
+    assert eng.serve(PROMPTS, max_new=STOPS) == baseline
+    assert eng.spec_stats.rounds > 0
+    pool = eng.pool
+    assert pool.reserved_extra == 0                 # every claim settled
+    # int8 pages: parity vs the non-spec int8 paged engine
+    want8 = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                        page_size=4, kv_dtype="int8"
+                        ).serve(PROMPTS, max_new=6)
+    got8 = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                       page_size=4, kv_dtype="int8",
+                       spec=SpecConfig(draft="ngram", k=3)
+                       ).serve(PROMPTS, max_new=6)
+    assert got8 == want8
+
+
+def test_paged_spec_model_draft(tiny, baseline):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2, paged=True,
+                      page_size=4,
+                      spec=SpecConfig(draft="model", k=3,
+                                      draft_params=params,
+                                      draft_backend="dense"))
+    assert eng.serve(PROMPTS, max_new=STOPS) == baseline
+    assert eng.spec_stats.accepted > 0
+
+
+def test_spec_repetitive_workload_accepts(tiny):
+    """On a repetitive-suffix workload the self-draft's acceptance rate is
+    material — the condition under which speculation pays."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=96, max_batch=2,
+                      spec=SpecConfig(draft="model", k=4,
+                                      draft_params=params,
+                                      draft_backend="dense"))
+    eng.serve(PROMPTS[:2], max_new=24)
+    assert eng.spec_stats.acceptance_rate > 0.5
+
+
+# --- sampling ----------------------------------------------------------------
+
+def test_spec_topk1_sampling_equals_greedy(tiny, baseline):
+    """top_k=1 collapses sampling to argmax — with and without spec — so
+    rejection sampling provably composes with the filtered distribution."""
+    cfg, model, params = tiny
+    want = ServeEngine(model, params, max_len=64,
+                       max_batch=2).serve(PROMPTS, max_new=5)
+    got_plain = ServeEngine(model, params, max_len=64, max_batch=2,
+                            temperature=0.7, top_k=1
+                            ).serve(PROMPTS, max_new=5)
+    assert got_plain == want
+    got_spec = ServeEngine(model, params, max_len=64, max_batch=2,
+                           temperature=0.7, top_k=1,
+                           spec=SpecConfig(draft="ngram", k=3)
+                           ).serve(PROMPTS, max_new=5)
+    assert got_spec == want
+    # a tiny nucleus keeps only the top token: same collapse through top_p
+    got_p = ServeEngine(model, params, max_len=64, max_batch=2,
+                        temperature=0.7, top_p=1e-6,
+                        spec=SpecConfig(draft="ngram", k=3)
+                        ).serve(PROMPTS, max_new=5)
+    assert got_p == want
+
+
+def test_spec_sampling_reproducible_per_key(tiny):
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2,
+                      temperature=0.8, top_k=50, top_p=0.9,
+                      spec=SpecConfig(draft="ngram", k=3))
+    o1 = eng.serve(PROMPTS[:2], max_new=5, key=jax.random.PRNGKey(7))
+    o2 = eng.serve(PROMPTS[:2], max_new=5, key=jax.random.PRNGKey(7))
+    o3 = eng.serve(PROMPTS[:2], max_new=5, key=jax.random.PRNGKey(8))
+    assert o1 == o2
+    assert o1 != o3, "spec sampling ignored the PRNG key"
+    assert all(0 <= t < cfg.vocab for o in o1 for t in o)
+
+
+def test_topk_topp_plain_sampling_valid(tiny):
+    """Non-spec sampling path: filters restrict the support."""
+    cfg, model, params = tiny
+    eng = ServeEngine(model, params, max_len=64, max_batch=2,
+                      temperature=1.5, top_k=5)
+    outs = eng.serve(PROMPTS[:2], max_new=6, key=jax.random.PRNGKey(3))
+    assert all(0 <= t < cfg.vocab for o in outs for t in o)
+
+
+# --- guards ------------------------------------------------------------------
+
+def test_spec_config_validation(tiny):
+    cfg, model, params = tiny
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeEngine(model, params, spec=SpecConfig(draft="model"))
+    with pytest.raises(ValueError, match="draft"):
+        ServeEngine(model, params, spec=SpecConfig(draft="nope"))
+    with pytest.raises(ValueError, match="spec.k"):
+        ServeEngine(model, params, spec=SpecConfig(k=0))
+    with pytest.raises(ValueError, match="top_p"):
+        ServeEngine(model, params, top_p=0.0)
+    eng = ServeEngine(model, params, max_len=16,
+                      spec=SpecConfig(draft="ngram", k=4))
+    with pytest.raises(ValueError, match="headroom"):
+        eng.serve([[1, 2, 3, 4]], max_new=10)       # 4+10+4 > 16
