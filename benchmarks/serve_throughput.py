@@ -25,7 +25,16 @@ Measures tokens/sec and mean per-request latency for:
 Every run (full and ``--smoke``) also emits a machine-readable
 ``BENCH_serve.json`` (``--json-out``) — tokens/sec per backend/batch, KV
 bytes, prefix hit rate, spec acceptance — so the perf trajectory is
-tracked across PRs.
+tracked across PRs.  All workload generation derives from ``--seed``
+(default 0): prompts, shared prefixes, and the spec probe candidates are
+identical run-to-run, so the numbers and the ``--smoke`` CI gate are
+reproducible.
+
+``--tp 1 2 4`` additionally measures tensor-parallel serving
+(DESIGN.md §10) at each degree — tok/s and per-device KV bytes, each
+degree in its own subprocess with that many forced host devices — and
+merges a ``tp`` section into ``BENCH_serve.json``, so the perf trajectory
+captures *scaling*, not just single-chip numbers.
 
 Acceptance targets: the jitted decode loop >= 5x the seed per-token loop at
 batch 8 (ISSUE 1); the paged int8 cache >= 2x smaller than the bf16 dense
@@ -44,6 +53,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -97,16 +108,18 @@ def shared_prefix_prompts(rng, vocab, n, prefix_len, suffix_len):
 
 
 def repetitive_workload(eng, vocab, *, n_prompts=2, motif_len=3, reps=6,
-                        max_new=64, max_seeds=80):
+                        max_new=64, max_seeds=80, seed=0):
     """Prompts whose BASELINE greedy continuation settles into a constant
     run — the workload the n-gram self-draft is built for.  Random-init
     models fall into short cycles, but *which* prompts cycle depends on the
     weights, so candidates are probed against the live model (a full
-    max_batch-wide serve per probe batch, not one request at a time)."""
+    max_batch-wide serve per probe batch, not one request at a time).
+    Candidate motifs derive from ``seed`` — same seed, same workload."""
     good = []
     B = eng.max_batch
     cands = [[int(t) for t in
-              np.random.default_rng(s).integers(0, vocab, motif_len)] * reps
+              np.random.default_rng((seed, s)).integers(0, vocab, motif_len)]
+             * reps
              for s in range(max_seeds)]
     for i in range(0, max_seeds, B):
         batch = cands[i:i + B]
@@ -119,13 +132,14 @@ def repetitive_workload(eng, vocab, *, n_prompts=2, motif_len=3, reps=6,
     return good[:n_prompts]
 
 
-def bench_spec(model, params, *, max_new=64, k=6, reps=3):
+def bench_spec(model, params, *, max_new=64, k=6, reps=3, seed=0):
     """n-gram speculative decode vs baseline on the repetitive-suffix
     workload.  Returns a JSON-ready dict with a ``parity`` flag (the
     smoke gate turns parity=False into a FAIL instead of crashing the
     remaining checks), or None when no cycling prompt was found."""
     probe = ServeEngine(model, params, max_len=96, max_batch=4)
-    prompts = repetitive_workload(probe, model.cfg.vocab, max_new=max_new)
+    prompts = repetitive_workload(probe, model.cfg.vocab, max_new=max_new,
+                                  seed=seed)
     if len(prompts) < 2:
         return None
     ml = len(prompts[0]) + max_new + 8
@@ -147,6 +161,85 @@ def bench_spec(model, params, *, max_new=64, k=6, reps=3):
             "baseline_tok_s": n_tok / tb, "spec_tok_s": n_tok / ts,
             "speedup": tb / ts, "acceptance_rate": st.acceptance_rate,
             "tokens_per_round": st.tokens_per_round, "rounds": st.rounds}
+
+
+_TP_SENTINEL = "TP_BENCH_RESULT "
+
+
+def tp_child(model, cfg, params, args) -> dict:
+    """One TP degree's measurement, inside its own forced-device process:
+    contiguous and paged-int8 serve tok/s plus per-device KV bytes (both
+    cache layouts shard their sequence axis over `model`, so bytes/device
+    = total/tp — the scaling the §10 layout buys)."""
+    tp = args.tp_child
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(1, tp)
+    rng = np.random.default_rng(args.seed)
+    max_len = args.prompt_len + args.max_new + 8
+    max_len += (-max_len) % tp
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]
+               for _ in range(8)]
+    n_tok = len(prompts) * args.max_new
+
+    eng = ServeEngine(model, params, max_len=max_len, max_batch=8, mesh=mesh)
+    dt = bench(lambda: eng.serve(prompts, max_new=args.max_new), args.reps)
+    peng = ServeEngine(model, params, max_len=max_len, max_batch=8,
+                       mesh=mesh, paged=True, page_size=args.page_size,
+                       kv_dtype="int8")
+    pdt = bench(lambda: peng.serve(prompts, max_new=args.max_new), args.reps)
+    return {"tp": tp, "devices": len(jax.devices()),
+            "tok_s": n_tok / dt, "paged_int8_tok_s": n_tok / pdt,
+            "kv_slab_bytes_per_device": eng.dense_cache_bytes() // tp,
+            "kv_pool_bytes_per_device": peng.pool.bytes_total() // tp}
+
+
+def run_tp(args) -> int:
+    """Fan --tp degrees out to subprocesses (XLA's device count is fixed at
+    backend init, so each degree gets its own process) and merge the rows
+    into --json-out without disturbing the full-run payload."""
+    rows = []
+    for tp in args.tp:
+        if args.page_size % tp:
+            print(f"[tp] skip tp={tp}: page size {args.page_size} is not a "
+                  f"multiple of it")
+            continue
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={tp} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--tp-child", str(tp), "--arch", args.arch,
+               "--layers", str(args.layers), "--seed", str(args.seed),
+               "--prompt-len", str(args.prompt_len),
+               "--max-new", str(args.max_new),
+               "--page-size", str(args.page_size),
+               "--reps", str(args.reps), "--json-out", ""]
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        row = None
+        for line in reversed(out.stdout.splitlines()):
+            if line.startswith(_TP_SENTINEL):
+                row = json.loads(line[len(_TP_SENTINEL):])
+                break
+        if row is None:
+            print(f"[tp] tp={tp} FAILED\n{out.stdout}\n{out.stderr}")
+            return 1
+        rows.append(row)
+        print(f"[tp] tp={tp}: {row['tok_s']:.1f} tok/s contiguous, "
+              f"{row['paged_int8_tok_s']:.1f} tok/s paged-int8, "
+              f"KV/device {row['kv_slab_bytes_per_device'] / 1e3:.1f}KB slab "
+              f"/ {row['kv_pool_bytes_per_device'] / 1e3:.1f}KB pool")
+    if args.json_out:
+        data = {}
+        if os.path.exists(args.json_out):
+            with open(args.json_out) as f:
+                data = json.load(f)
+        data["tp"] = {"arch": args.arch, "layers": args.layers,
+                      "seed": args.seed, "rows": rows}
+        with open(args.json_out, "w") as f:
+            json.dump(data, f, indent=2)
+        print(f"[json] merged tp rows into {args.json_out}")
+    return 0
 
 
 def write_bench_json(path, payload):
@@ -190,6 +283,15 @@ def main():
                          "skip it for quick runs")
     ap.add_argument("--smoke", action="store_true",
                     help="fast paged + spec regression gate (CI)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload PRNG seed (prompts, shared prefixes, "
+                         "spec probe motifs) — fixed default keeps "
+                         "BENCH_serve.json and --smoke reproducible")
+    ap.add_argument("--tp", type=int, nargs="+", default=None,
+                    help="measure TP serving at these degrees (each in a "
+                         "subprocess with that many forced host devices) "
+                         "and merge a 'tp' section into --json-out")
+    ap.add_argument("--tp-child", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--json-out", default="BENCH_serve.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -199,10 +301,19 @@ def main():
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.max_new + 8
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
 
+    if args.tp_child:
+        print(_TP_SENTINEL + json.dumps(tp_child(model, cfg, params, args)))
+        return
+    if args.tp:
+        if args.smoke:
+            ap.error("--tp is a standalone mode (per-degree subprocesses); "
+                     "run --smoke separately so its gate actually executes")
+        sys.exit(run_tp(args))
     if args.smoke:
-        sys.exit(smoke(model, cfg, params, rng, args.json_out))
+        sys.exit(smoke(model, cfg, params, rng, args.json_out,
+                       seed=args.seed))
 
     wq = WeightQuantConfig(num_weights=256, method="kmeans")
     pq, state = cluster_params(params, wq, init_state(wq), 1000,
@@ -257,7 +368,7 @@ def main():
           f"{slab / 1e6:.3f}MB")
 
     # speculative decoding on the repetitive-suffix workload
-    spec = bench_spec(model, params)
+    spec = bench_spec(model, params, seed=args.seed)
     if spec is None:
         print("[spec] no cycling prompt found on this model — skipped")
     else:
@@ -289,7 +400,7 @@ def main():
             "spec": spec})
 
 
-def smoke(model, cfg, params, rng, json_out="") -> int:
+def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
     """CI gate for the paged + speculative paths; returns an exit code."""
     prompts = [list(map(int, rng.integers(0, cfg.vocab, n)))
                for n in (3, 7, 5, 9)]
@@ -340,7 +451,7 @@ def smoke(model, cfg, params, rng, json_out="") -> int:
         fails.append("spec decode (paged) diverged from baseline at "
                      "temperature 0")
     # >1x decode speedup with acceptance > 0 on the repetitive workload
-    spec = bench_spec(model, params)
+    spec = bench_spec(model, params, seed=seed)
     if spec is None:
         fails.append("no repetitive-suffix workload found to gate spec "
                      "decode speedup")

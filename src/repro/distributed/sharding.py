@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-__all__ = ["dp_axes", "param_specs", "shard_act", "named", "cache_spec",
-           "moments_spec"]
+__all__ = ["dp_axes", "param_specs", "serve_param_specs", "shard_act",
+           "named", "cache_spec", "moments_spec"]
 
 
 def dp_axes(mesh) -> tuple:
@@ -118,6 +118,32 @@ def param_specs(params, cfg=None, moe_cfg=None, mesh=None, fsdp=True):
         if path_parts[-1] == "codebook":
             return P(*([None] * leaf.ndim))
         return _rule(path, leaf.shape, fsdp)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, v in leaves:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        out.append(visit(parts, v))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def serve_param_specs(params):
+    """Serving-time TP placement (DESIGN.md §10): no FSDP, no DP on
+    weights.  Block matmuls — dense ``w`` or integer ``w_idx`` — keep their
+    column/row `model` sharding from ``_rule`` (only the *indices* shard in
+    index form; ``kernels.dispatch`` shard-maps the contraction to match);
+    everything else replicates: embeddings/lm_head (decode touches one row
+    per token — sharding them buys bytes but costs a gather per step),
+    codebooks and norm vectors (tiny by construction).
+    """
+    def visit(path_parts, leaf):
+        path = "/".join(path_parts)
+        if (path_parts[-1] in ("w", "w_idx") and leaf.ndim >= 2
+                and "blocks" in path and "moe" not in path):
+            spec = _rule(path, leaf.shape, fsdp=False)
+            if _M in spec:
+                return spec
+        return P(*([None] * leaf.ndim))
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []

@@ -21,6 +21,22 @@ its jitted calls in ``use_backend(...)`` so the choice is baked into each
 trace; already-compiled executables are unaffected by later switches.
 Backend selection is process-global, not thread-local — concurrent tracing
 under different backends is not supported.
+
+**Tensor parallelism** (DESIGN.md §10): ``use_backend(..., mesh=...)``
+additionally routes every index-form contraction through ``shard_map`` over
+the mesh's ``model`` axis.  The *weights never rematerialize*: only the
+narrow integer indices are sharded — column-parallel mats
+(``kind='col'``: wq/wk/wv/w1/w3/lm_head) split the output axis, N/tp
+indices per shard, no collective; row-parallel mats (``kind='row'``:
+wo/w2) split the reduction axis, K/tp indices per shard, one psum of the
+(…, N) output.  The codebook (and the lut backend's A×W table, built from
+it) replicates — it is tiny by construction.  The ``lut`` row-parallel
+psum happens on the **int32 accumulator** (exact: integer addition is
+associative), so a TP-sharded lut contraction is bit-identical to the
+single-device one; the scale chosen for the full fan-in stays safe for
+every K/tp sub-reduction.  Layers whose sharded axis does not divide the
+TP degree fall back to replicated compute inside an all-replicated
+shard_map (correct, no savings).
 """
 
 from __future__ import annotations
@@ -28,11 +44,13 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["BACKENDS", "LutSpec", "BackendSpec", "make_lut_spec",
-           "use_backend", "matmul_backend", "backend_matmul", "bind_backend"]
+           "use_backend", "matmul_backend", "matmul_mesh", "backend_matmul",
+           "bind_backend"]
 
 BACKENDS = ("dense", "codebook", "lut")
 
@@ -85,7 +103,7 @@ def make_lut_spec(codebook, fan_in: int, *, levels: int = 4096,
 
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
-    """A (backend, lut grid) pair naming how ONE model's matmuls run.
+    """A (backend, lut grid, mesh) triple naming how ONE model's matmuls run.
 
     Speculative decoding traces TWO models inside one jitted step — e.g. a
     coarse-grid ``lut``-tier draft proposing tokens that a ``codebook``-tier
@@ -107,14 +125,16 @@ class BackendSpec:
 
     name: str = "dense"
     lut_spec: LutSpec | None = None
+    mesh: object = None            # None = single-device (draft models)
 
     def scope(self):
-        return use_backend(self.name, self.lut_spec)
+        return use_backend(self.name, self.lut_spec, self.mesh)
 
 
 class _State:
     backend: str = "dense"
     lut_spec: LutSpec | None = None
+    mesh: object = None
 
 
 _STATE = _State()
@@ -125,7 +145,7 @@ def matmul_backend() -> str:
     return _STATE.backend
 
 
-def bind_backend(fn, name: str, lut_spec: LutSpec | None = None):
+def bind_backend(fn, name: str, lut_spec: LutSpec | None = None, mesh=None):
     """A *new* callable running ``fn`` under ``use_backend(name, ...)``.
 
     jax.jit keys its executable cache on function identity, NOT on this
@@ -136,56 +156,126 @@ def bind_backend(fn, name: str, lut_spec: LutSpec | None = None):
     steps this way.
     """
     def bound(*args, **kwargs):
-        with use_backend(name, lut_spec):
+        with use_backend(name, lut_spec, mesh):
             return fn(*args, **kwargs)
     bound.__name__ = f"{getattr(fn, '__name__', 'fn')}[{name}]"
     return bound
 
 
 @contextlib.contextmanager
-def use_backend(name: str, lut_spec: LutSpec | None = None):
+def use_backend(name: str, lut_spec: LutSpec | None = None, mesh=None):
     """Route index-form ``dense`` layers through ``name`` while tracing.
 
     Trace-time state: enter this context around the *tracing* of a jitted
     function (or wrap the function with ``bind_backend`` so every trace is
     covered).  Never jit one function object under two different backends —
-    see ``bind_backend``.
+    see ``bind_backend``.  ``mesh`` additionally shard-maps every routed
+    contraction over the mesh's ``model`` axis (see module docstring).
     """
     if name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
     if name == "lut" and lut_spec is None:
         raise ValueError("backend 'lut' needs a LutSpec (make_lut_spec)")
-    prev, prev_spec = _STATE.backend, _STATE.lut_spec
-    _STATE.backend, _STATE.lut_spec = name, lut_spec
+    prev = _STATE.backend, _STATE.lut_spec, _STATE.mesh
+    _STATE.backend, _STATE.lut_spec, _STATE.mesh = name, lut_spec, mesh
     try:
         yield
     finally:
-        _STATE.backend, _STATE.lut_spec = prev, prev_spec
+        _STATE.backend, _STATE.lut_spec, _STATE.mesh = prev
 
 
-def backend_matmul(x, w_idx, codebook):
+def matmul_mesh():
+    """The mesh index-form contractions are being sharded over (or None)."""
+    return _STATE.mesh
+
+
+def backend_matmul(x, w_idx, codebook, kind: str | None = None):
     """``x @ codebook[w_idx]`` through the active non-dense backend.
 
     x: (..., K) float; w_idx: (K, N) integer indices; codebook: (|W|,).
-    Returns (..., N) in x.dtype.  Callers guarantee ``matmul_backend()`` is
-    not 'dense' (the plain gather+dot lives in models.layers.dense).
+    kind: 'col' | 'row' | None — the layer's TP role per
+    ``distributed.sharding.param_specs`` (only consulted when a mesh is
+    active; None = replicated compute).  Returns (..., N) in x.dtype.
+    Callers guarantee ``matmul_backend()`` is not 'dense' (the plain
+    gather+dot lives in models.layers.dense).
     """
-    from repro.kernels import ops  # lazy: keep pallas off the import path
-
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if _STATE.backend == "codebook":
-        y = ops.codebook_matmul(x2, w_idx, codebook)
-    elif _STATE.backend == "lut":
-        y = _lut_matmul(x2, w_idx, codebook, _STATE.lut_spec)
+    if _STATE.mesh is not None and "model" in _STATE.mesh.axis_names \
+            and _STATE.mesh.shape["model"] > 1:
+        y = _sharded_matmul(x2, w_idx, codebook, kind, _STATE.mesh)
     else:
-        raise ValueError(f"backend_matmul called with {_STATE.backend!r}")
+        y = _local_matmul(x2, w_idx, codebook)
     return y.reshape(*lead, -1).astype(x.dtype)
 
 
-def _lut_matmul(x2, w_idx, codebook, spec: LutSpec):
-    """Faithful §4 contraction: snap activations to the level grid, gather
-    M[a_idx·C + w_idx] into an int32 accumulator, decode once at the end.
+def _local_matmul(x2, w_idx, codebook):
+    from repro.kernels import ops  # lazy: keep pallas off the import path
+
+    if _STATE.backend == "codebook":
+        return ops.codebook_matmul(x2, w_idx, codebook)
+    if _STATE.backend == "lut":
+        return _lut_matmul(x2, w_idx, codebook, _STATE.lut_spec)
+    raise ValueError(f"backend_matmul called with {_STATE.backend!r}")
+
+
+def _sharded_matmul(x2, w_idx, codebook, kind, mesh):
+    """shard_map the contraction over `model` (Pallas kernels have no SPMD
+    partitioning rule, so left to XLA they would replicate and all-gather
+    their operands — this keeps only int indices moving, never weights).
+
+    col:  x replicated, w_idx (K, N/tp) → local kernel, output N-sharded.
+    row:  x (…, K/tp), w_idx (K/tp, N) → local kernel + one (…, N) psum
+          (the lut backend psums the int32 accumulator — exact).
+    else: all-replicated shard_map (every shard computes the full product).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    backend, spec = _STATE.backend, _STATE.lut_spec
+    tp = mesh.shape["model"]
+    K, N = w_idx.shape
+
+    def kernel(xl, wl):
+        from repro.kernels import ops
+
+        if backend == "codebook":
+            return ops.codebook_matmul(xl, wl, codebook)
+        return _lut_matmul(xl, wl, codebook, spec)
+
+    if kind == "col" and N % tp == 0:
+        f = shard_map(kernel, mesh=mesh,
+                      in_specs=(P(None, None), P(None, "model")),
+                      out_specs=P(None, "model"), check_vma=False)
+        return f(x2, w_idx)
+
+    if kind == "row" and K % tp == 0:
+        if backend == "lut":
+            def body(xl, wl):
+                # psum the int32 accumulator, decode the scale once after:
+                # integer addition is associative, so the sharded reduction
+                # is bit-identical to the single-device contraction
+                acc = jax.lax.psum(_lut_acc(xl, wl, codebook, spec), "model")
+                return acc.astype(jnp.float32) * (spec.da / (2.0 ** spec.s))
+        else:
+            def body(xl, wl):
+                return jax.lax.psum(kernel(xl, wl), "model")
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(P(None, "model"), P("model", None)),
+                      out_specs=P(None, None), check_vma=False)
+        return f(x2, w_idx)
+
+    # replicated fallback (axis does not divide tp, or unannotated site)
+    f = shard_map(kernel, mesh=mesh,
+                  in_specs=(P(None, None), P(None, None)),
+                  out_specs=P(None, None), check_vma=False)
+    return f(x2, w_idx)
+
+
+def _lut_acc(x2, w_idx, codebook, spec: LutSpec):
+    """The §4 integer accumulator: snap activations to the level grid,
+    gather M[a_idx·C + w_idx], sum in int32 (no decode).
 
     The multiplication table is constructed *outside* the kernel from the
     codebook and the static grid — at deployment it is a precomputed
@@ -206,5 +296,10 @@ def _lut_matmul(x2, w_idx, codebook, spec: LutSpec):
     scale = (2.0 ** s) / da
     table = jnp.rint(avals[:, None] * codebook.astype(jnp.float32)[None, :]
                      * scale).astype(jnp.int32)              # (|A|, |W|)
-    acc = ops.lut_matmul(a_idx, w_can, table)
-    return acc.astype(jnp.float32) * (da / (2.0 ** s))
+    return ops.lut_matmul(a_idx, w_can, table)
+
+
+def _lut_matmul(x2, w_idx, codebook, spec: LutSpec):
+    """Faithful §4 contraction: int32 accumulate, decode once at the end."""
+    acc = _lut_acc(x2, w_idx, codebook, spec)
+    return acc.astype(jnp.float32) * (spec.da / (2.0 ** spec.s))

@@ -23,6 +23,13 @@ Knobs:
                                      lut grid; needs --compress)
     --spec-k N                       draft tokens per verify round
     --top-k / --top-p                sampling filters (temperature > 0)
+    --tp N                           tensor parallelism over a (1, N)
+                                     ('data','model') mesh (DESIGN.md §10):
+                                     weights column/row-shard, the KV cache
+                                     (slab or page pool) shards its
+                                     sequence axis.  On CPU hosts with too
+                                     few devices the launcher re-execs
+                                     itself with N forced host devices.
 
 CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
@@ -31,11 +38,15 @@ CPU smoke runs:
         --paged --kv-dtype int8 --requests 8 --max-batch 4 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --spec-draft ngram --spec-k 4 --requests 8 --max-new 24
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --compress --backend codebook --tp 4 --requests 8 --max-new 16
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -46,6 +57,23 @@ from repro.core.quantizer import cluster_params, init_state
 from repro.models.model_zoo import build
 from repro.serving import ServeEngine, SpecConfig, to_codebook_params
 from repro.core.export import kv_cache_bytes, memory_report
+
+
+def _ensure_devices(n: int):
+    """Re-exec with forced host devices when a CPU box is short of --tp.
+
+    XLA_FLAGS must be set before jax initialises its backends, so a fresh
+    process is the only clean route; real TPU/GPU topologies never take
+    this branch."""
+    if len(jax.devices()) >= n:
+        return
+    if jax.default_backend() == "cpu" and "_REPRO_TP_REEXEC" not in os.environ:
+        env = dict(os.environ, _REPRO_TP_REEXEC="1")
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        os.execve(sys.executable, [sys.executable] + sys.argv, env)
+    raise SystemExit(f"--tp {n} needs {n} devices; found "
+                     f"{len(jax.devices())} ({jax.default_backend()})")
 
 
 def main():
@@ -77,6 +105,8 @@ def main():
                     help="draft tokens per verify round")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (DESIGN.md §10)")
     args = ap.parse_args()
     if args.paged and args.uniform:
         ap.error("--paged serves through the slot pool; drop --uniform")
@@ -85,6 +115,16 @@ def main():
     if args.spec_draft == "model" and not args.compress:
         ap.error("--spec-draft model drafts with the compressed params "
                  "through the lut backend; add --compress")
+
+    mesh = None
+    if args.tp > 1:
+        if args.paged and args.page_size % args.tp:
+            ap.error(f"--page-size {args.page_size} must be a multiple of "
+                     f"--tp {args.tp} (each shard owns an S-slice of every "
+                     "page)")
+        _ensure_devices(args.tp)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(1, args.tp)
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -127,10 +167,11 @@ def main():
             # params contracted through a coarse integer grid
             draft_params=params if args.spec_draft == "model" else None,
             draft_backend="lut", lut_levels=512)
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.max_new + 8
-                         + (args.spec_k if spec else 0),
-                         temperature=args.temperature,
+    max_len = (args.prompt_len + args.max_new + 8
+               + (args.spec_k if spec else 0))
+    max_len += (-max_len) % args.tp        # the cache S axis shards over tp
+    engine = ServeEngine(model, params, max_len=max_len,
+                         temperature=args.temperature, mesh=mesh,
                          backend=args.backend, max_batch=args.max_batch,
                          paged=args.paged, page_size=args.page_size,
                          kv_dtype=args.kv_dtype,

@@ -221,7 +221,7 @@ def chunk_attention(q, k_past, v_past, past_len, k_new, v_new):
 
 def attn_decode_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
                       write_off, valid_len, k_pool, v_pool, layer,
-                      scales=None):
+                      scales=None, mesh=None, dp=None):
     """Paged decode step: gather pages, attend, scatter the token's K/V into
     the tail page.
 
@@ -231,10 +231,21 @@ def attn_decode_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
     prefix (= per-slot ``pos``; the fresh token enters via ``extra_kv``, so
     the possibly-stale tail entry is masked out by ``idx < valid_len``).
     scales present ⇒ int8 pages (quantize-what-you-store, DESIGN.md §4).
+    With a mesh, each `model` shard owns an S-slice of every page and the
+    softmax joins through two psums (``_paged_flash_shardmap``).
     Returns (out, k_pool, v_pool, new_scales).
     """
     B = x.shape[0]
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    if mesh is not None and k_pool.shape[2] % mesh.shape["model"] == 0:
+        num, denom, m_glob, k_pool, v_pool, new_scales = _paged_flash_shardmap(
+            q, k, v, k_pool, v_pool, scales, layer, page_table,
+            write_pid[:, None], write_off[:, None], valid_len, mesh,
+            dp or ("data",))
+        out = _join_fresh(q, k, v, num, denom, m_glob)
+        out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups
+                                         * cfg.hd), kind="row")
+        return out, k_pool, v_pool, new_scales
     k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
     out = decode_attention(q, k_l, v_l, valid_len, extra_kv=(k, v))
     if scales is not None:
@@ -252,12 +263,14 @@ def attn_decode_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
         k[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[layer, write_pid, write_off].set(
         v[:, 0].astype(v_pool.dtype))
-    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd))
+    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd),
+                kind="row")
     return out, k_pool, v_pool, new_scales
 
 
 def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
-                       past_len, k_pool, v_pool, layer, scales=None):
+                       past_len, k_pool, v_pool, layer, scales=None,
+                       mesh=None, dp=None):
     """One page-sized prefill chunk (batch of one) against the paged cache.
 
     x: (1, C, D) with C == page size; ``past_len`` (scalar) tokens already
@@ -275,6 +288,20 @@ def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
                          "prompts stream through chunks one request at a "
                          "time")
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    if mesh is not None and k_pool.shape[2] % mesh.shape["model"] == 0:
+        # the chunk is one full page: per-token write targets are the same
+        # physical page at offsets 0..C−1, so each shard keeps exactly its
+        # page slice (write_pid 0 = shared prefix-cache hit → trash)
+        pid_t = jnp.broadcast_to(jnp.asarray(write_pid, jnp.int32), (B, C))
+        off_t = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None],
+                                 (B, C))
+        num, denom, m_glob, k_pool, v_pool, new_scales = _paged_flash_shardmap(
+            q, k, v, k_pool, v_pool, scales, layer, page_table, pid_t,
+            off_t, past_len, mesh, dp or ("data",))
+        out = _join_fresh(q, k, v, num, denom, m_glob)
+        out = dense(p["wo"], out.reshape(B, C, cfg.n_kv * cfg.groups
+                                         * cfg.hd), kind="row")
+        return out, k_pool, v_pool, new_scales
     k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
     out = chunk_attention(q, k_l, v_l, past_len, k, v)
     zero = jnp.zeros((), jnp.int32)
@@ -297,7 +324,8 @@ def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
     v_pool = jax.lax.dynamic_update_slice(
         v_pool, v[:, None].astype(v_pool.dtype),
         (layer, write_pid, zero, zero, zero))
-    out = dense(p["wo"], out.reshape(B, C, cfg.n_kv * cfg.groups * cfg.hd))
+    out = dense(p["wo"], out.reshape(B, C, cfg.n_kv * cfg.groups * cfg.hd),
+                kind="row")
     return out, k_pool, v_pool, new_scales
 
 
@@ -313,7 +341,7 @@ def attn_prefill_chunk(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
 # step's valid-length mask fences them until they are overwritten.
 
 def attn_verify_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
-                       k_all, v_all, layer, scales=None):
+                       k_all, v_all, layer, scales=None, mesh=None, dp=None):
     """Multi-token verify against the stacked (L, B, S, KV, hd) cache.
 
     x: (B, K1, D) — per slot, the pending last token plus K draft proposals;
@@ -322,10 +350,22 @@ def attn_verify_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
     slots lockstep-verify harmlessly into their own tail); valid_len: (B,)
     attendable cached prefix (== the engine's per-slot ``pos``).
     scales: (ks_all, vs_all) when the cache is int8-quantized.
+    With a mesh, the cached prefix runs through the S-sharded flash join
+    (DESIGN.md §10) and the K1 fresh causal rows fold in replicated.
     Returns (out (B, K1, D), k_all, v_all, new_scales).
     """
     B, K1, _ = x.shape
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    if mesh is not None and k_all.shape[2] % mesh.shape["model"] == 0:
+        S = k_all.shape[2]
+        rows = jnp.clip(insert_at, 0, S - K1)
+        num, denom, m_glob, k_all, v_all, new_scales = _decode_cached_shardmap(
+            q, k, v, k_all, v_all, scales, layer, rows, valid_len, None,
+            mesh, dp or ("data",))
+        out = _join_fresh(q, k, v, num, denom, m_glob)
+        out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups
+                                         * cfg.hd), kind="row")
+        return out, k_all, v_all, new_scales
     k_raw = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
     v_raw = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
     k_l, v_l = k_raw, v_raw
@@ -352,13 +392,14 @@ def attn_verify_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
         k_all, _put_rows(k_raw, k, rows).astype(k_all.dtype), layer, 0)
     v_all = jax.lax.dynamic_update_index_in_dim(
         v_all, _put_rows(v_raw, v, rows).astype(v_all.dtype), layer, 0)
-    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd))
+    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd),
+                kind="row")
     return out, k_all, v_all, new_scales
 
 
 def attn_verify_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
                       write_off, valid_len, k_pool, v_pool, layer,
-                      scales=None):
+                      scales=None, mesh=None, dp=None):
     """Multi-token verify against gathered pages (the paged twin of
     ``attn_verify_cached``).
 
@@ -371,6 +412,14 @@ def attn_verify_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
     """
     B, K1, _ = x.shape
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
+    if mesh is not None and k_pool.shape[2] % mesh.shape["model"] == 0:
+        num, denom, m_glob, k_pool, v_pool, new_scales = _paged_flash_shardmap(
+            q, k, v, k_pool, v_pool, scales, layer, page_table, write_pid,
+            write_off, valid_len, mesh, dp or ("data",))
+        out = _join_fresh(q, k, v, num, denom, m_glob)
+        out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups
+                                         * cfg.hd), kind="row")
+        return out, k_pool, v_pool, new_scales
     k_l, v_l = _gather_paged_kv(k_pool, v_pool, page_table, layer, scales)
     out = chunk_attention(q, k_l, v_l, valid_len, k, v)
     if scales is not None:
@@ -386,7 +435,8 @@ def attn_verify_paged(p, x, cfg: AttnConfig, *, pos, page_table, write_pid,
         new_scales = None
     k_pool = k_pool.at[layer, write_pid, write_off].set(k.astype(k_pool.dtype))
     v_pool = v_pool.at[layer, write_pid, write_off].set(v.astype(v_pool.dtype))
-    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd))
+    out = dense(p["wo"], out.reshape(B, K1, cfg.n_kv * cfg.groups * cfg.hd),
+                kind="row")
     return out, k_pool, v_pool, new_scales
 
 
@@ -553,9 +603,9 @@ def _project_qkv(p, x, cfg: AttnConfig, kv_src=None, pos=None,
     hd, KV, G = cfg.hd, cfg.n_kv, cfg.groups
     kv_src = x if kv_src is None else kv_src
     Lk = kv_src.shape[1]
-    q = dense(p["wq"], x).reshape(B, L, KV, G, hd)
-    k = dense(p["wk"], kv_src).reshape(B, Lk, KV, hd)
-    v = dense(p["wv"], kv_src).reshape(B, Lk, KV, hd)
+    q = dense(p["wq"], x, kind="col").reshape(B, L, KV, G, hd)
+    k = dense(p["wk"], kv_src, kind="col").reshape(B, Lk, KV, hd)
+    v = dense(p["wv"], kv_src, kind="col").reshape(B, Lk, KV, hd)
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q)
         k = rms_norm(p["k_norm"], k)
@@ -587,41 +637,88 @@ def dequantize_kv(q, scale):
     return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
 
 
+def _pay_dtype(dt):
+    """Collective payload dtype: bf16 caches ship bf16 partial outputs
+    (TPU posture — ~3 significant digits, inside the int8-KV noise floor);
+    f32 caches ship f32 so the TP engine stays at the single-device noise
+    floor (the tp-parity rig asserts token-for-token equality)."""
+    return jnp.float32 if dt == jnp.float32 else jnp.bfloat16
+
+
+def _join_fresh(q, k_new, v_new, num, denom, m_glob):
+    """Fold the Lq fresh tokens (causal among themselves, all-visible to
+    later ones) into the partial softmax statistics of the sharded past,
+    then normalise — the online twin of chunk_attention's concat-softmax.
+
+    q: (B, Lq, KV, G, hd); k_new/v_new: (B, Lq, KV, hd);
+    num: (B, KV, G, Lq, hd); denom/m_glob: (B, KV, G, Lq).
+    Returns (B, Lq, KV, G, hd) in q.dtype.
+    """
+    B, Lq, KV, G, hd = q.shape
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s_new = jnp.einsum("bqkgd,bckd->bkgqc", qf, k_new.astype(jnp.float32))
+    causal = jnp.arange(Lq)[:, None] >= jnp.arange(Lq)[None, :]
+    s_new = jnp.where(causal[None, None, None], s_new, NEG_INF)
+    m2 = jnp.maximum(m_glob, jnp.max(s_new, axis=-1))
+    corr = jnp.exp(m_glob - m2)
+    e_new = jnp.exp(s_new - m2[..., None])
+    num = num * corr[..., None] + jnp.einsum(
+        "bkgqc,bckd->bkgqd", e_new, v_new.astype(jnp.float32))
+    denom = denom * corr + jnp.sum(e_new, axis=-1)
+    out = num / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
 def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
-                            mesh, dp):
-    """Explicit flash-decode over the `model`-sharded cache sequence dim.
+                            excl, mesh, dp):
+    """Explicit flash attention over the `model`-sharded cache sequence dim.
 
     The XLA-auto path all-gathers each layer's (B, S, KV, hd) cache slice
     inside the decode loop (SPMD cannot re-shard the traced-index
     dynamic-update/read efficiently — confirmed in the dry-run HLO, ~1 GB
     f32 per layer).  Here every shard: reads its LOCAL S-slice, computes
     partial scores, joins softmax statistics with two tiny psums
-    ((B,H,1) max/denominator and the (B,H,1,hd) partial output), and writes
-    the new token's K/V only on the owning shard.  Collective bytes per
-    layer drop from O(B·S·KV·hd) to O(B·H·hd).
+    ((B,H,Lq) max/denominator and the (B,H,Lq,hd) partial output), and
+    writes the Lq fresh tokens' K/V only on their owning shards.
+    Collective bytes per layer drop from O(B·S·KV·hd) to O(B·H·hd·Lq).
 
-    Returns (num, denom, m_glob, k_all, v_all, scales) — the caller folds in
-    the current token's extra softmax term and normalises.
+    Generalised from the PR-1 decode-only form (DESIGN.md §10): Lq >= 1
+    fresh rows per slot (speculative verify), ``ins``/``vlen`` scalars OR
+    per-row (B,) vectors (the ServeEngine's continuous batching), and an
+    optional per-row ``excl`` mask (decode's stale/ring insert row).  The
+    Lq rows land contiguously at ins[b]..ins[b]+Lq−1 and must fit one
+    shard's slice count (Lq <= S/tp — the engine validates); non-owned
+    rows rewrite their current value (in-place friendly, collision-free
+    because consecutive rows map injectively under mod-S_loc).
+
+    Returns (num, denom, m_glob, k_all, v_all, scales) — the caller folds
+    in the fresh tokens' causal softmax terms (``_join_fresh``).
     """
-    B = q.shape[0]
+    B, Lq = q.shape[0], q.shape[1]
     b_ax = dp if B % _dp_size(mesh, dp) == 0 else None
     qspec = P(b_ax, None, None, None, None)
     cspec = P(None, b_ax, "model", None, None)
     sspec = P(None, b_ax, "model", None)
     have_sc = scales is not None
+    have_ex = excl is not None
     hd = q.shape[-1]
+    ins_v = jnp.broadcast_to(jnp.asarray(ins, jnp.int32), (B,))
+    vlen_v = jnp.broadcast_to(jnp.asarray(vlen, jnp.int32), (B,))
+    ex_v = (jnp.broadcast_to(jnp.asarray(excl, jnp.int32), (B,))
+            if have_ex else jnp.zeros((B,), jnp.int32))
 
-    def f(q, k, v, k_all, v_all, ks, vs, layer, ins, vlen):
+    def f(q, k, v, k_all, v_all, ks, vs, layer, ins, vlen, ex):
         m_id = jax.lax.axis_index("model")
         S_loc = k_all.shape[2]
         start = m_id * S_loc
-        k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
-        v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        k_raw = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+        v_raw = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        k_l, v_l = k_raw, v_raw
         if have_sc:
             # dequantize to bf16, not f32: halves the materialised copies
-            k_l = dequantize_kv(k_l, jax.lax.dynamic_index_in_dim(
+            k_l = dequantize_kv(k_raw, jax.lax.dynamic_index_in_dim(
                 ks, layer, 0, keepdims=False)).astype(jnp.bfloat16)
-            v_l = dequantize_kv(v_l, jax.lax.dynamic_index_in_dim(
+            v_l = dequantize_kv(v_raw, jax.lax.dynamic_index_in_dim(
                 vs, layer, 0, keepdims=False)).astype(jnp.bfloat16)
         # scores: operands stay in cache dtype; accumulate f32 on the MXU —
         # avoids materialising f32 copies of the K/V slices (2× HBM)
@@ -629,51 +726,49 @@ def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
         s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_l,
                        preferred_element_type=jnp.float32)
         gidx = start + jnp.arange(S_loc)
-        mask = (gidx < vlen) & (gidx != ins)
-        s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask = gidx[None, :] < vlen[:, None]
+        if have_ex:
+            mask = mask & (gidx[None, :] != ex[:, None])
+        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
         m_loc = jnp.max(s, axis=-1)
         m_glob = jnp.maximum(jax.lax.pmax(m_loc, "model"), NEG_INF / 10)
         p = jnp.exp(s - m_glob[..., None])
         denom = jax.lax.psum(jnp.sum(p, axis=-1), "model")
-        # the (B,H,1,hd) partial output is the psum payload — ship bf16
-        # (denominator & max stay f32; the normalised result keeps ~3
-        # significant digits, inside the int8-KV noise floor)
+        pay = _pay_dtype(v_l.dtype)
         num = jax.lax.psum(
             jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_l.dtype), v_l,
                        preferred_element_type=jnp.float32)
-            .astype(jnp.bfloat16), "model").astype(jnp.float32)
-        # write the fresh K/V on the owning shard only (same-value rewrite
-        # elsewhere keeps the store unconditional => in-place friendly)
-        loc = jnp.clip(ins - start, 0, S_loc - 1)
-        owner = (ins >= start) & (ins < start + S_loc)
-        zero = jnp.zeros((), jnp.int32)
+            .astype(pay), "model").astype(jnp.float32)
+        # write the Lq fresh rows on their owning shards only (same-value
+        # rewrite elsewhere keeps the store unconditional => in-place
+        # friendly; mod-S_loc keeps a slot's row targets collision-free)
+        rows = ins[:, None] + jnp.arange(Lq)[None, :]          # (B, Lq)
+        owner = (rows >= start) & (rows < start + S_loc)
+        loc = (rows - start) % S_loc
+        bidx = jnp.arange(B)[:, None]
 
-        def put(cache, new, sc_cache=None, sc_new=None):
-            cur = jax.lax.dynamic_slice(
-                cache, (layer, zero, loc, zero, zero),
-                (1,) + new.shape)
-            upd = jnp.where(owner, new[None].astype(cache.dtype), cur)
-            return jax.lax.dynamic_update_slice(
-                cache, upd, (layer, zero, loc, zero, zero))
+        def put(sl, new):
+            cur = sl[bidx, loc]
+            ow = owner.reshape(owner.shape + (1,) * (cur.ndim - 2))
+            upd = jnp.where(ow, new.astype(sl.dtype), cur)
+            return sl.at[bidx, loc].set(upd)
 
         if have_sc:
             kq, ksc = quantize_kv(k)
             vq, vsc = quantize_kv(v)
-            cur = jax.lax.dynamic_slice(ks, (layer, zero, loc, zero),
-                                        (1,) + ksc.shape)
-            ks = jax.lax.dynamic_update_slice(
-                ks, jnp.where(owner, ksc[None].astype(ks.dtype), cur),
-                (layer, zero, loc, zero))
-            cur = jax.lax.dynamic_slice(vs, (layer, zero, loc, zero),
-                                        (1,) + vsc.shape)
-            vs = jax.lax.dynamic_update_slice(
-                vs, jnp.where(owner, vsc[None].astype(vs.dtype), cur),
-                (layer, zero, loc, zero))
-            k_all = put(k_all, kq)
-            v_all = put(v_all, vq)
-        else:
-            k_all = put(k_all, k)
-            v_all = put(v_all, v)
+            ks = jax.lax.dynamic_update_index_in_dim(
+                ks, put(jax.lax.dynamic_index_in_dim(ks, layer, 0,
+                                                     keepdims=False), ksc),
+                layer, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(
+                vs, put(jax.lax.dynamic_index_in_dim(vs, layer, 0,
+                                                     keepdims=False), vsc),
+                layer, 0)
+            k, v = kq, vq
+        k_all = jax.lax.dynamic_update_index_in_dim(
+            k_all, put(k_raw, k), layer, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(
+            v_all, put(v_raw, v), layer, 0)
         return num, denom, m_glob, k_all, v_all, ks, vs
 
     from repro.distributed.compat import shard_map
@@ -684,7 +779,7 @@ def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
                   cspec, cspec,
                   sspec if have_sc else P(),
                   sspec if have_sc else P(),
-                  P(), P(), P()),
+                  P(), P(b_ax), P(b_ax), P(b_ax)),
         out_specs=(P(b_ax, None, None, None, None),
                    P(b_ax, None, None, None),
                    P(b_ax, None, None, None),
@@ -692,9 +787,104 @@ def _decode_cached_shardmap(q, k, v, k_all, v_all, scales, layer, ins, vlen,
                    sspec if have_sc else P(),
                    sspec if have_sc else P()),
         check_vma=False,
-    )(q, k, v, k_all, v_all, ks, vs, layer, ins, vlen)
+    )(q, k, v, k_all, v_all, ks, vs, layer, ins_v, vlen_v, ex_v)
     new_scales = (ks, vs) if have_sc else None
     return num, denom, m_glob, k_all, v_all, new_scales
+
+
+def _paged_flash_shardmap(q, k_new, v_new, k_pool, v_pool, scales, layer,
+                          page_table, write_pid, write_off, vlen, mesh, dp):
+    """The paged twin of ``_decode_cached_shardmap`` (DESIGN.md §10): each
+    `model` shard owns an S-slice of EVERY page — the pool's in-page token
+    axis is sharded, so the page *table* stays one (replicated) row per
+    slot and every shard makes identical allocation decisions by
+    construction.
+
+    Each shard gathers its local slice of the slot's pages, masks by the
+    GLOBAL token position (local index t of page p maps to
+    ``p·page + shard·page_loc + t%page_loc``), joins softmax statistics
+    with the same two psums, and scatters the Lq fresh tokens it owns
+    (``write_off`` decides the owner; non-owned tokens are routed to the
+    shard's trash page 0 so trash-bound and owned writes can never collide
+    on a live location).
+
+    q: (B, Lq, KV, G, hd); k_new/v_new: (B, Lq, KV, hd); write_pid/
+    write_off: (B, Lq) per-token physical page + GLOBAL in-page offset;
+    vlen: (B,) attendable logical prefix.  Returns (num, denom, m_glob,
+    k_pool, v_pool, scales) for ``_join_fresh``.
+    """
+    B, Lq = q.shape[0], q.shape[1]
+    b_ax = dp if B % _dp_size(mesh, dp) == 0 else None
+    page = k_pool.shape[2]                      # global tokens per page
+    have_sc = scales is not None
+    hd = q.shape[-1]
+    pspec = P(None, None, "model", None, None)
+    sspec = P(None, None, "model", None)
+    vlen_v = jnp.broadcast_to(jnp.asarray(vlen, jnp.int32), (B,))
+
+    def f(q, k, v, k_pool, v_pool, ks, vs, layer, pt, pid, off, vlen):
+        m_id = jax.lax.axis_index("model")
+        page_loc = k_pool.shape[2]              # = page // tp
+        k_l, v_l = _gather_paged_kv(k_pool, v_pool, pt, layer,
+                                    (ks, vs) if have_sc else None)
+        # int8 pages dequantize to f32 (exactly the local paged path's
+        # numerics — the tp rig asserts token parity against it); bf16
+        # pools stay bf16 and ship bf16 payloads
+        if k_l.dtype not in (jnp.float32, jnp.bfloat16):
+            k_l, v_l = k_l.astype(jnp.float32), v_l.astype(jnp.float32)
+        qf = (q.astype(jnp.float32) * hd ** -0.5).astype(k_l.dtype)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_l,
+                       preferred_element_type=jnp.float32)
+        t = jnp.arange(k_l.shape[1])
+        gpos = (t // page_loc) * page + m_id * page_loc + t % page_loc
+        mask = gpos[None, :] < vlen[:, None]
+        s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1)
+        m_glob = jnp.maximum(jax.lax.pmax(m_loc, "model"), NEG_INF / 10)
+        pr = jnp.exp(s - m_glob[..., None])
+        denom = jax.lax.psum(jnp.sum(pr, axis=-1), "model")
+        pay = _pay_dtype(v_l.dtype)
+        num = jax.lax.psum(
+            jnp.einsum("bkgqs,bskd->bkgqd", pr.astype(v_l.dtype), v_l,
+                       preferred_element_type=jnp.float32)
+            .astype(pay), "model").astype(jnp.float32)
+        # scatter the fresh tokens this shard owns; everyone else's land in
+        # the local trash page (page 0 is never allocated — DESIGN.md §8)
+        owner = (off // page_loc) == m_id
+        pid_w = jnp.where(owner, pid, 0)
+        off_w = jnp.where(owner, off % page_loc, 0)
+        if have_sc:
+            kq, ksc = quantize_kv(k)
+            vq, vsc = quantize_kv(v)
+            ks = ks.at[layer, pid_w, off_w].set(ksc.astype(ks.dtype))
+            vs = vs.at[layer, pid_w, off_w].set(vsc.astype(vs.dtype))
+            k, v = kq, vq
+        k_pool = k_pool.at[layer, pid_w, off_w].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[layer, pid_w, off_w].set(v.astype(v_pool.dtype))
+        return num, denom, m_glob, k_pool, v_pool, ks, vs
+
+    from repro.distributed.compat import shard_map
+    ks, vs = scales if have_sc else (jnp.zeros((), jnp.int8),) * 2
+    num, denom, m_glob, k_pool, v_pool, ks, vs = shard_map(
+        f, mesh=mesh,
+        in_specs=(P(b_ax, None, None, None, None),
+                  P(b_ax, None, None, None), P(b_ax, None, None, None),
+                  pspec, pspec,
+                  sspec if have_sc else P(),
+                  sspec if have_sc else P(),
+                  P(), P(b_ax, None), P(b_ax, None), P(b_ax, None),
+                  P(b_ax)),
+        out_specs=(P(b_ax, None, None, None, None),
+                   P(b_ax, None, None, None),
+                   P(b_ax, None, None, None),
+                   pspec, pspec,
+                   sspec if have_sc else P(),
+                   sspec if have_sc else P()),
+        check_vma=False,
+    )(q, k_new, v_new, k_pool, v_pool, ks, vs, layer, page_table,
+      write_pid, write_off, vlen_v)
+    new_scales = (ks, vs) if have_sc else None
+    return num, denom, m_glob, k_pool, v_pool, new_scales
 
 
 def _dp_size(mesh, dp):
@@ -716,8 +906,8 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
     Both accept either scalars (uniform batch — training smoke tests, the
     dry-run decode cells) or (B,) vectors (per-slot cache positions — the
     ServeEngine's continuous batching, where every batch row is a slot at
-    its own sequence offset).  The vector form is CPU/TPU single-host only:
-    the shard_map flash-decode path keeps the scalar contract.
+    its own sequence offset); the sharded flash-decode path supports both
+    (DESIGN.md §10) whenever S divides the TP degree.
     scales: (ks_all, vs_all) (L, B, S, KV) when the cache is int8-quantized.
     Returns (out, k_all, v_all, new_scales).
     """
@@ -726,29 +916,17 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
     q, k, v = _project_qkv(p, x, cfg, pos=pos)
     vec = jnp.ndim(insert_at) == 1
 
-    if vec and mesh is not None:
-        raise NotImplementedError(
-            "per-slot insert positions are not supported on the sharded "
-            "flash-decode path; run the serving engine without a mesh")
-
     if mesh is not None and k_all.shape[2] % mesh.shape["model"] == 0:
         # explicit flash-decode over the S-sharded cache (see
         # _decode_cached_shardmap) + fold in the current token's term
         num, denom, m_glob, k_all, v_all, new_scales = _decode_cached_shardmap(
             q, k, v, k_all, v_all, scales, layer, insert_at, valid_len,
-            mesh, dp or ("data",))
-        qf = (q.astype(jnp.float32) * hd ** -0.5)
-        s_new = jnp.einsum("bqkgd,bskd->bkgq", qf,
-                           k.astype(jnp.float32))          # (B,KV,G,1)
-        m2 = jnp.maximum(m_glob, s_new)
-        corr = jnp.exp(m_glob - m2)
-        e_new = jnp.exp(s_new - m2)
-        num = num * corr[..., None] + jnp.einsum(
-            "bkgq,bskd->bkgqd", e_new, v.astype(jnp.float32))
-        denom = denom * corr + e_new
-        out = (num / jnp.maximum(denom[..., None], 1e-30))
-        out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+            insert_at, mesh, dp or ("data",))
+        out = _join_fresh(q, k, v, num, denom, m_glob)
     else:
+        # mesh with a non-dividing S falls through to the local form (XLA
+        # gathers the cache — correct, none of §5's bandwidth win; the
+        # ServeEngine validates divisibility up front)
         # READ the stale slice first — a carry read after the update forces
         # XLA to materialise a cache copy per step; read-before-write aliases.
         k_raw = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
@@ -804,7 +982,8 @@ def attn_decode_cached(p, x, cfg: AttnConfig, *, pos, insert_at, valid_len,
             v_all = jax.lax.dynamic_update_slice(
                 v_all, v[None].astype(v_all.dtype),
                 (layer, zero, insert_at, zero, zero))
-    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd))
+    out = dense(p["wo"], out.reshape(B, 1, cfg.n_kv * cfg.groups * cfg.hd),
+                kind="row")
     return out, k_all, v_all, new_scales
 
 
@@ -824,11 +1003,11 @@ def attn_apply(p, x, cfg: AttnConfig, *, pos=None, cache=None, cache_index=None,
     """
     B, L, _ = x.shape
     hd, KV, G = cfg.hd, cfg.n_kv, cfg.groups
-    q = dense(p["wq"], x).reshape(B, L, KV, G, hd)
+    q = dense(p["wq"], x, kind="col").reshape(B, L, KV, G, hd)
     kv_src = x if kv_override is None else kv_override
     Lk = kv_src.shape[1]
-    k = dense(p["wk"], kv_src).reshape(B, Lk, KV, hd)
-    v = dense(p["wv"], kv_src).reshape(B, Lk, KV, hd)
+    k = dense(p["wk"], kv_src, kind="col").reshape(B, Lk, KV, hd)
+    v = dense(p["wv"], kv_src, kind="col").reshape(B, Lk, KV, hd)
 
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q)
@@ -879,7 +1058,7 @@ def attn_apply(p, x, cfg: AttnConfig, *, pos=None, cache=None, cache_index=None,
             out = jax.lax.with_sharding_constraint(
                 out, named(mesh, P(dp_axes(mesh), "model", None, None,
                                    None)))
-    out = dense(p["wo"], out.reshape(B, L, KV * G * hd))
+    out = dense(p["wo"], out.reshape(B, L, KV * G * hd), kind="row")
     if return_kv:  # prefill: emit this layer's K/V as the cache plane
         return out, {"k": k, "v": v}
     return out, new_cache

@@ -26,7 +26,7 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
     return p
 
 
-def dense(p, x):
+def dense(p, x, kind: str | None = None):
     """x @ W (+ b).  W is dense ('w') or codebook-indexed ('w_idx'+'codebook').
 
     The index form is the deployment representation from the paper's §4: the
@@ -41,10 +41,16 @@ def dense(p, x):
     * ``lut`` — the faithful §4 integer engine ``lut_matmul``: activations
       snapped to a level grid, int32 table-gather accumulation, no
       multiplications in the contraction.
+
+    ``kind`` ('col' | 'row' | None) names the layer's tensor-parallel role
+    per ``distributed.sharding.param_specs`` — consulted only when the
+    active backend carries a mesh (DESIGN.md §10), where it decides whether
+    the index matrix shards its output axis (col: no collective) or its
+    reduction axis (row: one output psum).
     """
     if "w_idx" in p:
         if dispatch.matmul_backend() != "dense" and p["w_idx"].ndim == 2:
-            y = dispatch.backend_matmul(x, p["w_idx"], p["codebook"])
+            y = dispatch.backend_matmul(x, p["w_idx"], p["codebook"], kind)
             if "b" in p:
                 y = y + p["b"].astype(x.dtype)
             return y
@@ -154,9 +160,10 @@ def _ffn_hidden_constraint(h, mesh):
 
 
 def swiglu(p, x, act_kind: str = "silu", act_levels: int = 0, mesh=None):
-    h = ffn_act(dense(p["w1"], x), act_kind, act_levels) * dense(p["w3"], x)
+    h = (ffn_act(dense(p["w1"], x, kind="col"), act_kind, act_levels)
+         * dense(p["w3"], x, kind="col"))
     h = _ffn_hidden_constraint(h, mesh)
-    return dense(p["w2"], h)
+    return dense(p["w2"], h, kind="row")
 
 
 def mlp_init(key, d: int, ff: int, dtype=jnp.float32, bias: bool = True):
@@ -166,5 +173,5 @@ def mlp_init(key, d: int, ff: int, dtype=jnp.float32, bias: bool = True):
 
 
 def mlp_block(p, x, act_kind: str = "gelu", act_levels: int = 0, mesh=None):
-    h = ffn_act(dense(p["w1"], x), act_kind, act_levels)
-    return dense(p["w2"], _ffn_hidden_constraint(h, mesh))
+    h = ffn_act(dense(p["w1"], x, kind="col"), act_kind, act_levels)
+    return dense(p["w2"], _ffn_hidden_constraint(h, mesh), kind="row")

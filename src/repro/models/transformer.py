@@ -309,7 +309,7 @@ def _logits(p, cfg, x):
              if "w_idx" in p["embed"] else p["embed"]["table"])
         logits = jnp.dot(x, t.T, preferred_element_type=jnp.float32)
     else:
-        logits = L.dense(p["lm_head"], x).astype(jnp.float32)
+        logits = L.dense(p["lm_head"], x, kind="col").astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab:  # mask padded ids
         pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
         logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
@@ -512,9 +512,8 @@ def prefill_chunk(params, cfg, batch, cache, mesh=None):
     """
     if cfg.family not in _PAGED_FAMILIES:
         raise NotImplementedError(cfg.family)
-    if mesh is not None:
-        raise NotImplementedError("paged serving is single-host")
     dt = _dtype(cfg)
+    dp = dp_axes(mesh) if mesh is not None else None
     tokens = batch["tokens"]
     start = jnp.asarray(batch["start"], jnp.int32)
     length = jnp.asarray(batch["length"], jnp.int32)
@@ -530,7 +529,7 @@ def prefill_chunk(params, cfg, batch, cache, mesh=None):
         a, kc, vc, sc = A.attn_prefill_chunk(
             p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=pos,
             page_table=page_table, write_pid=write_pid, past_len=start,
-            k_pool=kc, v_pool=vc, layer=l, scales=sc)
+            k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
         h = h + a
         if "moe" in p_l:
             y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
@@ -563,9 +562,8 @@ def _decode_step_paged(params, cfg, tokens, cache, mesh):
     """
     if cfg.family not in _PAGED_FAMILIES:
         raise NotImplementedError(cfg.family)
-    if mesh is not None:
-        raise NotImplementedError("paged serving is single-host")
     dt = _dtype(cfg)
+    dp = dp_axes(mesh) if mesh is not None else None
     pos = cache["pos"]
     pt = cache["page_table"]
     B = tokens.shape[0]
@@ -584,7 +582,7 @@ def _decode_step_paged(params, cfg, tokens, cache, mesh):
             p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg,
             pos=pos[:, None].astype(jnp.int32), page_table=pt,
             write_pid=write_pid, write_off=write_off, valid_len=vlen,
-            k_pool=kc, v_pool=vc, layer=l, scales=sc)
+            k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
         h = h + a
         if "moe" in p_l:
             y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
@@ -616,9 +614,8 @@ def _verify_step_paged(params, cfg, tokens, cache, mesh):
     """
     if cfg.family not in _PAGED_FAMILIES:
         raise NotImplementedError(cfg.family)
-    if mesh is not None:
-        raise NotImplementedError("paged serving is single-host")
     dt = _dtype(cfg)
+    dp = dp_axes(mesh) if mesh is not None else None
     pos = cache["pos"]
     pt = cache["page_table"]
     B, K1 = tokens.shape
@@ -639,7 +636,8 @@ def _verify_step_paged(params, cfg, tokens, cache, mesh):
         a, kc, vc, sc = A.attn_verify_paged(
             p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
             page_table=pt, write_pid=write_pid, write_off=write_off,
-            valid_len=vlen, k_pool=kc, v_pool=vc, layer=l, scales=sc)
+            valid_len=vlen, k_pool=kc, v_pool=vc, layer=l, scales=sc,
+            mesh=mesh, dp=dp)
         h = h + a
         if "moe" in p_l:
             y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
@@ -700,7 +698,8 @@ def verify_step(params, cfg, tokens, cache, mesh=None):
         a, kc, vc, sc = A.attn_verify_cached(
             p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
             insert_at=ins, valid_len=vlen, k_all=kc, v_all=vc, layer=l,
-            scales=sc)
+            scales=sc, mesh=mesh,
+            dp=dp_axes(mesh) if mesh is not None else None)
         h = h + a
         if "moe" in p_l:
             y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),

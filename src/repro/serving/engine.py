@@ -65,6 +65,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import dispatch
 from repro.models.model_zoo import Model
@@ -123,6 +124,15 @@ class ServeEngine:
                  batch).
     max_len:     cache capacity; prompt_len + max_new must fit.
     temperature: 0 = greedy argmax; >0 = categorical sampling.
+    mesh:        a ``('data', 'model')`` mesh turns the engine tensor-
+                 parallel (DESIGN.md §10): weights column/row-shard over
+                 `model` (index-form params shard only their integer
+                 indices), the KV cache — contiguous slab or page pool —
+                 shards its sequence/in-page axis, and prefill, the decode
+                 while_loop, and spec verify rounds all stay jitted under
+                 the mesh.  Requires ``max_len % tp == 0`` (paged:
+                 ``page_size % tp == 0``).  tp=N output is token-for-token
+                 identical to the mesh-less engine (tests/test_tp_serve.py).
     backend:     'dense' | 'codebook' | 'lut' (see module docstring).
     lut_levels / lut_range: activation grid of the 'lut' backend's
                  multiplication table (|A| entries over [a_min, a_max]).
@@ -190,8 +200,29 @@ class ServeEngine:
         self._cache_dtype = (jnp.float32 if cfg.dtype == "float32"
                              else jnp.bfloat16)
 
+        if self.mesh is not None:
+            if "model" not in self.mesh.axis_names:
+                raise ValueError("ServeEngine mesh needs a 'model' axis "
+                                 "(launch.mesh.make_local_mesh)")
+            tp = self.mesh.shape["model"]
+            if self.max_len % tp:
+                raise ValueError(
+                    f"max_len {self.max_len} must be a multiple of the TP "
+                    f"degree {tp} (the cache shards its sequence axis over "
+                    "`model`)")
+            if self.paged and self.page_size % tp:
+                raise ValueError(
+                    f"page_size {self.page_size} must be a multiple of the "
+                    f"TP degree {tp} (each shard owns an S-slice of every "
+                    "page)")
+            if self.spec is not None and self.max_len // tp < self.spec.k + 1:
+                raise ValueError(
+                    f"max_len/tp = {self.max_len // tp} cannot hold the "
+                    f"k+1 = {self.spec.k + 1} verify rows of one shard")
+            self.params = self._shard_params(self.params)
+
         bb = partial(dispatch.bind_backend, name=self.backend,
-                     lut_spec=self._lut_spec)
+                     lut_spec=self._lut_spec, mesh=self.mesh)
         self._prefill = jax.jit(bb(self._prefill_fn))
         # the cache operand is donated everywhere it is threaded through:
         # callers always reassign from the result, and without donation XLA
@@ -209,8 +240,6 @@ class ServeEngine:
         self._prefill_chunk = jax.jit(bb(self._prefill_chunk_fn),
                                       donate_argnums=(1,))
         self._pool: PagePool | None = None
-        if self.paged and self.mesh is not None:
-            raise NotImplementedError("paged serving is single-host")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.top_k < 0:
@@ -226,9 +255,6 @@ class ServeEngine:
                                  "('ngram', 'model')")
             if sp.k < 1:
                 raise ValueError(f"spec.k must be >= 1, got {sp.k}")
-            if self.mesh is not None:
-                raise NotImplementedError("speculative serving is "
-                                          "single-host")
             if sp.draft == "model":
                 if sp.draft_params is None:
                     raise ValueError("spec.draft='model' needs "
@@ -260,6 +286,53 @@ class ServeEngine:
             # paged spec decode: Python-stepped rounds
             self._verify = jax.jit(bb(self._verify_fn), donate_argnums=(1,))
             self._accept = jax.jit(self._accept_fn)
+
+    # --- tensor parallelism (DESIGN.md §10) ----------------------------------
+
+    def _shard_params(self, params):
+        """Place params per the serving TP policy: block matmuls ('w' or the
+        integer 'w_idx') column/row-sharded over `model`, everything else —
+        embeddings, norms, codebooks, LUT inputs — replicated."""
+        from repro.distributed import sharding as SH
+
+        specs = SH.serve_param_specs(params)
+        sh = jax.tree_util.tree_map(
+            lambda s: SH.named(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(params, sh)
+
+    def _place_kv(self, cache):
+        """Shard a contiguous cache's KV planes (L, B, S, KV[, hd]):
+        sequence over `model`, batch over data when it divides (§5)."""
+        if self.mesh is None:
+            return cache
+        from repro.distributed.sharding import dp_axes, named
+
+        dp = dp_axes(self.mesh)
+        dsz = 1
+        for a in dp:
+            dsz *= self.mesh.shape[a]
+        kv = {}
+        for name, arr in cache["kv"].items():
+            b_ax = dp if arr.shape[1] % dsz == 0 else None
+            spec = P(None, b_ax, "model", *([None] * (arr.ndim - 3)))
+            kv[name] = jax.device_put(arr, named(self.mesh, spec))
+        return {**cache, "kv": kv}
+
+    def _place_pool(self, cache):
+        """Shard page-pool arrays (L, n_pages, page, KV[, hd]): the in-page
+        token axis over `model` — every shard owns an S-slice of every
+        page, so page tables and allocator decisions stay shard-invariant
+        (DESIGN.md §10)."""
+        if self.mesh is None:
+            return cache
+        from repro.distributed.sharding import named
+
+        return {name: jax.device_put(
+                    arr, named(self.mesh,
+                               P(None, None, "model",
+                                 *([None] * (arr.ndim - 3)))))
+                for name, arr in cache.items()}
 
     # --- jitted bodies -------------------------------------------------------
 
@@ -483,8 +556,8 @@ class ServeEngine:
         n = len(prompts)
         B, cap, C = self.max_batch, max(stops_req), self.max_len
 
-        cache = self.model.init_cache(B, self.max_len,
-                                      dtype=self._cache_dtype)
+        cache = self._place_kv(self.model.init_cache(
+            B, self.max_len, dtype=self._cache_dtype))
         cache = {**cache, "pos": jnp.zeros((B,), jnp.int32)}
         if sp.draft == "model":
             dparams = sp.draft_params
@@ -564,6 +637,7 @@ class ServeEngine:
                 self.model, n_pages=n_pages, page_size=self.page_size,
                 pages_per_slot=pps, kv_dtype=dtype,
                 prefix_cache=self.prefix_cache)
+            self._pool.cache = self._place_pool(self._pool.cache)
         return self._pool
 
     def dense_cache_bytes(self) -> int:
@@ -845,7 +919,7 @@ class ServeEngine:
             raise ValueError("prompt + max_new exceeds max_len")
         key = jax.random.PRNGKey(0) if key is None else key
         logits, cache = self._prefill(self.params, toks, lengths)
-        cache = self._grow(cache)
+        cache = self._place_kv(self._grow(cache))
         key, sub = jax.random.split(key)
         first = self._sample(logits, sub)
         stops = jnp.full((B,), max_new, jnp.int32)
@@ -897,8 +971,8 @@ class ServeEngine:
             return self._serve_spec(prompts, stops_req, key)
         B, cap = self.max_batch, max(stops_req)
 
-        cache = self.model.init_cache(B, self.max_len,
-                                      dtype=self._cache_dtype)
+        cache = self._place_kv(self.model.init_cache(
+            B, self.max_len, dtype=self._cache_dtype))
         cache = {**cache, "pos": jnp.zeros((B,), jnp.int32)}
         last = jnp.zeros((B,), jnp.int32)
         active = jnp.zeros((B,), bool)

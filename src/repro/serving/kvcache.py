@@ -35,6 +35,13 @@ pool cannot supply the request's worst-case page count (prompt + stop
 tokens) even after evicting cache-only pages — free *pages*, not free
 slots, are the capacity resource.
 
+Under tensor parallelism (DESIGN.md §10) the device arrays shard their
+*in-page token axis* over `model` — page ids, page tables, and therefore
+every decision this allocator makes (allocation order, hash chains, CoW,
+rollback, free-list state) are shard-invariant by construction: one host
+allocator, one replicated page-table row per slot, per-shard S-slices of
+each page.  Nothing in this module is TP-aware, deliberately.
+
 Speculative rollback (DESIGN.md §9): ``truncate`` returns
 rejection-emptied tail pages to the free list while keeping them
 *reserved* for their request (``reserved_extra`` — invisible to new

@@ -1,0 +1,141 @@
+"""Import-safe stand-in for the ``hypothesis`` dev extra.
+
+The property-based suites (test_activations / test_clustering /
+test_export_serving / the PagePool state machine in test_paged_kvcache)
+guard on ``import hypothesis`` and used to *skip* when the dev extras were
+absent.  conftest.py now installs this minimal shim into ``sys.modules``
+instead, so the guards become import-safe and the properties always run:
+deterministic seeded random sampling over the small strategy subset the
+suites use (floats / integers / sampled_from / booleans / lists / tuples),
+``@given`` looping ``max_examples`` draws, ``@settings`` adjusting it.
+
+This is NOT hypothesis — no shrinking, no database, no coverage-guided
+generation.  When the real package is installed (CI does:
+``pip install -e '.[dev]'``) conftest prefers it and this module is inert.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+__version__ = "0.0-fallback"
+
+
+class _Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def example(self, rng):
+        return rng.choice(self.seq)
+
+
+class _Booleans(_Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size=0, max_size=None):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *elems):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class strategies:
+    """The ``hypothesis.strategies`` surface the test suites draw from."""
+
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(seq):
+        return _SampledFrom(seq)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=None):
+        return _Lists(elem, min_size=min_size, max_size=max_size)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Tuples(*elems)
+
+
+_DEFAULT_EXAMPLES = 25
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            # deterministic per-test stream: same examples every run
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -125,6 +125,7 @@ print("MULTIDEV_OK")
 """
 
 
+@pytest.mark.tier2
 def test_multidevice_subprocess():
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", _MULTIDEV], env=env,
@@ -165,6 +166,7 @@ print("DECODE_MESH_OK")
 """
 
 
+@pytest.mark.tier2
 def test_shardmap_flash_decode_matches_local():
     """The §Perf(a) explicit flash-decode (shard_map over the S-sharded
     cache, int8 or bf16) must be numerically identical to the single-device

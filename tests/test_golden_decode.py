@@ -1,0 +1,83 @@
+"""Golden-file decode regression: tokens + logit fingerprints per backend.
+
+Cross-PR drift in the serving stack (like the §8 int8 chunked-prefill
+readback caveat) used to surface only as silently shifted benchmark
+numbers.  This pins, for the fixed seed-0 test model:
+
+* the greedy continuation of two fixed prompts per backend
+  (dense / codebook / lut), token for token, and
+* a prefill logit fingerprint (probe values, argmax id, logsumexp at each
+  prompt's last position) compared under a small absolute tolerance —
+  loose enough for BLAS reduction-order noise across machines (~1e-5),
+  tight enough that any real numerics change fails loudly.
+
+Regenerate intentionally with:
+    GOLDEN_UPDATE=1 PYTHONPATH=src pytest -q tests/test_golden_decode.py
+and review the diff like any other behaviour change.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, to_codebook_params
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_decode.json")
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8]]
+MAX_NEW = 6
+PROBE_IDS = [0, 17, 63, 111, 256, 301, 449, 511]
+ATOL = 1e-3
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 1000,
+                               jax.random.PRNGKey(1))
+    cp = to_codebook_params(pq, wq, state, min_size=1024)
+    return {be: ServeEngine(model, params if be == "dense" else cp,
+                            max_len=64, backend=be)
+            for be in ("dense", "codebook", "lut")}
+
+
+def _fingerprint(eng):
+    toks, lens = eng._pad_prompts(PROMPTS)
+    logits, _ = eng._prefill(eng.params, toks, lens)
+    lg = np.asarray(logits[:, -1, :eng.model.cfg.vocab], np.float64)
+    return {
+        "tokens": eng.generate(PROMPTS, max_new=MAX_NEW),
+        "argmax": np.argmax(lg, axis=-1).tolist(),
+        "lse": [round(float(v), 4) for v in
+                np.log(np.sum(np.exp(lg - lg.max(-1, keepdims=True)), -1))
+                + lg.max(-1)],
+        "probe": [[round(float(lg[b, i]), 4) for i in PROBE_IDS]
+                  for b in range(lg.shape[0])],
+    }
+
+
+def test_golden_decode_fingerprints(engines):
+    got = {be: _fingerprint(eng) for be, eng in engines.items()}
+    if os.environ.get("GOLDEN_UPDATE"):
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        pytest.skip("golden file regenerated — review and commit the diff")
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert set(got) == set(want)
+    for be in want:
+        assert got[be]["tokens"] == want[be]["tokens"], \
+            f"{be}: greedy tokens drifted from the golden file"
+        assert got[be]["argmax"] == want[be]["argmax"], be
+        np.testing.assert_allclose(got[be]["lse"], want[be]["lse"],
+                                   atol=ATOL, err_msg=be)
+        np.testing.assert_allclose(got[be]["probe"], want[be]["probe"],
+                                   atol=ATOL, err_msg=be)

@@ -333,3 +333,152 @@ def test_int8_chunked_prefill_drift_bounded(tiny):
     spread = lg["bf16"].max() - lg["bf16"].min()
     drift = np.abs(lg["bf16"] - lg["int8"]).max()
     assert drift / spread < 0.05, (drift, spread)
+
+
+# --- property-based PagePool invariants (hypothesis state machine) -----------
+#
+# A random-walk state machine over the host-side allocator alone (a stub
+# model supplies a tiny page store): every admit/register/cow/extend/
+# truncate/retire interleaving must conserve refcounts, never alias a
+# write-target page between two live requests, and never let speculative
+# rollback's reserved pages deadlock a later extend.  Runs under real
+# hypothesis when the dev extra is installed, else under the deterministic
+# conftest fallback shim — either way it is no longer skipped.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # direct (non-pytest) imports
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.serving.kvcache import PagePool
+
+
+class _StubModel:
+    """Backing store for allocator-only walks: one layer, 2-wide heads."""
+
+    def init_paged_cache(self, n_pages, page_size, dtype):
+        return {"k": jnp.zeros((1, n_pages, page_size, 1, 2), jnp.float32)}
+
+
+class _PoolWalk:
+    """Drives one PagePool through engine-shaped transitions and checks
+    the global invariants after every step."""
+
+    def __init__(self, rng, *, page, n_pages, prefix_cache):
+        self.rng = rng
+        self.page = page
+        self.pool = PagePool(_StubModel(), n_pages=n_pages, page_size=page,
+                             pages_per_slot=n_pages - 1,
+                             kv_dtype=jnp.float32, prefix_cache=prefix_cache)
+        self.live = []                   # [adm, plen, stop, cur_tokens]
+
+    # --- transitions (the ServeEngine's call shapes) -------------------------
+
+    def admit(self):
+        plen = int(self.rng.integers(1, 3 * self.page + 1))
+        stop = int(self.rng.integers(1, 2 * self.page + 1))
+        # small alphabet => prefix-cache hits actually happen
+        tokens = [int(t) for t in self.rng.integers(0, 3, plen)]
+        adm = self.pool.admit(tokens, stop)
+        if adm is None:
+            return
+        self.pool.register_prefill(adm)
+        self.pool.cow(adm)               # engine: CoW before decode writes
+        self.live.append([adm, plen, stop, plen])
+
+    def truncate(self):
+        if not self.live:
+            return
+        ent = self.live[self.rng.integers(len(self.live))]
+        adm, plen, _, cur = ent
+        n = int(self.rng.integers(plen, cur + 1))
+        self.pool.truncate(adm, n)
+        ent[3] = n
+
+    def extend(self):
+        if not self.live:
+            return
+        ent = self.live[self.rng.integers(len(self.live))]
+        adm, plen, stop, cur = ent
+        hi = plen + stop - 1 + self.page         # speculative overshoot ok
+        n = int(self.rng.integers(cur, hi + 1))
+        self.pool.extend(adm, n)
+        ent[3] = min(max(n, cur), plen + stop - 1)
+
+    def retire(self):
+        if not self.live:
+            return
+        i = int(self.rng.integers(len(self.live)))
+        adm, _, _, _ = self.live.pop(i)
+        self.pool.retire(adm)
+
+    # --- invariants ----------------------------------------------------------
+
+    def check(self):
+        pool = self.pool
+        holders = {}                             # pid -> live admissions
+        for adm, _, _, _ in self.live:
+            for pid in adm.pids[:adm.n_live]:
+                assert pid != 0, "trash page allocated to a live request"
+                holders.setdefault(pid, []).append(adm)
+
+        for pid in range(1, pool.n_pages):
+            want = len(holders.get(pid, ())) + (1 if pid in pool.key_of
+                                                else 0)
+            assert pool.ref[pid] == want, \
+                f"refcount leak on page {pid}: {pool.ref[pid]} != {want}"
+        assert pool.ref[0] == 0 and 0 not in pool.key_of
+
+        free = pool.free
+        assert len(free) == len(set(free)), "free-list duplicate"
+        assert set(free) == {p for p in range(1, pool.n_pages)
+                             if pool.ref[p] == 0}, "free-list drift"
+
+        # a page held by TWO live requests is only ever a registered
+        # (immutable, read-only) prefix page — never a write target
+        for pid, hs in holders.items():
+            if len(hs) > 1:
+                assert pid in pool.key_of, \
+                    f"page {pid} aliased by {len(hs)} live slots unregistered"
+        for adm, plen, stop, cur in self.live:
+            if cur >= plen + stop - 1:
+                continue                          # no further writes due
+            tgt = cur // self.page                # next decode write page
+            if tgt < adm.n_live:
+                pid = adm.pids[tgt]
+                assert pid not in pool.key_of, \
+                    "decode write target is a shared registered page"
+                assert pool.ref[pid] == 1, \
+                    f"write-target page {pid} shared (ref {pool.ref[pid]})"
+
+        # speculative-rollback accounting: every released-but-reserved page
+        # stays claimable (free, or reclaimable by evicting a cache-only
+        # page — admission counts both minus reserved_extra), so the
+        # extend() transitions of this walk can never hit the allocator's
+        # exhaustion error
+        owed = sum(adm.reserve - adm.n_live for adm, _, _, _ in self.live)
+        assert pool.reserved_extra == owed
+        assert len(free) + pool._evictable() >= pool.reserved_extra, \
+            "reserved rollback pages no longer claimable: extend deadlock"
+
+    def run(self, n_ops=40):
+        ops = [self.admit, self.admit, self.truncate, self.extend,
+               self.retire]
+        self.check()
+        for _ in range(n_ops):
+            ops[self.rng.integers(len(ops))]()
+            self.check()
+        while self.live:
+            self.retire()
+            self.check()
+        assert self.pool.reserved_extra == 0
+        assert all(self.pool.ref[p] in (0, 1)
+                   for p in range(1, self.pool.n_pages))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4]),
+       st.sampled_from([8, 12]), st.booleans())
+def test_pool_state_machine_invariants(seed, page, n_pages, prefix):
+    _PoolWalk(np.random.default_rng(seed), page=page, n_pages=n_pages,
+              prefix_cache=prefix).run()

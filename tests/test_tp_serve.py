@@ -1,0 +1,64 @@
+"""Tensor-parallel ServeEngine (DESIGN.md §10), locked down two ways:
+
+* **Token parity**: tp=2 and tp=4 serve output must be token-for-token
+  identical to tp=1 (the mesh-less engine) for dense / codebook / lut
+  backends × contiguous / paged caches × plain / speculative decoding —
+  13 cases per TP degree, each run on 8 forced host devices through the
+  ``tp_rig`` subprocess helper (tests/tp_serve_cases.py builds identical
+  params from fixed seeds in every child).
+* **Collective bytes**: the decode-step jaxpr and compiled HLO under TP
+  must contain no collective moving a cache-sized operand — every payload
+  is bounded by O(B·H·hd) per layer (the §5 two-psum flash-decode join),
+  contiguous and paged alike.
+
+tier2: the matrix compiles ~40 jitted programs per child process — the CI
+``tp`` job runs it; the default tier-1 invocation deselects it.
+"""
+
+import pytest
+
+from tp_rig import run_under_devices
+
+pytestmark = pytest.mark.tier2
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    """Serve-case tokens per TP degree (one rig subprocess each)."""
+    return {tp: run_under_devices("tp_serve_cases:serve_matrix", {"tp": tp})
+            for tp in (1, 2, 4)}
+
+
+def test_matrix_covers_issue_grid(matrix):
+    cases = set(matrix[1])
+    for be in ("dense", "codebook", "lut"):
+        for mode in ("contig", "paged"):
+            for sp in ("plain", "spec"):
+                assert f"{be}/{mode}/{sp}" in cases
+    assert "dense/paged-int8/plain" in cases
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_serve_token_parity(matrix, tp):
+    """tp=N output == tp=1 output, token for token, every case."""
+    ref, got = matrix[1], matrix[tp]
+    assert set(got) == set(ref)
+    bad = [case for case in ref if got[case] != ref[case]]
+    assert not bad, f"tp={tp} diverged from tp=1 on: {bad}"
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_decode_collectives_bounded(tp):
+    """No all-gather of cache-sized operands in the decode step: the
+    largest collective payload (jaxpr psums AND compiled-HLO collectives,
+    which include anything GSPMD inserted) stays within a small multiple
+    of B·H·hd bytes and far under one layer's cache slice."""
+    r = run_under_devices("tp_serve_cases:collective_bounds", {"tp": tp})
+    cap = 4 * r["unit_bytes"]                 # num psum is 1× B·H·hd·4
+    for mode in ("contig", "paged"):
+        for level in ("jaxpr", "hlo"):
+            got = r[f"{mode}_{level}_bytes"]
+            assert 0 < got <= cap, (mode, level, got, cap)
+            assert got * 16 <= r["layer_cache_bytes"], \
+                f"{mode}/{level}: collective {got}B is cache-scale " \
+                f"(layer slice {r['layer_cache_bytes']}B)"

@@ -1,0 +1,72 @@
+"""Multi-device test rig: run a function under N forced host devices.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set *before*
+jax initialises its backends, and the main pytest process must keep the
+real single-device view (smoke tests and benches measure on it — see
+conftest.py).  So multi-device cases run in a **subprocess**: the parent
+calls ``run_under_devices("module:function", {...kwargs})``, the child
+(this file's ``__main__``) sets the flag, imports the target from the
+tests/src path, calls it with the JSON-decoded kwargs, and prints the
+JSON-encoded result behind a sentinel line.  Anything JSON-serialisable
+round-trips; stderr/stdout are attached to the failure message otherwise.
+
+This composes with the existing suite (tests/test_distributed.py runs its
+multi-device checks the same way, inline) and is reusable: any test module
+can declare a module-level function and fan it out across device counts —
+tests/test_tp_serve.py drives the tensor-parallel parity matrix through it.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(_HERE, "..", "src")
+_SENTINEL = "TP_RIG_RESULT "
+
+DEVICES = 8          # the CI `tp` job's forced host device count
+
+
+def run_under_devices(target: str, kwargs: dict | None = None, *,
+                      n_devices: int = DEVICES, timeout: int = 1800):
+    """Run ``module:function(**kwargs)`` in a subprocess with ``n_devices``
+    forced host devices; return the function's JSON-round-tripped result.
+
+    ``module`` is imported from tests/ (or anything on PYTHONPATH/src), so
+    case functions live in plain test-adjacent modules — no string-embedded
+    programs.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}"
+                        + " " + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (_SRC, _HERE, env.get("PYTHONPATH", "")) if p)
+    payload = json.dumps({"target": target, "kwargs": kwargs or {}})
+    out = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                         input=payload, env=env, capture_output=True,
+                         text=True, timeout=timeout)
+    for line in reversed(out.stdout.splitlines()):
+        if line.startswith(_SENTINEL):
+            return json.loads(line[len(_SENTINEL):])
+    raise RuntimeError(
+        f"tp_rig subprocess for {target!r} (devices={n_devices}) produced "
+        f"no result (exit {out.returncode})\n--- stdout ---\n{out.stdout}"
+        f"\n--- stderr ---\n{out.stderr}")
+
+
+def _child_main():
+    spec = json.loads(sys.stdin.read())
+    mod_name, fn_name = spec["target"].split(":")
+    import importlib
+
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    result = fn(**spec["kwargs"])
+    print(_SENTINEL + json.dumps(result))
+
+
+if __name__ == "__main__":
+    _child_main()

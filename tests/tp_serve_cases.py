@@ -1,0 +1,170 @@
+"""Child-side case functions for the tensor-parallel serving rig.
+
+Imported inside ``tp_rig.run_under_devices`` subprocesses (forced host
+devices) — every function here must be importable with only src/ and
+tests/ on the path and must return JSON-serialisable data.  The model is
+rebuilt from fixed PRNG seeds in every child, so tp=1 and tp=N processes
+score byte-identical parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
+from repro.distributed.compat import make_mesh
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]
+MAX_NEW = 6
+MAX_LEN = 64
+PAGE = 8
+SPEC = dict(draft="ngram", k=3)
+
+
+def _model_params():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 1000,
+                               jax.random.PRNGKey(1))
+    cp = to_codebook_params(pq, wq, state, min_size=1024)
+    return model, params, cp
+
+
+def _mesh(tp: int):
+    return None if tp == 1 else make_mesh((1, tp), ("data", "model"))
+
+
+def serve_matrix(tp: int = 1) -> dict:
+    """Token outputs for every (backend × cache mode × spec mode) serve
+    case at TP degree ``tp`` — the parity matrix of ISSUE 4: tp=N must be
+    token-for-token identical to tp=1 for all of them.
+    """
+    model, params, cp = _model_params()
+    mesh = _mesh(tp)
+    out = {}
+    for be in ("dense", "codebook", "lut"):
+        p = params if be == "dense" else cp
+        for mode, mkw in (("contig", {}),
+                          ("paged", dict(paged=True, page_size=PAGE))):
+            for sp, skw in (("plain", {}),
+                            ("spec", dict(spec=SpecConfig(**SPEC)))):
+                eng = ServeEngine(model, p, max_len=MAX_LEN, max_batch=2,
+                                  mesh=mesh, backend=be, **mkw, **skw)
+                out[f"{be}/{mode}/{sp}"] = eng.serve(PROMPTS,
+                                                     max_new=MAX_NEW)
+    # int8 pages ride along (quantized serving state under TP)
+    eng = ServeEngine(model, params, max_len=MAX_LEN, max_batch=2, mesh=mesh,
+                      paged=True, page_size=PAGE, kv_dtype="int8")
+    out["dense/paged-int8/plain"] = eng.serve(PROMPTS, max_new=MAX_NEW)
+    return out
+
+
+# --- collective-bytes accounting --------------------------------------------
+
+_COLLECTIVES = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
+                "ppermute", "reduce_scatter", "psum_scatter",
+                "all_gather_invariant")
+
+
+def _jaxpr_collective_bytes(closed) -> int:
+    """Max output bytes over every collective primitive, recursing through
+    scan/while/pjit/shard_map sub-jaxprs.  shard_map payload shapes are
+    shard-local — exactly the per-shard wire bytes of each psum."""
+    import jax.core as jcore
+
+    worst = 0
+
+    def visit(jaxpr):
+        nonlocal worst
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if any(name.startswith(c) for c in _COLLECTIVES):
+                for var in list(eqn.outvars) + list(eqn.invars):
+                    aval = getattr(var, "aval", None)
+                    if aval is not None and hasattr(aval, "shape"):
+                        worst = max(worst, int(np.prod(aval.shape or (1,)))
+                                    * aval.dtype.itemsize)
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if isinstance(sub, jcore.ClosedJaxpr):
+                        visit(sub.jaxpr)
+                    elif isinstance(sub, jcore.Jaxpr):
+                        visit(sub)
+
+    visit(closed.jaxpr)
+    return worst
+
+
+_HLO_OPS = ("all-gather", "all-reduce", "all-to-all", "collective-permute",
+            "reduce-scatter")
+_DT_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+             "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1}
+
+
+def _hlo_collective_bytes(text: str) -> int:
+    """Max per-instruction result bytes over the compiled module's
+    collective ops (catches GSPMD-inserted resharding collectives the
+    jaxpr cannot show)."""
+    import re
+
+    worst = 0
+    for line in text.splitlines():
+        if not any(f" {op}(" in line or f"{op}-start(" in line
+                   for op in _HLO_OPS):
+            continue
+        lhs = line.split("=")[0] if "=" in line else line
+        body = line[len(lhs):]
+        shapes = re.findall(r"(\w+)\[([0-9,]*)\]", body.split("(")[0])
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            worst = max(worst, n * _DT_BYTES.get(dt, 4))
+    return worst
+
+
+def collective_bounds(tp: int = 2) -> dict:
+    """Trace + compile one decode step (contiguous and paged) under TP and
+    measure the largest collective payload, jaxpr- and HLO-level.
+
+    Returns the measured maxima plus the model's O(B·H·hd) unit and the
+    per-layer cache-slice bytes the §5/§10 layout must never move.
+    """
+    model, params, _ = _model_params()
+    cfg = model.cfg
+    mesh = _mesh(tp)
+    B, S = 4, 256
+    toks = jnp.ones((B, 1), jnp.int32)
+    res = {"tp": tp,
+           "unit_bytes": B * cfg.n_heads * cfg.hd * 4,
+           "layer_cache_bytes": B * S * cfg.n_kv * cfg.hd * 4}
+
+    # contiguous: per-slot positions, S-sharded slab
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    cache = {**cache, "pos": jnp.full((B,), 9, jnp.int32)}
+    fn = lambda p, t, c: model.decode(p, t, c, mesh)   # noqa: E731
+    res["contig_jaxpr_bytes"] = _jaxpr_collective_bytes(
+        jax.make_jaxpr(fn)(params, toks, cache))
+    hlo = jax.jit(fn).lower(params, toks, cache).compile().as_text()
+    res["contig_hlo_bytes"] = _hlo_collective_bytes(hlo)
+
+    # paged: page-table decode over the in-page-sharded pool
+    page, n_pages = 16, 2 + B * (S // 16)
+    pool = model.init_paged_cache(n_pages, page, jnp.float32)
+    pt = jnp.asarray(
+        np.arange(1, 1 + B * (S // 16)).reshape(B, S // 16), jnp.int32)
+    pcache = {**pool, "page_table": pt, "pos": jnp.full((B,), 9, jnp.int32)}
+    res["paged_jaxpr_bytes"] = _jaxpr_collective_bytes(
+        jax.make_jaxpr(fn)(params, toks, pcache))
+    hlo = jax.jit(fn).lower(params, toks, pcache).compile().as_text()
+    res["paged_hlo_bytes"] = _hlo_collective_bytes(hlo)
+    return res
