@@ -30,6 +30,23 @@ Knobs:
                                      sequence axis.  On CPU hosts with too
                                      few devices the launcher re-execs
                                      itself with N forced host devices.
+    --server                         long-running request-server mode
+                                     (DESIGN.md §11): a traffic trace plays
+                                     through the virtual-clock
+                                     AsyncScheduler — arrival-time
+                                     admission, priorities, streaming,
+                                     swap-out preemption — and a
+                                     TTFT/TPOT/SLO report prints after the
+                                     drain.  The wall clock is only read
+                                     HERE; serving/ itself is clockless.
+    --traffic {poisson,replay}       synthetic seeded Poisson arrivals, or
+                                     a JSON trace from --trace-file
+    --rate R                         poisson arrivals per virtual second
+    --priority-levels N              priority classes 0..N-1 (uniform)
+    --quantum N                      decode tokens per scheduling round
+    --no-preempt                     disable preemption (head-of-line
+                                     waits instead of swapping victims)
+    --slo-ttft / --slo-tpot          per-request SLOs for the report
 
 CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
@@ -40,6 +57,9 @@ CPU smoke runs:
         --spec-draft ngram --spec-k 4 --requests 8 --max-new 24
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --compress --backend codebook --tp 4 --requests 8 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --server --traffic poisson --rate 40 --requests 16 --paged \
+        --priority-levels 2 --slo-ttft 0.3
 """
 
 from __future__ import annotations
@@ -76,6 +96,48 @@ def _ensure_devices(n: int):
                      f"{len(jax.devices())} ({jax.default_backend()})")
 
 
+def run_server(args, engine, cfg):
+    """--server mode: drain a traffic trace through the scheduler and
+    report.  The ONLY wall-clock reads live here, outside serving/."""
+    from repro.serving.server import Server, load_trace, poisson_trace
+
+    if args.traffic == "replay":
+        if not args.trace_file:
+            raise SystemExit("--traffic replay needs --trace-file")
+        trace = load_trace(args.trace_file)
+    else:
+        trace = poisson_trace(
+            args.seed, args.requests, rate=args.rate, vocab=cfg.vocab,
+            plen=(min(2, args.prompt_len), args.prompt_len),
+            max_new=(min(2, args.max_new), args.max_new),
+            priorities=tuple(range(args.priority_levels)),
+            slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+    if not trace:
+        raise SystemExit("--server got an empty trace (check --requests / "
+                         "--trace-file)")
+    srv = Server(engine, quantum=args.quantum, preempt=args.preempt)
+    t0 = time.time()
+    rep = srv.replay(trace)
+    wall = time.time() - t0
+    print(f"[server] {rep.n_requests} requests / {rep.n_tokens} tokens "
+          f"drained in {wall:.2f}s wall ({rep.n_tokens / wall:.1f} tok/s), "
+          f"virtual makespan {rep.makespan:.3f}s")
+    print(f"[server] ttft p50/p99 {rep.p50_ttft:.3f}/{rep.p99_ttft:.3f}s, "
+          f"tpot p50/p99 {rep.p50_tpot:.3f}/{rep.p99_tpot:.3f}s "
+          f"(virtual clock)")
+    print(f"[server] {rep.preemptions} preemptions, {rep.pages_swapped} "
+          f"pages swapped, SLO attainment {100 * rep.slo_attainment:.0f}%")
+    print(f"[server] admission order: {rep.admission_order}")
+    if engine.paged:
+        st = engine.pool.stats
+        print(f"[kv] pool peak {st.peak_pages_in_use}/"
+              f"{engine.pool.usable_pages} pages, prefix hit rate "
+              f"{100 * st.hit_rate:.0f}%, swap out/in "
+              f"{st.swapped_out_pages}/{st.swapped_in_pages} pages")
+    h = srv.sched.handles[0]
+    print("sample:", h.prompt, "->", h.tokens)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -107,6 +169,25 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (DESIGN.md §10)")
+    ap.add_argument("--server", action="store_true",
+                    help="request-server mode (DESIGN.md §11): drain a "
+                         "traffic trace through the AsyncScheduler")
+    ap.add_argument("--traffic", default="poisson",
+                    choices=("poisson", "replay"))
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="poisson arrivals per virtual second")
+    ap.add_argument("--trace-file", default="",
+                    help="JSON trace for --traffic replay "
+                         "(serving.server.save_trace format)")
+    ap.add_argument("--priority-levels", type=int, default=2)
+    ap.add_argument("--quantum", type=int, default=1,
+                    help="decode tokens per scheduling round")
+    ap.add_argument("--preempt", default=True,
+                    action=argparse.BooleanOptionalAction)
+    ap.add_argument("--slo-ttft", type=float, default=None)
+    ap.add_argument("--slo-tpot", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic/workload PRNG seed")
     args = ap.parse_args()
     if args.paged and args.uniform:
         ap.error("--paged serves through the slot pool; drop --uniform")
@@ -115,6 +196,11 @@ def main():
     if args.spec_draft == "model" and not args.compress:
         ap.error("--spec-draft model drafts with the compressed params "
                  "through the lut backend; add --compress")
+    if args.server and args.uniform:
+        ap.error("--server schedules through the slot pool; drop --uniform")
+    if args.server and args.spec_draft != "none":
+        ap.error("the scheduler drives plain decode rounds; drop "
+                 "--spec-draft for --server")
 
     mesh = None
     if args.tp > 1:
@@ -177,7 +263,10 @@ def main():
                          kv_dtype=args.kv_dtype,
                          prefix_cache=args.prefix_cache,
                          top_k=args.top_k, top_p=args.top_p, spec=spec)
-    rng = np.random.default_rng(0)
+    if args.server:
+        run_server(args, engine, cfg)
+        return
+    rng = np.random.default_rng(args.seed)
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]
                for _ in range(args.requests)]
 

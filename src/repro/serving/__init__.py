@@ -1,10 +1,15 @@
 """Serving: weight compression to index form + the batched inference
 engine with its dense/codebook/lut matmul backends (DESIGN.md §3), the
-paged KV cache (§8), and speculative decoding (§9)."""
+paged KV cache (§8), speculative decoding (§9), and the virtual-clock
+request scheduler/server (§11)."""
 
 from repro.serving.compress import to_codebook_params, index_dtype_for
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import SchedState, ServeEngine, SwapBlob
 from repro.serving.kvcache import Admission, PagePool, PoolStats
+from repro.serving.scheduler import (AsyncScheduler, RequestHandle,
+                                     StepCosts, VirtualClock)
+from repro.serving.server import (Server, ServerReport, load_trace,
+                                  poisson_trace, save_trace)
 from repro.serving.spec import SpecConfig, SpecStats
 from repro.kernels.dispatch import (BACKENDS, BackendSpec, LutSpec,
                                     make_lut_spec, use_backend)

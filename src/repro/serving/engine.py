@@ -54,6 +54,17 @@ distributionally unbiased (and composes with ``top_k``/``top_p``).  The
 contiguous spec loop is still a single ``lax.while_loop`` (the n-gram
 draft is device-side); the paged spec path steps rounds from Python and
 rolls rejected pages back through ``PagePool.truncate``/``extend``.
+
+**Step-level scheduling API** (DESIGN.md §11): ``serve()`` owns its whole
+request list; the ``sched_*`` / ``serve_step`` surface hands that control
+flow to an external scheduler (``serving.scheduler.AsyncScheduler``)
+instead — ``sched_state`` allocates the slot-pool state, ``sched_admit``
+prefills one request into one slot, ``serve_step`` decodes a bounded
+*quantum* of tokens per round (the SAME jitted while_loop, with per-round
+stop lengths), and ``sched_swap_out``/``sched_swap_in`` move a preempted
+request's KV state (contiguous slot rows, or its pool pages) to a
+host-side ``SwapBlob`` and back, bit-exactly.  Requests arrive, wait,
+stream, preempt, and resume — without this engine ever reading a clock.
 """
 
 from __future__ import annotations
@@ -74,7 +85,7 @@ from repro.serving.spec import (SpecConfig, SpecStats, filter_logits,
                                 ngram_propose, ngram_propose_host,
                                 spec_accept)
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "SchedState", "SwapBlob"]
 
 _ENGINE_FAMILIES = ("dense", "moe")
 
@@ -114,6 +125,53 @@ def _index_form_stats(params):
             books.append(np.asarray(leaf[0] if leaf.ndim == 2 else leaf))
     book = np.concatenate(books) if books else None
     return fan_in > 0, fan_in, book
+
+
+@dataclasses.dataclass
+class SchedState:
+    """Mutable slot-pool state for the step-level scheduling API
+    (DESIGN.md §11).  One per scheduler session; every field is reassigned
+    by the engine's ``sched_*`` calls — callers treat it as opaque.
+
+    ``live`` is the host-side occupancy mirror (which slots hold a
+    request); the per-slot device vectors mirror the ``serve()`` loop's
+    carry.  Contiguous engines own ``cache`` (KV slab + per-slot pos);
+    paged engines own the page-table mirror ``pt_np``, the per-slot
+    ``pos`` vector, and the per-slot ``Admission`` handles (the pool
+    itself lives on the engine)."""
+
+    live: object                     # (B,) np.bool_ — slot occupied
+    last: object                     # (B,) int32 — last sampled token
+    n_gen: object                    # (B,) int32 — tokens emitted
+    stops: object                    # (B,) int32 — per-slot stop length
+    out: object                      # (B, max_len) int32 — emission buffer
+    key: object                      # PRNG carry (temperature > 0)
+    cache: dict | None = None        # contiguous KV cache (with (B,) pos)
+    pt_np: object | None = None      # paged (B, P) page-table host mirror
+    pos: object | None = None        # paged per-slot positions (device)
+    adm: list | None = None          # paged per-slot Admission handles
+
+
+@dataclasses.dataclass
+class SwapBlob:
+    """Host-side image of one preempted request's serving state — what
+    ``sched_swap_out`` extracts and ``sched_swap_in`` restores, verbatim
+    (restoration is bit-exact: no recompute, no re-quantization).
+
+    ``data`` maps cache plane names to host arrays: the request's live
+    pages ``(L, n_pages, page, ...)`` in paged mode, its slot's cache rows
+    ``(L, pos, ...)`` in contiguous mode.  ``reserve`` is the paged
+    admission-time page reservation ``swap_in`` must re-claim."""
+
+    paged: bool
+    pos: int                         # tokens whose K/V are written
+    stop: int                        # request stop length
+    n_gen: int                       # tokens emitted so far
+    last: int                        # last sampled token
+    reserve: int                     # paged page reservation to re-claim
+    n_pages: int                     # pages of real data (swap-cost unit)
+    out_row: object                  # emitted tokens (out-buffer prefix)
+    data: dict                       # plane name -> host array
 
 
 @dataclasses.dataclass
@@ -240,6 +298,18 @@ class ServeEngine:
         self._prefill_chunk = jax.jit(bb(self._prefill_chunk_fn),
                                       donate_argnums=(1,))
         self._pool: PagePool | None = None
+        # step-level scheduling API (DESIGN.md §11): fixed-shape swap
+        # movers — page-axis gather/scatter for the pool, a whole-slot
+        # row splice for the contiguous slab — so preemption never grows
+        # the compile cache past one program each
+        self._gather_pages = jax.jit(lambda cache, pids: {
+            k: jnp.take(v, pids, axis=1) for k, v in cache.items()})
+        self._scatter_pages = jax.jit(self._scatter_pages_fn,
+                                      donate_argnums=(0,))
+        self._gather_rows = jax.jit(lambda kv, slot: {
+            k: jax.lax.dynamic_index_in_dim(v, slot, axis=1, keepdims=False)
+            for k, v in kv.items()})
+        self._restore_slot = jax.jit(self._splice, donate_argnums=(0,))
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.top_k < 0:
@@ -668,6 +738,22 @@ class ServeEngine:
                 np.int32(adm.write_pids[ci]))
         return logits
 
+    def _paged_admit(self, prompt, stop, key):
+        """One request's paged admission sequence — pool admission,
+        chunked prefill, prefix registration, CoW split, first-token
+        sample — shared verbatim by serve() and the scheduler API so the
+        two paths cannot drift.  Returns (adm, first_token, key), with
+        adm None (key untouched) when the pool cannot admit yet."""
+        pool = self.pool
+        adm = pool.admit(list(prompt), stop)
+        if adm is None:
+            return None, None, key
+        logits = self._chunked_prefill(pool, list(prompt), adm)
+        pool.register_prefill(adm)
+        pool.cow(adm)     # shared tail page → private before decode writes
+        key, sub = jax.random.split(key)
+        return adm, int(self._sample(logits, sub)[0]), key
+
     def _serve_paged(self, prompts, stops_req, key):
         pool = self.pool
         page = self.page_size
@@ -699,17 +785,13 @@ class ServeEngine:
                 if not queue:
                     break
                 rid = queue[0]
-                adm = pool.admit(prompts[rid], stops_req[rid])
+                adm, first, key = self._paged_admit(prompts[rid],
+                                                    stops_req[rid], key)
                 if adm is None:
                     break                              # wait for pages
                 queue.popleft()
-                logits = self._chunked_prefill(pool, prompts[rid], adm)
-                pool.register_prefill(adm)
-                pool.cow(adm)     # shared tail page → private before decode
                 pt_np[b] = 0
                 pt_np[b, :len(adm.pids)] = adm.pids
-                key, sub = jax.random.split(key)
-                first = int(self._sample(logits, sub)[0])
                 stop = stops_req[rid]
                 pos = pos.at[b].set(len(prompts[rid]))
                 last = last.at[b].set(first)
@@ -794,16 +876,12 @@ class ServeEngine:
                 if not queue:
                     break
                 rid = queue[0]
-                adm = pool.admit(prompts[rid], stops_req[rid])
+                adm, first, key = self._paged_admit(prompts[rid],
+                                                    stops_req[rid], key)
                 if adm is None:
                     break
                 queue.popleft()
                 plen = len(prompts[rid])
-                logits = self._chunked_prefill(pool, prompts[rid], adm)
-                pool.register_prefill(adm)
-                pool.cow(adm)
-                key, sub = jax.random.split(key)
-                first = int(self._sample(logits, sub)[0])
                 slot_rid[b], slot_adm[b] = rid, adm
                 # release the worst-case tail: rounds extend() it back
                 # page-by-page as speculation actually needs it
@@ -888,6 +966,227 @@ class ServeEngine:
                     slot_ctx[b] = None
                     slot_rid[b], slot_adm[b] = None, None
         return [results[i] for i in range(n)]
+
+    # --- step-level scheduling API (DESIGN.md §11) ---------------------------
+
+    def _scatter_pages_fn(self, cache, pids, pages):
+        """cache[:, pids[i]] = pages[:, i] for every pool plane.  Padding
+        entries of ``pids`` point at trash page 0 (duplicate writes of the
+        same zero page — content is never read un-fenced)."""
+        return {k: v.at[:, pids].set(pages[k].astype(v.dtype))
+                for k, v in cache.items()}
+
+    def sched_check(self, prompt, stop: int) -> None:
+        """Validate one request against this engine's capacity; raises for
+        a request that could NEVER be admitted (schedulers call this at
+        submit time so impossible requests fail fast, not in the queue)."""
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if stop < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + stop > self.max_len:
+            raise ValueError("prompt + max_new exceeds max_len")
+        if self.paged:
+            pool = self.pool
+            needed = pool.pages_needed(len(prompt), stop)
+            if needed > min(pool.pages_per_slot, pool.usable_pages):
+                raise ValueError(
+                    f"request needs {needed} pages but the slot holds "
+                    f"{pool.pages_per_slot} and the pool "
+                    f"{pool.usable_pages}")
+
+    def sched_state(self, key=None) -> SchedState:
+        """Allocate one scheduler session's slot-pool state.  The paged
+        pool itself lives on the engine (prefix cache persists across
+        sessions, exactly like ``serve()`` calls)."""
+        if self.spec is not None:
+            raise NotImplementedError(
+                "the step-level API drives plain decode rounds; "
+                "speculative serve() remains a batch mode")
+        B = self.max_batch
+        z = jnp.zeros((B,), jnp.int32)
+        st = SchedState(
+            live=np.zeros((B,), bool), last=z, n_gen=z,
+            stops=jnp.ones((B,), jnp.int32),
+            out=jnp.zeros((B, self.max_len), jnp.int32),
+            key=jax.random.PRNGKey(0) if key is None else key)
+        if self.paged:
+            st.pt_np = np.zeros((B, self.pool.pages_per_slot), np.int32)
+            st.pos = jnp.zeros((B,), jnp.int32)
+            st.adm = [None] * B
+        else:
+            cache = self._place_kv(self.model.init_cache(
+                B, self.max_len, dtype=self._cache_dtype))
+            st.cache = {**cache, "pos": jnp.zeros((B,), jnp.int32)}
+        return st
+
+    def sched_admit(self, st: SchedState, slot: int, prompt,
+                    stop: int) -> int | None:
+        """Prefill one request into free slot ``slot``.  Returns the first
+        sampled token, or None when the paged pool cannot supply its page
+        reservation yet (the admission gate — nothing is allocated)."""
+        if self.paged:
+            adm, first, st.key = self._paged_admit(prompt, stop, st.key)
+            if adm is None:
+                return None
+            st.adm[slot] = adm
+            st.pt_np[slot] = 0
+            st.pt_np[slot, :len(adm.pids)] = adm.pids
+            st.pos = st.pos.at[slot].set(len(prompt))
+            st.last = st.last.at[slot].set(first)
+            st.n_gen = st.n_gen.at[slot].set(1)
+            st.stops = st.stops.at[slot].set(stop)
+            st.out = st.out.at[slot].set(
+                jnp.zeros((self.max_len,), jnp.int32).at[0].set(first))
+        else:
+            toks1, len1 = self._pad_prompts([list(prompt)])
+            lg1, c1 = self._prefill(self.params, toks1, len1)
+            st.key, sub = jax.random.split(st.key)
+            firstd = self._sample(lg1, sub)
+            act = jnp.asarray(st.live) & (st.n_gen < st.stops)
+            st.cache, st.last, _, st.n_gen, st.stops, st.out = self._admit(
+                st.cache, c1, slot, firstd[0], stop,
+                st.last, act, st.n_gen, st.stops, st.out)
+            first = int(firstd[0])
+        st.live[slot] = True
+        return first
+
+    def serve_step(self, st: SchedState, quantum: int = 1):
+        """One bounded decode round: every live, unfinished slot emits up
+        to ``quantum`` tokens in lockstep (the serve() while_loop with
+        per-round stop lengths — same jitted program, same numerics).
+
+        Returns ``(tokens, finished)``: the new tokens per slot this
+        round, and the slots whose requests hit their true stop (the
+        caller must harvest and ``sched_release`` them)."""
+        act = jnp.asarray(st.live) & (st.n_gen < st.stops)
+        if not bool(jnp.any(act)):
+            return {}, []
+        prev = np.asarray(st.n_gen).copy()
+        round_stops = jnp.minimum(st.stops, st.n_gen + quantum)
+        if self.paged:
+            cache = {**self.pool.cache, "page_table": jnp.asarray(st.pt_np),
+                     "pos": st.pos}
+        else:
+            cache = st.cache
+        cache, st.last, _, st.n_gen, st.out, st.key = self._decode_loop(
+            self.params, cache, st.last, act, st.n_gen, round_stops,
+            st.out, st.key, stop_on_event=False)
+        if self.paged:
+            st.pos = cache["pos"]
+            self.pool.cache = {k: v for k, v in cache.items()
+                               if k not in ("page_table", "pos")}
+        else:
+            st.cache = cache
+        gen, stops = np.asarray(st.n_gen), np.asarray(st.stops)
+        out_np = np.asarray(st.out)
+        toks, done = {}, []
+        for b in range(len(st.live)):
+            if not st.live[b]:
+                continue
+            if gen[b] > prev[b]:
+                toks[b] = out_np[b, prev[b]:gen[b]].tolist()
+            if gen[b] >= stops[b]:
+                done.append(b)
+        return toks, done
+
+    def sched_release(self, st: SchedState, slot: int) -> None:
+        """Retire a finished slot.  Paged: the request's pages go back to
+        the pool (prefix registration included, like serve()); contiguous:
+        the next admission's splice evicts the stale rows."""
+        if self.paged:
+            self.pool.retire(st.adm[slot])
+            st.adm[slot] = None
+            st.pt_np[slot] = 0
+            st.pos = st.pos.at[slot].set(0)
+        else:
+            st.cache = {**st.cache,
+                        "pos": st.cache["pos"].at[slot].set(0)}
+        st.live[slot] = False
+
+    def sched_swap_out(self, st: SchedState, slot: int) -> SwapBlob:
+        """Preempt slot ``slot``: copy its KV state to a host-side blob,
+        then release its device resources (paged: page refcounts drop,
+        prefix-cache hashes survive — ``PagePool.swap_out``).  The copy
+        happens strictly before the release: a released page can be
+        re-allocated and overwritten immediately."""
+        gen = int(np.asarray(st.n_gen)[slot])
+        stop = int(np.asarray(st.stops)[slot])
+        last = int(np.asarray(st.last)[slot])
+        out_row = np.asarray(st.out)[slot, :gen].copy()
+        if self.paged:
+            pool, adm = self.pool, st.adm[slot]
+            pos = int(np.asarray(st.pos)[slot])
+            n_data = -(-pos // self.page_size)
+            reserve = adm.reserve
+            pids = np.zeros((pool.pages_per_slot,), np.int32)
+            pids[:adm.n_live] = adm.pids[:adm.n_live]
+            pages = self._gather_pages(pool.cache, jnp.asarray(pids))
+            data = {k: np.asarray(v[:, :n_data]) for k, v in pages.items()}
+            pool.swap_out(adm)
+            st.adm[slot] = None
+            st.pt_np[slot] = 0
+            st.pos = st.pos.at[slot].set(0)
+            blob = SwapBlob(paged=True, pos=pos, stop=stop, n_gen=gen,
+                            last=last, reserve=reserve, n_pages=n_data,
+                            out_row=out_row, data=data)
+        else:
+            pos = int(np.asarray(st.cache["pos"])[slot])
+            rows = self._gather_rows(st.cache["kv"], slot)
+            data = {k: np.asarray(v)[:, :pos] for k, v in rows.items()}
+            st.cache = {**st.cache,
+                        "pos": st.cache["pos"].at[slot].set(0)}
+            blob = SwapBlob(paged=False, pos=pos, stop=stop, n_gen=gen,
+                            last=last, reserve=0,
+                            n_pages=-(-pos // self.page_size),
+                            out_row=out_row, data=data)
+        st.live[slot] = False
+        return blob
+
+    def sched_swap_in(self, st: SchedState, slot: int,
+                      blob: SwapBlob) -> bool:
+        """Restore a swapped-out request into free slot ``slot`` —
+        bit-exact (pages/rows written back verbatim), so a preempted
+        request's continuation is token-identical to never having been
+        preempted.  Returns False when the paged pool cannot supply the
+        request's reservation yet."""
+        if self.paged:
+            pool = self.pool
+            adm = pool.swap_in(blob.reserve)
+            if adm is None:
+                return False
+            P = pool.pages_per_slot
+            pids = np.zeros((P,), np.int32)
+            pids[:blob.n_pages] = adm.pids[:blob.n_pages]
+            pages = {}
+            for k, v in pool.cache.items():
+                pad = np.zeros((v.shape[0], P) + tuple(v.shape[2:]),
+                               np.asarray(blob.data[k]).dtype)
+                pad[:, :blob.n_pages] = blob.data[k]
+                pages[k] = jnp.asarray(pad)
+            pool.cache = self._scatter_pages(pool.cache, jnp.asarray(pids),
+                                             pages)
+            st.adm[slot] = adm
+            st.pt_np[slot] = 0
+            st.pt_np[slot, :len(adm.pids)] = adm.pids
+            st.pos = st.pos.at[slot].set(blob.pos)
+        else:
+            kv = {}
+            for k, v in st.cache["kv"].items():
+                pad = np.zeros((v.shape[0], 1) + tuple(v.shape[2:]),
+                               np.asarray(blob.data[k]).dtype)
+                pad[:, 0, :blob.pos] = blob.data[k]
+                kv[k] = jnp.asarray(pad)
+            c1 = {"kv": kv, "pos": jnp.asarray([blob.pos], jnp.int32)}
+            st.cache = self._restore_slot(st.cache, c1, slot)
+        row = np.zeros((self.max_len,), np.int32)
+        row[:blob.n_gen] = blob.out_row
+        st.out = st.out.at[slot].set(jnp.asarray(row))
+        st.last = st.last.at[slot].set(blob.last)
+        st.n_gen = st.n_gen.at[slot].set(blob.n_gen)
+        st.stops = st.stops.at[slot].set(blob.stop)
+        st.live[slot] = True
+        return True
 
     # --- prompt plumbing -----------------------------------------------------
 

@@ -48,6 +48,16 @@ rejection-emptied tail pages to the free list while keeping them
 admissions, so ``extend`` back up to the admission-time worst case can
 never deadlock), and copy-on-write-splits a shared boundary page before
 the request's next writes can land in it.
+
+Scheduler preemption (DESIGN.md §11): ``swap_out`` releases a preempted
+request's page references after the engine copies their contents to a
+host-side store — registered prefix pages survive at the cache's own
+refcount, hashes intact — and ``swap_in`` re-allocates the full
+reservation as fresh private pages for the engine to scatter the blob
+back into.  ``free_claimable``/``pressure`` are introspection signals
+(how close admission is to blocking) for schedulers and benchmarks; the
+stock ``AsyncScheduler`` itself preempts on placement *failure* — admit/
+swap-in returning "not yet" — rather than on a pressure threshold.
 """
 
 from __future__ import annotations
@@ -80,6 +90,8 @@ class PoolStats:
     evictions: int = 0
     peak_pages_in_use: int = 0
     truncated_pages: int = 0     # pages returned by speculative rollback
+    swapped_out_pages: int = 0   # pages released by scheduler preemption
+    swapped_in_pages: int = 0    # pages re-allocated by swap-in
 
     @property
     def hit_rate(self) -> float:
@@ -206,6 +218,18 @@ class PagePool:
         last = max(prompt_len, prompt_len + stop - 1)
         return max(_ceil_div(prompt_len, self.page_size),
                    _ceil_div(last, self.page_size))
+
+    def free_claimable(self) -> int:
+        """Pages a new admission could claim right now: the free list plus
+        cache-only evictables, minus the rollback pages still owed to
+        in-flight reservations (DESIGN.md §11)."""
+        return len(self.free) + self._evictable() - self.reserved_extra
+
+    def pressure(self) -> float:
+        """Fraction of usable capacity NOT claimable by a new admission —
+        0.0 is an idle pool, 1.0 means admission is fully blocked until an
+        in-flight request retires or is preempted."""
+        return 1.0 - self.free_claimable() / self.usable_pages
 
     # --- allocator ------------------------------------------------------------
 
@@ -426,6 +450,54 @@ class PagePool:
         self.reserved_extra -= need - adm.n_live
         adm.n_live = need
         self._note_usage()
+
+    # --- scheduler preemption (DESIGN.md §11) ---------------------------------
+
+    def swap_out(self, adm: Admission) -> int:
+        """Drop a preempted request's page references.  The engine must have
+        copied the live pages' contents to the host FIRST — released pages
+        can be re-allocated and overwritten immediately.
+
+        Prefix-cache state is untouched: pages this request registered (or
+        shared) survive at the cache's own refcount, hash chains intact, so
+        concurrent and future requests keep hitting them while the victim
+        is swapped out.  Unlike ``retire``, the partial tail page is NOT
+        registered — the request is coming back and will keep writing into
+        its private copy.  The request's standing reservation is dropped
+        too (``reserved_extra``): a swapped request holds no claim on the
+        pool until ``swap_in`` re-admits it.  Returns the number of page
+        references released."""
+        n = adm.n_live
+        for pid in adm.pids[:adm.n_live]:
+            self._release(pid)
+        self.reserved_extra -= adm.reserve - adm.n_live
+        adm.pids = []
+        adm.n_live = adm.reserve = 0
+        self.stats.swapped_out_pages += n
+        return n
+
+    def swap_in(self, reserve_pages: int) -> Admission | None:
+        """Re-admit a swapped-out request: allocate its full reservation
+        again as fresh private pages (no prefix lookup — the host blob the
+        engine scatters back is authoritative, and writing restored bytes
+        into a shared page would corrupt other readers), or return None
+        when the pool cannot supply it yet.  ``reserve_pages`` never
+        exceeds the original admission's reservation, so a request that
+        was admitted once can always be restored once enough pages drain."""
+        if reserve_pages > self.pages_per_slot \
+                or reserve_pages > self.usable_pages:
+            raise ValueError(
+                f"swap-in needs {reserve_pages} pages but the slot holds "
+                f"{self.pages_per_slot} and the pool {self.usable_pages}")
+        if not self.can_admit(reserve_pages):
+            return None
+        pids = [self._alloc() for _ in range(reserve_pages)]
+        self._note_usage()
+        self.stats.swapped_in_pages += reserve_pages
+        return Admission(pids=pids, n_chunks=0, compute_from=0,
+                         write_pids=[], full_keys=[], partial_key=None,
+                         cow_tail=None, reserve=reserve_pages,
+                         n_live=reserve_pages)
 
     def retire(self, adm: Admission):
         """Drop the retired request's page references.  A non-aligned

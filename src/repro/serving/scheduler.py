@@ -1,0 +1,403 @@
+"""Arrival-time-driven request scheduler over the step-level ServeEngine
+API (DESIGN.md §11).
+
+The serving layer's missing tense: PRs 1–4 serve a *batch* — ``serve()``
+owns the whole request list up front and returns when the last request
+finishes.  This module serves *traffic*: requests ARRIVE (each carries an
+arrival time, a priority class, and optional SLOs), wait in an admission
+queue, stream their tokens back through per-request callbacks/handles
+the moment they are sampled, and are PREEMPTIBLE — when the head of the
+queue cannot be placed, the scheduler swaps a victim's KV state out to a
+host-side ``SwapBlob`` (paged: page refcounts released, prefix-cache
+hashes retained; contiguous: the slot's cache rows) and restores it
+bit-exactly once capacity drains, so a preempted-then-restored request's
+tokens are identical to an uncontended run.
+
+**Virtual-clock rule** (what makes this subsystem's tests an archetype):
+nothing under ``serving/`` ever reads the wall clock — time is always
+INJECTED through the ``clock`` handle, and every scheduling decision is
+a pure function of (trace, cost model, pool state).  A multi-tenant
+traffic trace therefore replays bit-identically in CI: same admissions,
+same preemptions, same streams (tests/test_scheduler_sim.py).  Real
+deployments inject a wall clock from OUTSIDE serving/ (launch/serve.py).
+
+Scheduling policy — deterministic by construction:
+
+* **Admission** is strict head-of-line in (priority desc, arrival, seq)
+  order: the head is placed when a slot is free AND (paged) the pool can
+  supply its worst-case page reservation — PR 2's free-pages admission
+  gate, unchanged.  No bypass: a blocked head waits, it is never
+  overtaken by a smaller request behind it.
+* **Preemption**: when the head cannot be placed, a running victim of
+  STRICTLY lower priority is swapped out (lowest priority first; among
+  equals the most recently admitted — LIFO preserves the oldest
+  requests' progress) and re-queued under its ORIGINAL key, so it
+  resumes in its original order.  Equal priorities never preempt each
+  other, which with head-of-line admission gives freedom from
+  starvation: under a draining trace every blocker finishes in bounded
+  rounds and the head is eventually placed.
+* **Decode** runs in lockstep rounds of ``quantum`` tokens per slot
+  (``ServeEngine.serve_step``); the clock advances by the injected cost
+  model after every prefill, round, and swap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+__all__ = ["AsyncScheduler", "RequestHandle", "StepCosts", "VirtualClock",
+           "QUEUED", "RUNNING", "SWAPPED", "FINISHED"]
+
+QUEUED, RUNNING, SWAPPED, FINISHED = ("queued", "running", "swapped",
+                                      "finished")
+
+
+class VirtualClock:
+    """Injected time: ``now()`` reads it, ``advance()`` moves it.  The
+    only clock the serving layer knows — simulation IS the production
+    code path, just with a different instance plugged in."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"time cannot run backwards (dt={dt})")
+        self._t += dt
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCosts:
+    """Deterministic virtual-time cost model (seconds per unit) — what
+    the clock advances on each scheduling action.  The values are
+    arbitrary but FIXED: simulated TTFT/TPOT are comparable across runs
+    and replay exactly.  A wall-clock deployment ignores this (its clock
+    advances itself)."""
+
+    prefill_token: float = 1e-3      # per prompt token at admission
+    decode_step: float = 2e-2        # per lockstep round token
+    swap_page: float = 2e-3          # per page moved by swap-out/swap-in
+
+
+class RequestHandle:
+    """One submitted request's live view: state, streamed tokens, and
+    per-request metrics (TTFT/TPOT in injected-clock seconds)."""
+
+    def __init__(self, sched, rid, prompt, max_new, *, priority, arrival,
+                 slo_ttft, slo_tpot, on_token):
+        self._sched = sched
+        self.rid = rid
+        self.prompt = list(prompt)
+        self.max_new = int(max_new)
+        self.priority = int(priority)
+        self.arrival = float(arrival)
+        self.slo_ttft = slo_ttft
+        self.slo_tpot = slo_tpot
+        self.on_token = on_token
+        self.state = QUEUED
+        self.tokens: list[int] = []          # generated tokens, streamed
+        self.admitted_at = None              # first admission
+        self.first_token_at = None
+        self.finished_at = None
+        self.n_preempt = 0
+        self.pages_swapped = 0               # swap-OUT direction only
+        self.slot = None
+        self._admit_seq = -1                 # recency key for victim choice
+
+    @property
+    def ttft(self):
+        """Time to first token (None until one streams)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.arrival
+
+    @property
+    def tpot(self):
+        """Mean time per output token after the first (None until
+        finished; 0.0 for single-token requests)."""
+        if self.finished_at is None:
+            return None
+        if len(self.tokens) < 2:
+            return 0.0
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.tokens) - 1))
+
+    def slo_met(self) -> bool:
+        """True when every SLO this request set is met (vacuously true
+        for a finished request that set none)."""
+        if self.state != FINISHED:
+            return False
+        if self.slo_ttft is not None and self.ttft > self.slo_ttft:
+            return False
+        if self.slo_tpot is not None and self.tpot > self.slo_tpot:
+            return False
+        return True
+
+    def result(self) -> list[int]:
+        """prompt + generated tokens (valid once finished)."""
+        if self.state != FINISHED:
+            raise RuntimeError(f"request {self.rid} is {self.state}")
+        return self.prompt + self.tokens
+
+    def stream(self):
+        """Yield this request's generated tokens as they are produced,
+        driving the owning scheduler between yields until it finishes."""
+        i = 0
+        while True:
+            while i < len(self.tokens):
+                yield self.tokens[i]
+                i += 1
+            if self.state == FINISHED:
+                return
+            if not self._sched.step():
+                raise RuntimeError(
+                    f"scheduler idle but request {self.rid} is {self.state}")
+
+
+class AsyncScheduler:
+    """Request-level scheduler owning one ``ServeEngine`` session.
+
+    ``submit()`` registers requests (future arrivals are held until the
+    clock reaches them — trace replay); ``step()`` runs one scheduling
+    round; ``run_until_idle()`` drains everything.  All decisions are
+    logged to ``events`` — the deterministic replay record the simulation
+    suite compares run-to-run."""
+
+    def __init__(self, engine, *, clock=None, costs=None, quantum: int = 1,
+                 preempt: bool = True, key=None):
+        if engine.spec is not None:
+            raise NotImplementedError(
+                "the scheduler drives plain decode rounds; speculative "
+                "serve() remains a batch mode")
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        self.engine = engine
+        self.clock = VirtualClock() if clock is None else clock
+        self.costs = StepCosts() if costs is None else costs
+        self.quantum = int(quantum)
+        self.preempt_enabled = bool(preempt)
+        self.st = engine.sched_state(key)
+        self.slots: list[RequestHandle | None] = [None] * engine.max_batch
+        self.pending: list[tuple] = []       # (arrival, rid) future heap
+        self.ready: list[tuple] = []         # (-priority, arrival, rid)
+        self.blobs: dict[int, object] = {}   # rid -> SwapBlob (preempted)
+        self.handles: dict[int, RequestHandle] = {}
+        self.events: list[tuple] = []        # (t, kind, rid) replay log
+        self.n_preemptions = 0
+        self._seq = 0
+        self._admits = 0
+
+    # --- submission ----------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, *, priority: int = 0,
+               arrival: float | None = None, slo_ttft: float | None = None,
+               slo_tpot: float | None = None,
+               on_token=None) -> RequestHandle:
+        """Register one request.  ``arrival`` defaults to now; a future
+        arrival is held back until the clock reaches it.  Raises
+        immediately for a request that could never fit the engine."""
+        self.engine.sched_check(prompt, max_new)
+        t = self.clock.now() if arrival is None else float(arrival)
+        if t < self.clock.now():
+            raise ValueError(
+                f"arrival {t} is in the past (now={self.clock.now()})")
+        h = RequestHandle(self, self._seq, prompt, max_new,
+                          priority=priority, arrival=t, slo_ttft=slo_ttft,
+                          slo_tpot=slo_tpot, on_token=on_token)
+        self._seq += 1
+        self.handles[h.rid] = h
+        heapq.heappush(self.pending, (t, h.rid))
+        self._log("submit", h.rid)
+        return h
+
+    # --- internals -----------------------------------------------------------
+
+    def _log(self, kind: str, rid: int) -> None:
+        self.events.append((round(self.clock.now(), 9), kind, rid))
+
+    def _harvest(self) -> None:
+        now = self.clock.now()
+        while self.pending and self.pending[0][0] <= now:
+            _, rid = heapq.heappop(self.pending)
+            h = self.handles[rid]
+            heapq.heappush(self.ready, (-h.priority, h.arrival, rid))
+            self._log("arrive", rid)
+
+    def next_arrival(self) -> float | None:
+        return self.pending[0][0] if self.pending else None
+
+    @property
+    def running(self) -> list[RequestHandle]:
+        return [h for h in self.slots if h is not None]
+
+    def _free_slot(self) -> int | None:
+        for b, h in enumerate(self.slots):
+            if h is None:
+                return b
+        return None
+
+    def _emit(self, h: RequestHandle, ts) -> None:
+        now = self.clock.now()
+        for t in ts:
+            if h.first_token_at is None:
+                h.first_token_at = now
+            h.tokens.append(int(t))
+            if h.on_token is not None:
+                h.on_token(h, int(t), now)
+
+    def _finish(self, slot: int) -> None:
+        h = self.slots[slot]
+        self.engine.sched_release(self.st, slot)
+        self.slots[slot] = None
+        h.slot = None
+        h.state = FINISHED
+        h.finished_at = self.clock.now()
+        self._log("finish", h.rid)
+
+    # --- placement + preemption ----------------------------------------------
+
+    def _place(self, h: RequestHandle, slot: int) -> bool:
+        """Admit (fresh) or swap in (preempted) ``h`` into ``slot``."""
+        eng = self.engine
+        if h.rid in self.blobs:
+            blob = self.blobs[h.rid]
+            if not eng.sched_swap_in(self.st, slot, blob):
+                return False
+            del self.blobs[h.rid]
+            # the restore pays swap time but pages_swapped counts only the
+            # swap-OUT direction (matching PoolStats.swapped_out_pages)
+            self.clock.advance(self.costs.swap_page * blob.n_pages)
+            self._log("resume", h.rid)
+        else:
+            first = eng.sched_admit(self.st, slot, h.prompt, h.max_new)
+            if first is None:
+                return False
+            self.clock.advance(self.costs.prefill_token * len(h.prompt))
+            if h.admitted_at is None:
+                h.admitted_at = self.clock.now()
+            self._log("admit", h.rid)
+            self._emit(h, [first])           # prefill samples token #1
+        h.state = RUNNING
+        h.slot = slot
+        h._admit_seq = self._admits
+        self._admits += 1
+        self.slots[slot] = h
+        if len(h.tokens) >= h.max_new:       # max_new=1: done on arrival
+            self._finish(slot)
+        return True
+
+    def _reclaim_reaches(self, h: RequestHandle) -> bool:
+        """Upper-bound check before paged preemption: could evicting
+        EVERY strictly-lower-priority victim possibly cover ``h``'s page
+        reservation?  If not, swapping victims out is futile — the head
+        waits instead of paying swap costs for nothing.  (Worst-case
+        demand: prefix-cache hits can only lower it.)"""
+        pool = self.engine.pool
+        need = (self.blobs[h.rid].reserve if h.rid in self.blobs
+                else pool.pages_needed(len(h.prompt), h.max_new))
+        avail = pool.free_claimable() + sum(
+            self.st.adm[v.slot].n_live for v in self.running
+            if v.priority < h.priority)
+        return avail >= need
+
+    def _pick_victim(self, below_priority: int) -> RequestHandle | None:
+        """Lowest-priority, most-recently-admitted running request
+        strictly below ``below_priority`` — LIFO among equals preserves
+        the oldest requests' progress."""
+        cands = [h for h in self.running if h.priority < below_priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda h: (h.priority, -h._admit_seq))
+
+    def _preempt(self, victim: RequestHandle) -> None:
+        blob = self.engine.sched_swap_out(self.st, victim.slot)
+        self.clock.advance(self.costs.swap_page * blob.n_pages)
+        self.blobs[victim.rid] = blob
+        self.slots[victim.slot] = None
+        victim.slot = None
+        victim.state = SWAPPED
+        victim.n_preempt += 1
+        victim.pages_swapped += blob.n_pages
+        self.n_preemptions += 1
+        heapq.heappush(self.ready,
+                       (-victim.priority, victim.arrival, victim.rid))
+        self._log("preempt", victim.rid)
+
+    def _admit_ready(self) -> int:
+        """Place queue heads until one blocks (strict head-of-line).
+        A blocked head may preempt strictly-lower-priority victims, one
+        at a time, until it fits or no victims remain."""
+        placed = 0
+        while self.ready:
+            _, _, rid = self.ready[0]
+            h = self.handles[rid]
+            while True:
+                slot = self._free_slot()
+                if slot is not None and self._place(h, slot):
+                    heapq.heappop(self.ready)
+                    placed += 1
+                    break
+                victim = (self._pick_victim(h.priority)
+                          if self.preempt_enabled else None)
+                if victim is None:
+                    return placed            # head-of-line wait
+                if (slot is not None and self.engine.paged
+                        and not self._reclaim_reaches(h)):
+                    return placed            # pages blocked; eviction
+                self._preempt(victim)        # can't reach — don't thrash
+        return placed
+
+    # --- the loop ------------------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduling round: harvest arrivals, admit (preempting if
+        needed), decode one quantum, stream new tokens, harvest
+        finishers.  Returns False once fully idle (nothing pending,
+        queued, or in flight)."""
+        self._harvest()
+        placed = self._admit_ready()
+        toks, done = self.engine.serve_step(self.st, self.quantum)
+        if toks:
+            # a round is as long as its longest slot actually decoded —
+            # slots can retire mid-quantum, and billing the full quantum
+            # would inflate TPOT/makespan deterministically
+            self.clock.advance(self.costs.decode_step
+                               * max(len(t) for t in toks.values()))
+            for slot in sorted(toks):
+                self._emit(self.slots[slot], toks[slot])
+        for slot in done:
+            self._finish(slot)
+        if placed or toks or done:
+            return True
+        nxt = self.next_arrival()
+        if nxt is not None:                  # idle-jump to the next event
+            self.clock.advance(nxt - self.clock.now())
+            return True
+        if not (self.ready or self.running):
+            return False
+        raise RuntimeError(
+            "scheduler stalled: admission blocked with no request in "
+            "flight and no future arrivals")
+
+    def run_until_idle(self, max_rounds: int = 1_000_000) -> None:
+        """Drive rounds until every submitted request has finished."""
+        for _ in range(max_rounds):
+            if not self.step():
+                return
+        raise RuntimeError(f"not idle after {max_rounds} rounds — "
+                           "starvation or a stuck request")
+
+    # --- introspection (the deterministic replay record) ---------------------
+
+    @property
+    def admission_order(self) -> list[int]:
+        return [rid for _, kind, rid in self.events if kind == "admit"]
+
+    @property
+    def preemption_log(self) -> list[tuple]:
+        return [(t, rid) for t, kind, rid in self.events
+                if kind == "preempt"]

@@ -1,0 +1,160 @@
+"""Request-server facade + synthetic traffic over ``AsyncScheduler``
+(DESIGN.md §11).
+
+``Server`` wraps engine → scheduler into the long-running shape
+``launch/serve.py --server`` exposes: ``submit()`` for live traffic
+(arrival = the injected clock's now), ``replay()`` for a recorded or
+synthetic trace — the deterministic CI mode — and a ``ServerReport``
+(p50/p99 TTFT, TPOT, preemption counts, SLO attainment) after a drain.
+
+Traffic: ``poisson_trace`` synthesises a seeded open-loop arrival
+process (exponential inter-arrival gaps, mixed prompt/stop lengths,
+priority classes, optional SLOs); ``save_trace``/``load_trace``
+round-trip traces as JSON for ``--traffic replay``.  Same seed → same
+trace → same scheduler decisions, bit for bit — the virtual-clock rule
+means nothing here (or anywhere under ``serving/``) reads the wall.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.serving.scheduler import AsyncScheduler, VirtualClock
+
+__all__ = ["Server", "ServerReport", "poisson_trace", "save_trace",
+           "load_trace", "contended_trace", "CONTENDED_ENGINE_KW"]
+
+# The reference contended workload: an engine one notch too small for
+# the trace below, so admissions queue and priority preemptions fire.
+# The CI smoke gate, the tier-1 replay-determinism test, and the tier-2
+# tp=2 parity case all exercise THIS pair — edit it in one place only
+# (contention at a given seed is a property of the pair; seeds 0/1 are
+# probed to preempt in CI).
+CONTENDED_ENGINE_KW = dict(max_len=48, max_batch=2, paged=True,
+                           page_size=8, n_pages=9)
+
+
+def contended_trace(seed: int, vocab: int, **over) -> list[dict]:
+    """The reference 8-request contended trace for the engine shape in
+    ``CONTENDED_ENGINE_KW`` (keyword overrides pass through to
+    ``poisson_trace``, e.g. SLOs)."""
+    return poisson_trace(seed, 8, rate=40.0, vocab=vocab, plen=(2, 9),
+                         max_new=(2, 10), priorities=(0, 1), **over)
+
+
+def poisson_trace(seed: int, n: int, *, rate: float = 20.0,
+                  vocab: int = 512, plen=(2, 10), max_new=(2, 12),
+                  priorities=(0,), slo_ttft: float | None = None,
+                  slo_tpot: float | None = None) -> list[dict]:
+    """Seeded open-loop Poisson arrival trace: ``n`` requests at ``rate``
+    arrivals per (virtual) second, prompt/stop lengths uniform over the
+    given inclusive ranges, priority drawn uniformly from
+    ``priorities``.  Pure function of its arguments."""
+    rng = np.random.default_rng(seed)
+    t, rows = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        pl = int(rng.integers(plen[0], plen[1] + 1))
+        rows.append({
+            "arrival": round(t, 9),
+            "prompt": [int(x) for x in rng.integers(0, vocab, pl)],
+            "max_new": int(rng.integers(max_new[0], max_new[1] + 1)),
+            "priority": int(rng.choice(priorities)),
+            "slo_ttft": slo_ttft, "slo_tpot": slo_tpot})
+    return rows
+
+
+def save_trace(path: str, trace: list[dict]) -> None:
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1)
+
+
+def load_trace(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+@dataclasses.dataclass
+class ServerReport:
+    """Aggregate + per-request metrics after a drained trace.  Every
+    field is in injected-clock time — deterministic under a
+    ``VirtualClock`` replay."""
+
+    n_requests: int
+    n_tokens: int
+    makespan: float                  # first arrival -> last finish
+    p50_ttft: float
+    p99_ttft: float
+    p50_tpot: float
+    p99_tpot: float
+    preemptions: int
+    pages_swapped: int
+    slo_attainment: float            # over requests that set an SLO
+    admission_order: list
+
+    @staticmethod
+    def build(handles, sched) -> "ServerReport":
+        pct = lambda xs, q: float(                          # noqa: E731
+            np.percentile(np.asarray(xs, np.float64), q))
+        sloed = [h for h in handles
+                 if h.slo_ttft is not None or h.slo_tpot is not None]
+        att = (sum(h.slo_met() for h in sloed) / len(sloed)
+               if sloed else 1.0)
+        return ServerReport(
+            n_requests=len(handles),
+            n_tokens=sum(len(h.tokens) for h in handles),
+            makespan=(max(h.finished_at for h in handles)
+                      - min(h.arrival for h in handles)),
+            p50_ttft=pct([h.ttft for h in handles], 50),
+            p99_ttft=pct([h.ttft for h in handles], 99),
+            p50_tpot=pct([h.tpot for h in handles], 50),
+            p99_tpot=pct([h.tpot for h in handles], 99),
+            preemptions=sched.n_preemptions,
+            pages_swapped=sum(h.pages_swapped for h in handles),
+            slo_attainment=att,
+            admission_order=sched.admission_order)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Server:
+    """Long-running request server: one engine, one scheduler, an
+    injected clock.  ``replay()`` is the deterministic batch entry;
+    ``submit()``/``poll()`` compose into live loops."""
+
+    def __init__(self, engine, *, clock=None, costs=None, quantum: int = 1,
+                 preempt: bool = True, key=None):
+        self.clock = VirtualClock() if clock is None else clock
+        self.sched = AsyncScheduler(engine, clock=self.clock, costs=costs,
+                                    quantum=quantum, preempt=preempt,
+                                    key=key)
+
+    def submit(self, prompt, max_new: int, **kw):
+        return self.sched.submit(prompt, max_new, **kw)
+
+    def poll(self) -> bool:
+        """One scheduling round; False once idle."""
+        return self.sched.step()
+
+    def run_until_idle(self) -> None:
+        self.sched.run_until_idle()
+
+    def replay(self, trace: list[dict]) -> ServerReport:
+        """Feed a trace's arrivals and drain it under the injected
+        clock.  Returns the aggregate report; per-request handles stay
+        readable on ``self.sched.handles``."""
+        if not trace:
+            raise ValueError("replay() needs a non-empty trace")
+        handles = [self.sched.submit(
+                       r["prompt"], r["max_new"],
+                       priority=r.get("priority", 0),
+                       arrival=r["arrival"],
+                       slo_ttft=r.get("slo_ttft"),
+                       slo_tpot=r.get("slo_tpot"))
+                   for r in trace]
+        self.sched.run_until_idle()
+        return ServerReport.build(handles, self.sched)

@@ -1,0 +1,57 @@
+"""Seeded-benchmark reproducibility gate (ISSUE 5 satellite).
+
+``benchmarks/serve_throughput.py`` derives EVERY workload from ``--seed``
+— prompts, shared prefixes, the spec-decode probe motifs, and the
+scheduler's Poisson arrival trace — and the scheduler runs on a virtual
+clock, so two ``--seed 0 --smoke`` runs must emit byte-identical
+``BENCH_serve.json`` metric blocks once the wall-clock timing fields
+(tok/s, speedups, elapsed seconds) are stripped.  Anything else means an
+unseeded RNG or a wall-clock read leaked into a metric the perf
+trajectory is tracked by.
+
+The two smoke subprocesses run concurrently (~20s each, one pytest test).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+
+# wall-clock-derived fields, stripped before comparison
+_TIMING_KEYS = {"speedup", "wall_s", "ms_per_request", "seed_speedup_at_8"}
+
+
+def _strip(obj):
+    if isinstance(obj, dict):
+        return {k: _strip(v) for k, v in sorted(obj.items())
+                if k not in _TIMING_KEYS and not k.endswith("tok_s")}
+    if isinstance(obj, list):
+        return [_strip(v) for v in obj]
+    return obj
+
+
+def test_seeded_smoke_metric_blocks_identical(tmp_path):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    procs = []
+    for i in (0, 1):
+        out = tmp_path / f"bench{i}.json"
+        procs.append((out, subprocess.Popen(
+            [sys.executable,
+             os.path.join(_ROOT, "benchmarks", "serve_throughput.py"),
+             "--smoke", "--seed", "0", "--json-out", str(out)],
+            env=env, cwd=str(tmp_path), stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True)))
+    blocks = []
+    for out, p in procs:
+        log, _ = p.communicate(timeout=560)
+        assert p.returncode == 0, f"smoke run failed:\n{log}"
+        with open(out) as f:
+            blocks.append(_strip(json.load(f)))
+    assert blocks[0] == blocks[1], \
+        "two --seed 0 --smoke runs disagree on non-timing metrics"

@@ -5,11 +5,16 @@ readback caveat) used to surface only as silently shifted benchmark
 numbers.  This pins, for the fixed seed-0 test model:
 
 * the greedy continuation of two fixed prompts per backend
-  (dense / codebook / lut), token for token, and
+  (dense / codebook / lut), token for token,
 * a prefill logit fingerprint (probe values, argmax id, logsumexp at each
   prompt's last position) compared under a small absolute tolerance —
   loose enough for BLAS reduction-order noise across machines (~1e-5),
-  tight enough that any real numerics change fails loudly.
+  tight enough that any real numerics change fails loudly, and
+* two serving-path rows the scheduler refactors lean on (ISSUE 5):
+  ``paged_spec`` (chunked prefill + speculative rounds + page rollback)
+  and ``tp2`` (the tensor-parallel decode join, run on 2 forced host
+  devices through ``tests/tp_rig.py``) — token drift in either fails
+  here instead of surfacing as shifted benchmark numbers.
 
 Regenerate intentionally with:
     GOLDEN_UPDATE=1 PYTHONPATH=src pytest -q tests/test_golden_decode.py
@@ -26,7 +31,8 @@ import pytest
 import repro.configs as C
 from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
 from repro.models.model_zoo import build
-from repro.serving import ServeEngine, to_codebook_params
+from repro.serving import ServeEngine, SpecConfig, to_codebook_params
+from tp_rig import run_under_devices
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden_decode.json")
 PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8]]
@@ -64,8 +70,23 @@ def _fingerprint(eng):
     }
 
 
+def _serving_rows(engines):
+    """Token-only rows for the serving paths the scheduler drives:
+    paged + speculative serve, and tp=2 serve (subprocess rig)."""
+    dense = engines["dense"]
+    spec_eng = ServeEngine(dense.model, dense.params, max_len=64,
+                           max_batch=2, paged=True, page_size=8,
+                           spec=SpecConfig(draft="ngram", k=3))
+    return {
+        "paged_spec": {"tokens": spec_eng.serve(PROMPTS, max_new=MAX_NEW)},
+        "tp2": {"tokens": run_under_devices(
+            "tp_serve_cases:golden_serve_case", {"tp": 2}, n_devices=2)},
+    }
+
+
 def test_golden_decode_fingerprints(engines):
     got = {be: _fingerprint(eng) for be, eng in engines.items()}
+    got.update(_serving_rows(engines))
     if os.environ.get("GOLDEN_UPDATE"):
         with open(GOLDEN, "w") as f:
             json.dump(got, f, indent=1, sort_keys=True)
@@ -76,6 +97,8 @@ def test_golden_decode_fingerprints(engines):
     for be in want:
         assert got[be]["tokens"] == want[be]["tokens"], \
             f"{be}: greedy tokens drifted from the golden file"
+        if "argmax" not in want[be]:
+            continue                     # token-only serving rows
         assert got[be]["argmax"] == want[be]["argmax"], be
         np.testing.assert_allclose(got[be]["lse"], want[be]["lse"],
                                    atol=ATOL, err_msg=be)

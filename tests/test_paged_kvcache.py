@@ -339,9 +339,10 @@ def test_int8_chunked_prefill_drift_bounded(tiny):
 #
 # A random-walk state machine over the host-side allocator alone (a stub
 # model supplies a tiny page store): every admit/register/cow/extend/
-# truncate/retire interleaving must conserve refcounts, never alias a
-# write-target page between two live requests, and never let speculative
-# rollback's reserved pages deadlock a later extend.  Runs under real
+# truncate/retire/swap_out/swap_in interleaving must conserve refcounts,
+# never alias a write-target page between two live requests, never let
+# speculative rollback's reserved pages deadlock a later extend, and
+# always leave a swapped-out request restorable once the pool drains.  Runs under real
 # hypothesis when the dev extra is installed, else under the deterministic
 # conftest fallback shim — either way it is no longer skipped.
 
@@ -371,6 +372,7 @@ class _PoolWalk:
                              pages_per_slot=n_pages - 1,
                              kv_dtype=jnp.float32, prefix_cache=prefix_cache)
         self.live = []                   # [adm, plen, stop, cur_tokens]
+        self.swapped = []                # [reserve, plen, stop, cur_tokens]
 
     # --- transitions (the ServeEngine's call shapes) -------------------------
 
@@ -411,6 +413,29 @@ class _PoolWalk:
         i = int(self.rng.integers(len(self.live)))
         adm, _, _, _ = self.live.pop(i)
         self.pool.retire(adm)
+
+    # scheduler preemption (DESIGN.md §11): the engine copies page
+    # contents before release — the walk only audits the accounting
+
+    def swap_out(self):
+        if not self.live:
+            return
+        i = int(self.rng.integers(len(self.live)))
+        adm, plen, stop, cur = self.live.pop(i)
+        reserve = adm.reserve
+        self.pool.swap_out(adm)
+        self.swapped.append([reserve, plen, stop, cur])
+
+    def swap_in(self):
+        if not self.swapped:
+            return
+        i = int(self.rng.integers(len(self.swapped)))
+        reserve, plen, stop, cur = self.swapped[i]
+        adm = self.pool.swap_in(reserve)
+        if adm is None:
+            return                       # pool busy — request keeps waiting
+        self.swapped.pop(i)
+        self.live.append([adm, plen, stop, cur])
 
     # --- invariants ----------------------------------------------------------
 
@@ -461,15 +486,28 @@ class _PoolWalk:
         assert len(free) + pool._evictable() >= pool.reserved_extra, \
             "reserved rollback pages no longer claimable: extend deadlock"
 
+        # the §11 introspection signals ARE the admission threshold
+        fc = pool.free_claimable()
+        assert pool.can_admit(fc) and not pool.can_admit(fc + 1)
+        assert pool.pressure() == 1.0 - fc / pool.usable_pages
+
     def run(self, n_ops=40):
         ops = [self.admit, self.admit, self.truncate, self.extend,
-               self.retire]
+               self.retire, self.swap_out, self.swap_in]
         self.check()
         for _ in range(n_ops):
             ops[self.rng.integers(len(ops))]()
             self.check()
-        while self.live:
-            self.retire()
+        # drain: every swapped request must be restorable once the live
+        # ones retire (its reservation never exceeded the pool)
+        while self.live or self.swapped:
+            if self.live:
+                self.retire()
+            else:
+                before = len(self.swapped)
+                self.swap_in()
+                assert len(self.swapped) < before, \
+                    "swap-in blocked on an empty pool"
             self.check()
         assert self.pool.reserved_extra == 0
         assert all(self.pool.ref[p] in (0, 1)

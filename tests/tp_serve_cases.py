@@ -66,6 +66,38 @@ def serve_matrix(tp: int = 1) -> dict:
     return out
 
 
+def sched_trace_case(tp: int = 1) -> dict:
+    """Contended multi-tenant trace through the AsyncScheduler at TP
+    degree ``tp`` (ISSUE 5): the pool allocator, admission gate, and
+    preemption policy all run on the host, so the event log, preemption
+    decisions, and every request's stream must be identical across
+    degrees — scheduling is shard-invariant by construction."""
+    from repro.serving.server import (CONTENDED_ENGINE_KW, Server,
+                                      contended_trace)
+
+    model, params, _ = _model_params()
+    eng = ServeEngine(model, params, mesh=_mesh(tp), **CONTENDED_ENGINE_KW)
+    trace = contended_trace(1, model.cfg.vocab)
+    srv = Server(eng)
+    rep = srv.replay(trace)
+    return {"events": [list(e) for e in srv.sched.events],
+            "streams": {str(h.rid): list(h.tokens)
+                        for h in srv.sched.handles.values()},
+            "preemptions": rep.preemptions,
+            "pages_swapped": rep.pages_swapped,
+            "admission_order": rep.admission_order}
+
+
+def golden_serve_case(tp: int = 2) -> list:
+    """Greedy serve tokens for the golden-file tp row (dense contiguous,
+    the two golden prompts) — rebuilt from fixed seeds in the child so
+    the fingerprint is machine-independent."""
+    model, params, _ = _model_params()
+    eng = ServeEngine(model, params, max_len=64, max_batch=2,
+                      mesh=_mesh(tp))
+    return eng.serve(PROMPTS[:2], max_new=MAX_NEW)
+
+
 # --- collective-bytes accounting --------------------------------------------
 
 _COLLECTIVES = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
