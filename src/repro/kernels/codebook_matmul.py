@@ -1,4 +1,4 @@
-"""TPU-native codebook matmul: ``out = x @ codebook[w_idx]``.
+"""TPU-native codebook matmul: ``out = x @ codebook[w_idx]`` (DESIGN.md §12).
 
 This is the paper's §4 insight re-expressed for the TPU memory hierarchy:
 weights live in HBM as *narrow integer indices* (int8 for |W|≤256, int16 up
@@ -14,8 +14,23 @@ win for memory-bound decode shapes.  The multiply itself is free on the MXU —
 the *no-multiply* property of the paper does not transfer to TPU, the
 *no-weight-memory* property does (DESIGN.md §2).
 
-Grid is (M/bm, N/bn, K/bk) with K innermost so the f32 accumulator tile
-stays resident in VMEM across the K sweep.
+Grid is ``(⌈M/bm⌉, ⌈N/bn⌉, ⌈K/bk⌉)`` with K innermost so the f32
+accumulator tile stays VMEM-resident across the K sweep; the codebook's
+BlockSpec index map is constant, so it is DMA'd once and revisited from
+VMEM by every grid step while the x / w_idx streams double-buffer behind
+the MXU (K marked ``arbitrary``, m/n ``parallel``).
+
+Ragged shapes use *explicit masking*, not implicit padding: the K tail of
+both operands is zeroed inside the kernel (0·0 contributes nothing to the
+accumulator — and masking both sides means a TPU edge block's undefined
+values can never surface as NaN·0), gather indices are clamped into the
+codebook, and M/N edge tiles are trimmed by Pallas' masked edge stores.
+
+Off-TPU the serving path takes ``codebook_matmul_xla`` — the same
+dequantize-in-registers gather feeding one fused XLA dot (CPU has no
+separate fast-memory tier for the codebook to exploit, so the Pallas block
+walk only adds overhead there).  Parity against the Pallas kernel and the
+``kernels.ref`` oracle is property-tested to f32 reduction-order tolerance.
 """
 
 from __future__ import annotations
@@ -26,21 +41,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["codebook_matmul_kernel", "codebook_matmul_pallas"]
+__all__ = ["codebook_matmul_kernel", "codebook_matmul_pallas",
+           "codebook_matmul_xla"]
 
 
-def codebook_matmul_kernel(x_ref, idx_ref, book_ref, out_ref):
-    """One (bm, bn) output tile; revisited across the K grid dimension."""
-    k = pl.program_id(2)
+def _canonical_idx(idx, n: int):
+    """int32 ids in [0, n) — narrow dtypes store ids ≥ 2^(bits-1) as
+    negatives (two's complement)."""
+    idx = idx.astype(jnp.int32)
+    return jnp.where(idx < 0, idx + n, idx)
 
-    @pl.when(k == 0)
+
+def codebook_matmul_kernel(x_ref, idx_ref, book_ref, out_ref, *,
+                           bk: int, k_total: int):
+    """One (bm, bn) f32 accumulator tile; revisited across the K grid."""
+    kg = pl.program_id(2)
+
+    @pl.when(kg == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     idx = idx_ref[...].astype(jnp.int32)           # (bk, bn)
-    book = book_ref[0, :]                          # (W,) — whole codebook
-    w = jnp.take(book, idx, axis=0)                # dequantize in VMEM
-    out_ref[...] += jnp.dot(x_ref[...], w.astype(x_ref.dtype),
+    book = book_ref[0, :]                          # (|W|,) — VMEM-resident
+    w = jnp.take(book, jnp.clip(idx, 0, book.shape[0] - 1), axis=0,
+                 mode="clip")                      # dequantize in VMEM
+    # explicit ragged-K masks on BOTH operands: an edge block's undefined
+    # lanes (TPU) might be NaN, and NaN·0 would poison the accumulator
+    kw = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0) + kg * bk
+    w = jnp.where(kw < k_total, w, 0.0)
+    x = x_ref[...]
+    kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + kg * bk
+    x = jnp.where(kx < k_total, x, jnp.zeros_like(x))
+    out_ref[...] += jnp.dot(x, w.astype(x.dtype),
                             preferred_element_type=jnp.float32)
 
 
@@ -51,22 +83,23 @@ def codebook_matmul_pallas(x: jnp.ndarray, w_idx: jnp.ndarray,
                            interpret: bool = True) -> jnp.ndarray:
     """x: (M, K) float; w_idx: (K, N) int8/int16/int32; codebook: (W,).
 
-    Dims need not be multiples of the block sizes — inputs are zero/0-index
-    padded (zero x rows null out garbage gathers) and the result is sliced.
+    Dims need not be multiples of the block sizes — edge blocks are masked
+    inside the kernel (module docstring), never padded by the wrapper.
     """
     m, k = x.shape
     k2, n = w_idx.shape
     assert k == k2, (x.shape, w_idx.shape)
-    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
-    if mp or kp:
-        x = jnp.pad(x, ((0, mp), (0, kp)))
-    if kp or np_:
-        w_idx = jnp.pad(w_idx, ((0, kp), (0, np_)))
+    w_can = _canonical_idx(w_idx, codebook.shape[-1])
     book2d = codebook.reshape(1, -1).astype(jnp.float32)
 
-    grid = (x.shape[0] // bm, w_idx.shape[1] // bn, x.shape[1] // bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    kwargs = {}
+    if not interpret:       # TPU: m,n parallel; K revisits the accumulator
+        from jax.experimental.pallas import tpu as pltpu
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     out = pl.pallas_call(
-        codebook_matmul_kernel,
+        functools.partial(codebook_matmul_kernel, bk=bk, k_total=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -74,8 +107,23 @@ def codebook_matmul_pallas(x: jnp.ndarray, w_idx: jnp.ndarray,
             pl.BlockSpec((1, book2d.shape[1]), lambda i, j, kk: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((x.shape[0], w_idx.shape[1]),
-                                       jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(x, w_idx, book2d)
-    return out[:m, :n]
+        **kwargs,
+    )(x, w_can, book2d)
+    return out
+
+
+@jax.jit
+def codebook_matmul_xla(x: jnp.ndarray, w_idx: jnp.ndarray,
+                        codebook: jnp.ndarray) -> jnp.ndarray:
+    """The same contraction as one fused XLA gather + dot (off-TPU path).
+
+    The |W|-entry codebook gather is L1-resident on any CPU; XLA fuses it
+    into the dot's packing pass, so this runs at dense-matmul speed while
+    HBM/DRAM still only ever holds the narrow indices.
+    """
+    w_can = _canonical_idx(w_idx, codebook.shape[-1])
+    w = jnp.take(codebook.astype(jnp.float32), w_can, axis=0,
+                 mode="clip").astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

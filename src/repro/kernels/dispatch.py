@@ -50,7 +50,8 @@ import numpy as np
 
 __all__ = ["BACKENDS", "LutSpec", "BackendSpec", "make_lut_spec",
            "use_backend", "matmul_backend", "matmul_mesh", "backend_matmul",
-           "bind_backend"]
+           "bind_backend", "build_lut_table", "attach_lut_tables",
+           "kernel_config", "autotune_shapes"]
 
 BACKENDS = ("dense", "codebook", "lut")
 
@@ -99,6 +100,73 @@ def make_lut_spec(codebook, fan_in: int, *, levels: int = 4096,
             f"no int{acc_bits} scale fits fan_in={fan_in}, max|w|={wmax:.3g}, "
             f"grid ±{amax}: coarsen the grid or widen the accumulator")
     return LutSpec(a_min=a_min, a_max=a_max, levels=levels, s=s)
+
+
+def build_lut_table(codebook, spec: LutSpec):
+    """The §4 multiplication table M[a, w] = rint(a·w·2^s/Δa) as int32.
+
+    ONE recipe shared by every consumer (engine-time precompute, the TP
+    psum path, the trace-time fallback below) — parity across them depends
+    on the rounding being identical.  Accepts a single (|W|,) codebook or
+    a layer-stacked (L, |W|) one; the activation-grid axis is appended
+    second-to-last either way → (|A|, |W|) or (L, |A|, |W|).
+    """
+    da, s = spec.da, spec.s
+    avals = spec.a_min + jnp.arange(spec.levels, dtype=jnp.float32) * da
+    scale = (2.0 ** s) / da
+    prod = avals[:, None] * codebook.astype(jnp.float32)[..., None, :]
+    return jnp.rint(prod * scale).astype(jnp.int32)
+
+
+def attach_lut_tables(params, spec: LutSpec):
+    """Precompute a ``lut_table`` leaf next to every routed index-form dict.
+
+    The table is a pure function of (codebook, grid) but building it inside
+    the per-layer ``lax.scan`` body cannot be hoisted by XLA (the scanned
+    codebook leaf is a per-iteration slice) — so the lut backend used to
+    re-rint the whole |A|×|W| table every layer, every step.  Attaching it
+    as a param leaf turns that into a plain HBM operand: stacked (L, |W|)
+    codebooks get a stacked (L, |A|, |W|) table the scan slices alongside
+    the indices, and ``distributed.sharding.serve_param_specs`` replicates
+    any non-w/w_idx leaf, so the table rides through TP untouched (the §10
+    psum contract needs every shard to see the identical table).
+
+    The embedding's index form is skipped: its lookup (and the tied
+    lm-head) dequantize via the codebook directly, never through
+    ``backend_matmul``.
+    """
+    def walk(node, parts):
+        if not isinstance(node, dict):
+            return node
+        if "w_idx" in node and "codebook" in node \
+                and "embed" not in parts and node["w_idx"].ndim >= 2:
+            return {**node, "lut_table": build_lut_table(node["codebook"],
+                                                         spec)}
+        return {k: walk(v, parts + [k]) for k, v in node.items()}
+
+    return walk(params, [])
+
+
+def kernel_config(kernel: str, m: int, k: int, n: int, *, dtype: str,
+                  table_shape: tuple, plat: str | None = None, **kw):
+    """Launch config for one contraction site — see ``kernels.autotune``.
+
+    ``plat`` defaults to the live platform class: 'tpu' (compiled Pallas)
+    when Mosaic is available, 'xla' (fallback kernels) otherwise.
+    """
+    from repro.kernels import autotune, ops
+
+    if plat is None:
+        plat = "tpu" if ops.supports_compiled_pallas() else "xla"
+    return autotune.kernel_config(kernel, m, k, n, dtype=dtype, plat=plat,
+                                  table_shape=table_shape, **kw)
+
+
+def autotune_shapes(shapes, **kw):
+    """Batch-tune + persist the cache JSON — see ``kernels.autotune``."""
+    from repro.kernels import autotune
+
+    return autotune.autotune_shapes(shapes, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,37 +257,40 @@ def matmul_mesh():
     return _STATE.mesh
 
 
-def backend_matmul(x, w_idx, codebook, kind: str | None = None):
+def backend_matmul(x, w_idx, codebook, kind: str | None = None, table=None):
     """``x @ codebook[w_idx]`` through the active non-dense backend.
 
     x: (..., K) float; w_idx: (K, N) integer indices; codebook: (|W|,).
     kind: 'col' | 'row' | None — the layer's TP role per
     ``distributed.sharding.param_specs`` (only consulted when a mesh is
-    active; None = replicated compute).  Returns (..., N) in x.dtype.
-    Callers guarantee ``matmul_backend()`` is not 'dense' (the plain
-    gather+dot lives in models.layers.dense).
+    active; None = replicated compute).  table: optional precomputed
+    (|A|, |W|) int32 §4 table (``attach_lut_tables``) — the lut backend
+    rebuilds it from the codebook when absent, which is correct but
+    re-derives the table inside every layer of a scanned stack.
+    Returns (..., N) in x.dtype.  Callers guarantee ``matmul_backend()``
+    is not 'dense' (the plain gather+dot lives in models.layers.dense).
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if _STATE.mesh is not None and "model" in _STATE.mesh.axis_names \
             and _STATE.mesh.shape["model"] > 1:
-        y = _sharded_matmul(x2, w_idx, codebook, kind, _STATE.mesh)
+        y = _sharded_matmul(x2, w_idx, codebook, kind, _STATE.mesh, table)
     else:
-        y = _local_matmul(x2, w_idx, codebook)
+        y = _local_matmul(x2, w_idx, codebook, table)
     return y.reshape(*lead, -1).astype(x.dtype)
 
 
-def _local_matmul(x2, w_idx, codebook):
+def _local_matmul(x2, w_idx, codebook, table=None):
     from repro.kernels import ops  # lazy: keep pallas off the import path
 
     if _STATE.backend == "codebook":
         return ops.codebook_matmul(x2, w_idx, codebook)
     if _STATE.backend == "lut":
-        return _lut_matmul(x2, w_idx, codebook, _STATE.lut_spec)
+        return _lut_matmul(x2, w_idx, codebook, _STATE.lut_spec, table)
     raise ValueError(f"backend_matmul called with {_STATE.backend!r}")
 
 
-def _sharded_matmul(x2, w_idx, codebook, kind, mesh):
+def _sharded_matmul(x2, w_idx, codebook, kind, mesh, table=None):
     """shard_map the contraction over `model` (Pallas kernels have no SPMD
     partitioning rule, so left to XLA they would replicate and all-gather
     their operands — this keeps only int indices moving, never weights).
@@ -242,7 +313,7 @@ def _sharded_matmul(x2, w_idx, codebook, kind, mesh):
 
         if backend == "codebook":
             return ops.codebook_matmul(xl, wl, codebook)
-        return _lut_matmul(xl, wl, codebook, spec)
+        return _lut_matmul(xl, wl, codebook, spec, table)
 
     if kind == "col" and N % tp == 0:
         f = shard_map(kernel, mesh=mesh,
@@ -255,8 +326,11 @@ def _sharded_matmul(x2, w_idx, codebook, kind, mesh):
             def body(xl, wl):
                 # psum the int32 accumulator, decode the scale once after:
                 # integer addition is associative, so the sharded reduction
-                # is bit-identical to the single-device contraction
-                acc = jax.lax.psum(_lut_acc(xl, wl, codebook, spec), "model")
+                # is bit-identical to the single-device contraction (the
+                # replicated table means every shard gathers identical
+                # entries; the full-fan-in scale stays safe per K/tp slice)
+                acc = jax.lax.psum(_lut_acc(xl, wl, codebook, spec, table),
+                                   "model")
                 return acc.astype(jnp.float32) * (spec.da / (2.0 ** spec.s))
         else:
             def body(xl, wl):
@@ -273,33 +347,27 @@ def _sharded_matmul(x2, w_idx, codebook, kind, mesh):
     return f(x2, w_idx)
 
 
-def _lut_acc(x2, w_idx, codebook, spec: LutSpec):
+def _lut_acc(x2, w_idx, codebook, spec: LutSpec, table=None):
     """The §4 integer accumulator: snap activations to the level grid,
     gather M[a_idx·C + w_idx], sum in int32 (no decode).
 
-    The multiplication table is constructed *outside* the kernel from the
-    codebook and the static grid — at deployment it is a precomputed
-    constant; here it folds into the jitted graph the same way.
+    ``table`` is the precomputed constant of a real deployment
+    (``attach_lut_tables`` hangs it off the params).  When absent it is
+    rebuilt here from the codebook — same ``build_lut_table`` recipe, so
+    the accumulators are bit-identical either way, but the rebuild sits
+    inside the layer scan and costs |A|·|W| rints per layer per step.
     """
     from repro.kernels import ops
 
-    da, s = spec.da, spec.s
-    # narrow index dtypes store ids >= 128 as negatives (int8 two's
-    # complement); gathers wrap them pythonically but the kernel's flat
-    # a·C + w address arithmetic must see canonical [0, |W|) ids
-    n_w = codebook.shape[0]
-    w_can = w_idx.astype(jnp.int32)
-    w_can = jnp.where(w_can < 0, w_can + n_w, w_can)
+    da = spec.da
     a_idx = jnp.clip(jnp.round((x2.astype(jnp.float32) - spec.a_min) / da),
                      0, spec.levels - 1).astype(jnp.int32)
-    avals = spec.a_min + jnp.arange(spec.levels, dtype=jnp.float32) * da
-    scale = (2.0 ** s) / da
-    table = jnp.rint(avals[:, None] * codebook.astype(jnp.float32)[None, :]
-                     * scale).astype(jnp.int32)              # (|A|, |W|)
-    return ops.lut_matmul(a_idx, w_can, table)
+    if table is None:
+        table = build_lut_table(codebook, spec)              # (|A|, |W|)
+    return ops.lut_matmul(a_idx, w_idx, table)
 
 
-def _lut_matmul(x2, w_idx, codebook, spec: LutSpec):
+def _lut_matmul(x2, w_idx, codebook, spec: LutSpec, table=None):
     """Faithful §4 contraction: int32 accumulate, decode once at the end."""
-    acc = _lut_acc(x2, w_idx, codebook, spec)
+    acc = _lut_acc(x2, w_idx, codebook, spec, table)
     return acc.astype(jnp.float32) * (spec.da / (2.0 ** spec.s))

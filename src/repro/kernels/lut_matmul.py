@@ -1,16 +1,40 @@
-"""Faithful §4 integer engine as a Pallas kernel.
+"""Faithful §4 integer engine as a tiled Pallas kernel (DESIGN.md §12).
 
 acc[m, n] = Σ_k  M[a_idx[m, k], w_idx[k, n]]
 
 Both operands are *indices*; the multiplication table M is VMEM-resident
-(flattened for a single-gather address computation ``a·C + w``).  The inner
-loop walks the K block one step at a time so the gathered intermediate is a
-(bm, bn) tile rather than a (bm, bk, bn) cube — VMEM stays bounded by
-3 tiles + the table.
+(flattened for a single-gather address computation ``a·C + w``).  The grid
+is ``(⌈M/bm⌉, ⌈N/bn⌉, ⌈K/bk⌉)`` with K innermost, so each (bm, bn) int32
+accumulator tile stays resident in VMEM across the whole K sweep and the
+table — whose BlockSpec index map is constant — is DMA'd exactly once and
+then revisited from fast memory by every grid step (Pallas only re-fetches
+a block when its index map moves; with the K dimension marked ``arbitrary``
+the other operand streams are double-buffered behind the gather work).
+
+Ragged shapes are handled by *explicit masking*, not implicit padding:
+
+* K tail: a per-element ``k < K`` mask zeroes the padded contributions
+  (the old wrapper padded with (row 0, col 0) pairs and subtracted
+  ``pad·table[0,0]`` afterwards — correct only while the pad indices were
+  actually zero-filled).
+* M/N edges: loads beyond the array edge are undefined on TPU, so every
+  gather address is clamped into the table before the lookup; the out-of-
+  range rows/columns of the output tile are dropped by Pallas' masked
+  edge-block stores.
+
+The K loop walks ``unroll`` steps per ``fori_loop`` iteration so the
+gathered intermediate is ``unroll`` (bm, bn) tiles rather than a
+(bm, bk, bn) cube — VMEM stays bounded by 3 tiles + the table.
 
 On a real TPU this runs on the VPU (gathers + int adds; the MXU is idle) —
 it is the *faithful artifact* proving the multiply-free dataflow, not the
-deployment path (that is ``codebook_matmul``, DESIGN.md §2).
+deployment path (that is ``codebook_matmul``, DESIGN.md §2).  Off-TPU the
+serving path takes ``lut_matmul_xla`` below — the same gather-accumulate
+contraction expressed as XLA ops (bit-identical: integer addition is
+associative, so any accumulation order gives the same int32 sums) — because
+interpret-mode Pallas re-enters the grid per block at HLO level, which is
+orders of magnitude slower than one fused XLA gather.  Parity between the
+two (and the jnp oracle in ``kernels.ref``) is exact and property-tested.
 """
 
 from __future__ import annotations
@@ -21,57 +45,84 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lut_matmul_kernel", "lut_matmul_pallas"]
+__all__ = ["lut_matmul_kernel", "lut_matmul_pallas", "lut_matmul_xla"]
 
 
-def lut_matmul_kernel(a_ref, w_ref, table_ref, out_ref, *, bk: int):
-    k = pl.program_id(2)
+def _canonical_idx(idx, n: int):
+    """int32 ids in [0, n) — narrow dtypes store ids ≥ 2^(bits-1) as
+    negatives (two's complement); the flat address arithmetic must not."""
+    idx = idx.astype(jnp.int32)
+    return jnp.where(idx < 0, idx + n, idx)
 
-    @pl.when(k == 0)
+
+def lut_matmul_kernel(a_ref, w_ref, table_ref, out_ref, *,
+                      bk: int, k_total: int, unroll: int):
+    """One (bm, bn) int32 accumulator tile, revisited across the K grid."""
+    kg = pl.program_id(2)
+
+    @pl.when(kg == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    flat = table_ref[0, :]                          # (R*C,) int32
-    a_blk = a_ref[...]                              # (bm, bk) int32
+    flat = table_ref[0, :]                          # (R*C,) int32, resident
+    a_blk = a_ref[...]                              # (bm, bk) int32, pre-·C
     w_blk = w_ref[...]                              # (bk, bn) int32
+    size = flat.shape[0]
+    base = kg * bk
 
-    def body(kk, acc):
-        addr = a_blk[:, kk][:, None] + w_blk[kk, :][None, :]  # (bm, bn)
-        return acc + jnp.take(flat, addr, axis=0)
+    def step(acc, kk):
+        # clamp: edge-block loads are undefined on TPU; any address they
+        # produce is pulled into the table, and the mask / masked store
+        # guarantees the value never lands in a live accumulator cell
+        addr = jnp.clip(a_blk[:, kk][:, None] + w_blk[kk, :][None, :],
+                        0, size - 1)                # (bm, bn)
+        g = jnp.take(flat, addr, axis=0, mode="clip")
+        return acc + jnp.where(base + kk < k_total, g, 0)
 
-    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros_like(out_ref))
+    def body(i, acc):
+        for u in range(unroll):                     # trace-time unroll
+            acc = step(acc, i * unroll + u)
+        return acc
+
+    acc = jax.lax.fori_loop(0, bk // unroll, body, jnp.zeros_like(out_ref))
     out_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "unroll", "interpret"))
 def lut_matmul_pallas(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
                       table: jnp.ndarray, *,
                       bm: int = 128, bn: int = 128, bk: int = 128,
-                      interpret: bool = True) -> jnp.ndarray:
-    """a_idx: (M, K) int32 rows of the table; w_idx: (K, N) int32 columns;
+                      unroll: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """a_idx: (M, K) int rows of the table; w_idx: (K, N) int columns;
     table: (R, C) int32.  Returns (M, N) int32 accumulators.
 
-    The row index is pre-multiplied by C outside the kernel (one integer
-    multiply per *index*, amortised — the per-MAC path stays multiply-free;
-    on-device this constant-stride scaling is an address computation).
-    K is padded with (row 0, col 0) pairs and corrected by −pad·table[0,0].
+    Dims need not be multiples of the block sizes — edge blocks are masked
+    inside the kernel (module docstring).  The row index is pre-multiplied
+    by C outside the kernel (one integer multiply per *index*, amortised —
+    the per-MAC path stays multiply-free; on-device this constant-stride
+    scaling is an address computation).
     """
     m, k = a_idx.shape
     k2, n = w_idx.shape
-    assert k == k2
-    n_cols = table.shape[1]
-    a_scaled = a_idx.astype(jnp.int32) * n_cols
-    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
-    if mp or kp:
-        a_scaled = jnp.pad(a_scaled, ((0, mp), (0, kp)))
-    if kp or np_:
-        w_idx = jnp.pad(w_idx.astype(jnp.int32), ((0, kp), (0, np_)))
+    assert k == k2, (a_idx.shape, w_idx.shape)
+    rows, n_cols = table.shape
+    a_scaled = _canonical_idx(a_idx, rows) * n_cols
+    w_can = _canonical_idx(w_idx, n_cols)
     flat = table.reshape(1, -1).astype(jnp.int32)
+    while bk % unroll:
+        unroll //= 2
 
-    grid = (a_scaled.shape[0] // bm, w_idx.shape[1] // bn,
-            a_scaled.shape[1] // bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    kernel = functools.partial(lut_matmul_kernel, bk=bk, k_total=k,
+                               unroll=max(unroll, 1))
+    kwargs = {}
+    if not interpret:       # TPU: m,n parallel; K revisits the accumulator
+        from jax.experimental.pallas import tpu as pltpu
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     out = pl.pallas_call(
-        functools.partial(lut_matmul_kernel, bk=bk),
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -79,11 +130,60 @@ def lut_matmul_pallas(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
             pl.BlockSpec((1, flat.shape[1]), lambda i, j, kk: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((a_scaled.shape[0], w_idx.shape[1]),
-                                       jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
-    )(a_scaled, w_idx, flat)
-    out = out[:m, :n]
-    if kp:  # remove the padded (row 0, col 0) contributions
-        out = out - kp * table[0, 0].astype(jnp.int32)
+        **kwargs,
+    )(a_scaled, w_can, flat)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("kc", "variant"))
+def lut_matmul_xla(a_idx: jnp.ndarray, w_idx: jnp.ndarray,
+                   table: jnp.ndarray, *, kc: int = 64,
+                   variant: str = "rows") -> jnp.ndarray:
+    """The identical contraction as fused XLA gathers (off-TPU fast path).
+
+    variant 'rows' gathers each (m, k) pair's table *row* first — (M, K, C)
+    sequential row copies that stay L1-resident for the inner (m, k, n)
+    lookup — then indexes along C with ``w_idx``; 'flat' computes the
+    ``a·C + w`` flat address directly (fewer intermediates, random access
+    into the full R·C table).  ``kc`` chunks the K axis through a
+    ``lax.scan`` so the (M, kc, N) gathered intermediate is cache-sized
+    instead of materialising the full (M, K, N) cube.  All variants produce
+    bit-identical int32 accumulators (integer addition is associative).
+    """
+    m, k = a_idx.shape
+    n = w_idx.shape[1]
+    rows, n_cols = table.shape
+    a_can = _canonical_idx(a_idx, rows)
+    w_can = _canonical_idx(w_idx, n_cols)
+    table = table.astype(jnp.int32)
+    kc = min(kc, k)
+
+    def chunk_sum(ab, wb, kmask):
+        """Masked Σ over one K chunk; kmask zeroes the ragged tail
+        explicitly (no pad-and-correct)."""
+        if variant == "flat":
+            addr = ab[:, :, None] * n_cols + wb[None, :, :]
+            g = jnp.take(table.reshape(-1), addr, axis=0, mode="clip")
+        else:
+            rowvals = jnp.take(table, ab, axis=0, mode="clip")  # (M, kc, C)
+            idx = jnp.broadcast_to(wb[None], (ab.shape[0],) + wb.shape)
+            g = jnp.take_along_axis(rowvals, idx, axis=2, mode="clip")
+        return jnp.sum(jnp.where(kmask[None, :, None], g, 0), axis=1)
+
+    pad = (-k) % kc
+    if pad:
+        a_can = jnp.pad(a_can, ((0, 0), (0, pad)))
+        w_can = jnp.pad(w_can, ((0, pad), (0, 0)))
+    kt = k + pad
+    if kt == kc:
+        acc = chunk_sum(a_can, w_can, jnp.arange(kc) < k)
+    else:
+        def body(acc, k0):
+            ab = jax.lax.dynamic_slice_in_dim(a_can, k0, kc, 1)
+            wb = jax.lax.dynamic_slice_in_dim(w_can, k0, kc, 0)
+            return acc + chunk_sum(ab, wb, k0 + jnp.arange(kc) < k), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.int32),
+                              jnp.arange(0, kt, kc))
+    return acc

@@ -1,14 +1,21 @@
 """Public ops for the kernels package: jit'd wrappers + gradients.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels target TPU and are validated in interpret mode per the brief).
+The matmul ops are *routed* per platform (DESIGN.md §12): on TPU they run
+the compiled tiled Pallas kernels with block sizes from the autotune cache
+(``kernels.autotune``); everywhere else they take the semantically
+identical XLA fallbacks (``*_xla``) — interpret-mode Pallas re-enters the
+grid per block at HLO level and is orders of magnitude slower, so it is a
+*testing* vehicle (tests/test_kernels.py runs it for block-walk parity),
+never a serving path.
 
 * ``codebook_matmul(x, w_idx, codebook)`` — differentiable w.r.t. x and the
   codebook (d codebook = scatter-add of x^T·g over indices), NOT w.r.t. the
   integer indices.  This is exactly the gradient structure the paper's
   training uses between clustering events (weights move freely in float;
   here the codebook is the float degree of freedom).
-* ``lut_matmul(a_idx, w_idx, tables)`` — integer-only, no gradient.
+* ``lut_matmul(a_idx, w_idx, table)`` — integer-only, no gradient; the
+  Pallas and XLA routes produce bit-identical int32 accumulators (integer
+  addition is associative), so routing never shows up in goldens.
 * ``act_quant(x, kind, levels)`` — paper §2.1 backward: derivative of the
   *underlying* function, ignoring quantization.
 * ``kmeans_assign(values, centers)`` — no gradient (clustering is a
@@ -51,11 +58,27 @@ def _interp() -> bool:
     return not supports_compiled_pallas()
 
 
+def _tuned(kernel: str, m: int, k: int, n: int, dtype, table_shape):
+    from repro.kernels import autotune
+
+    plat = "tpu" if supports_compiled_pallas() else "xla"
+    return autotune.kernel_config(kernel, int(m), int(k), int(n),
+                                  dtype=jnp.dtype(dtype).name, plat=plat,
+                                  table_shape=tuple(int(d)
+                                                    for d in table_shape))
+
+
 # --- codebook matmul ---------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def codebook_matmul(x, w_idx, codebook):
-    return _cm.codebook_matmul_pallas(x, w_idx, codebook,
+    m, k = x.shape
+    n = w_idx.shape[1]
+    cfg = _tuned("codebook", m, k, n, x.dtype, codebook.shape)
+    if cfg.get("impl") == "xla":
+        return _cm.codebook_matmul_xla(x, w_idx, codebook)
+    return _cm.codebook_matmul_pallas(x, w_idx, codebook, bm=cfg["bm"],
+                                      bn=cfg["bn"], bk=cfg["bk"],
                                       interpret=_interp())
 
 
@@ -81,8 +104,21 @@ codebook_matmul.defvjp(_cm_fwd, _cm_bwd)
 # --- faithful integer engine -------------------------------------------------
 
 def lut_matmul(a_idx, w_idx, table):
-    """Integer accumulators of the §4 engine (no gradient, by construction)."""
-    return _lm.lut_matmul_pallas(a_idx, w_idx, table, interpret=_interp())
+    """Integer accumulators of the §4 engine (no gradient, by construction).
+
+    Pallas (TPU) and XLA (elsewhere) routes are bit-identical — integer
+    addition is associative, so accumulation order cannot matter.
+    """
+    m, k = a_idx.shape
+    n = w_idx.shape[1]
+    cfg = _tuned("lut", m, k, n, a_idx.dtype, table.shape)
+    if cfg.get("impl") == "xla":
+        return _lm.lut_matmul_xla(a_idx, w_idx, table, kc=cfg["kc"],
+                                  variant=cfg["variant"])
+    return _lm.lut_matmul_pallas(a_idx, w_idx, table, bm=cfg["bm"],
+                                 bn=cfg["bn"], bk=cfg["bk"],
+                                 unroll=cfg.get("unroll", 8),
+                                 interpret=_interp())
 
 
 # --- paged KV cache: page-table gather ---------------------------------------
@@ -99,7 +135,10 @@ def gather_pages(pool, page_table):
     """
     if supports_compiled_pallas():
         return _pg.page_gather_pallas(pool, page_table, interpret=False)
-    return jnp.take(pool, page_table.astype(jnp.int32), axis=0)
+    # mode='clip' matches the Pallas kernel's explicit page-id clamp (the
+    # jnp.take default is 'fill', which would turn an OOB id into NaN/INT_MIN
+    # rather than the bounded-garbage contract both paths promise)
+    return jnp.take(pool, page_table.astype(jnp.int32), axis=0, mode="clip")
 
 
 # --- fused activation quantization ------------------------------------------

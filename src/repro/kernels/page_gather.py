@@ -51,13 +51,19 @@ def page_gather_pallas(pool: jnp.ndarray, page_table: jnp.ndarray, *,
     """pool: (n_pages, page, *rest); page_table: (B, P) int32.
 
     Returns (B, P, page, *rest) in pool.dtype — slot b's logical sequence is
-    ``out[b].reshape(P * page, *rest)``.  Out-of-range page ids are the
-    caller's bug; the allocator guarantees ids < n_pages (page 0 is the
-    shared trash page, see serving/kvcache.py).
+    ``out[b].reshape(P * page, *rest)``.  The allocator guarantees live ids
+    < n_pages (page 0 is the shared trash page, see serving/kvcache.py),
+    but an out-of-range id reaching the index map would DMA from past the
+    pool — undefined on TPU, not an exception — so ids are clamped into
+    the pool *explicitly* here (a bad id degrades to reading the last
+    page, same bounded-garbage contract as the trash page; the masked
+    attention window means it never reaches live scores).
     """
     B, P = page_table.shape
+    n_pages = pool.shape[0]
     page_shape = pool.shape[1:]
     zeros = (0,) * len(page_shape)
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, n_pages - 1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, P),
@@ -71,4 +77,4 @@ def page_gather_pallas(pool: jnp.ndarray, page_table: jnp.ndarray, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, P) + page_shape, pool.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), pool)
+    )(pt, pool)

@@ -50,7 +50,10 @@ def dense(p, x, kind: str | None = None):
     """
     if "w_idx" in p:
         if dispatch.matmul_backend() != "dense" and p["w_idx"].ndim == 2:
-            y = dispatch.backend_matmul(x, p["w_idx"], p["codebook"], kind)
+            # lut_table: optional precomputed §4 table attached by
+            # dispatch.attach_lut_tables (ServeEngine does this at init)
+            y = dispatch.backend_matmul(x, p["w_idx"], p["codebook"], kind,
+                                        table=p.get("lut_table"))
             if "b" in p:
                 y = y + p["b"].astype(x.dtype)
             return y

@@ -255,6 +255,12 @@ class ServeEngine:
                 self._lut_spec = dispatch.make_lut_spec(
                     book, fan_in, levels=self.lut_levels,
                     a_range=self.lut_range)
+                # precompute the §4 tables once (DESIGN.md §12): without
+                # this every scanned layer re-derives the |A|×|W| table
+                # inside every decode step; with it the table is a plain
+                # (replicated) param leaf the kernels gather from
+                self.params = dispatch.attach_lut_tables(self.params,
+                                                         self._lut_spec)
         self._cache_dtype = (jnp.float32 if cfg.dtype == "float32"
                              else jnp.bfloat16)
 
@@ -343,6 +349,10 @@ class ServeEngine:
                         dlut = dispatch.make_lut_spec(
                             dbook, dfan, levels=sp.lut_levels,
                             a_range=sp.lut_range)
+                        # same table precompute for the draft tier
+                        self.spec = sp = dataclasses.replace(
+                            sp, draft_params=dispatch.attach_lut_tables(
+                                sp.draft_params, dlut))
                 self._draft_bs = dispatch.BackendSpec(sp.draft_backend, dlut)
                 self._draft_prefill = jax.jit(dispatch.bind_backend(
                     self._prefill_fn, name=sp.draft_backend, lut_spec=dlut))

@@ -129,3 +129,207 @@ def test_kmeans_assign_block_sizes():
         np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
         np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s),
                                    rtol=1e-3, atol=1e-2)
+
+
+# --- property-based parity (ISSUE 6): randomized ragged shapes ---------------
+# conftest installs tests/_hypothesis_fallback.py as `hypothesis` when the
+# real package is absent, so these properties always run, deterministically.
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.codebook_matmul import (codebook_matmul_pallas,  # noqa: E402
+                                           codebook_matmul_xla)
+from repro.kernels.lut_matmul import (lut_matmul_pallas,  # noqa: E402
+                                      lut_matmul_xla)
+
+
+def _lut_case(seed, m, k, n, R, C, mag):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, R, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, C, (k, n)), jnp.int32)
+    t = jnp.asarray(rng.integers(-mag, mag, (R, C)), jnp.int32)
+    return a, w, t
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 33), st.integers(1, 40), st.integers(1, 33),
+       st.sampled_from([3, 9, 257]), st.sampled_from([5, 65, 256]),
+       # 1 << 25 is overflow-adjacent: k*mag approaches but stays inside
+       # int32, so any double-count or dropped mask term wraps visibly
+       st.sampled_from([1000, 1 << 25]),
+       st.integers(0, 10_000))
+def test_lut_parity_property(m, k, n, R, C, mag, seed):
+    """Every route — XLA rows/flat at several chunk sizes, Pallas interpret
+    with blocks larger AND smaller than the dims — must equal the pure-jnp
+    oracle bit-for-bit on ragged shapes (integer accumulators: no
+    tolerance, exact)."""
+    a, w, t = _lut_case(seed, m, k, n, R, C, mag)
+    want = np.asarray(ref.lut_matmul_ref(a, w, t))
+    for variant in ("rows", "flat"):
+        got = lut_matmul_xla(a, w, t, kc=32, variant=variant)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=variant)
+    got = lut_matmul_pallas(a, w, t, bm=8, bn=16, bk=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want, err_msg="pallas")
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 33), st.integers(1, 40), st.integers(1, 33),
+       st.sampled_from([jnp.float32, jnp.bfloat16]),
+       st.integers(0, 10_000))
+def test_codebook_parity_property(m, k, n, xdt, seed):
+    """XLA fallback and Pallas interpret vs oracle on ragged shapes."""
+    rng = np.random.default_rng(seed)
+    W = 64
+    x = jnp.asarray(rng.standard_normal((m, k)), xdt)
+    wi = jnp.asarray(rng.integers(0, W, (k, n)), jnp.int32)
+    book = jnp.asarray(rng.standard_normal((W,)), jnp.float32)
+    want = np.asarray(ref.codebook_matmul_ref(x, wi, book), np.float32)
+    tol = 2e-2 if xdt == jnp.bfloat16 else 2e-5
+    for got in (codebook_matmul_xla(x, wi, book),
+                codebook_matmul_pallas(x, wi, book, bm=8, bn=16, bk=16,
+                                       interpret=True)):
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=tol, atol=tol * k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 24), st.integers(1, 20),
+       st.integers(0, 10_000))
+def test_lut_negative_ids_canonicalize(m, k, n, seed):
+    """Narrow signed ids are unsigned-intended: every kernel route must
+    treat a negative id as id + table_dim.  The oracle is ref on the
+    explicitly canonicalized indices (ref itself does raw flat addressing
+    and is NOT the contract for negative inputs)."""
+    rng = np.random.default_rng(seed)
+    R, C = 300, 256
+    a8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    t = jnp.asarray(rng.integers(-1000, 1000, (R, C)), jnp.int32)
+    a_can = jnp.where(a8 < 0, a8.astype(jnp.int32) + R, a8).astype(jnp.int32)
+    w_can = jnp.where(w8 < 0, w8.astype(jnp.int32) + C, w8).astype(jnp.int32)
+    want = np.asarray(ref.lut_matmul_ref(a_can, w_can, t))
+    for variant in ("rows", "flat"):
+        got = lut_matmul_xla(a8, w8, t, kc=16, variant=variant)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=variant)
+    got = lut_matmul_pallas(a8, w8, t, bm=8, bn=16, bk=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want, err_msg="pallas")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 24), st.integers(1, 20),
+       st.integers(0, 10_000))
+def test_codebook_negative_ids_canonicalize(m, k, n, seed):
+    """int8 codebook ids with |W| = 256: -1 must address entry 255 on
+    every route (two's-complement reinterpretation, DESIGN.md §12)."""
+    rng = np.random.default_rng(seed)
+    W = 256
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wi8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    book = jnp.asarray(rng.standard_normal((W,)), jnp.float32)
+    wi_can = jnp.where(wi8 < 0, wi8.astype(jnp.int32) + W, wi8)
+    want = np.asarray(ref.codebook_matmul_ref(x, wi_can.astype(jnp.int32),
+                                              book))
+    for got in (codebook_matmul_xla(x, wi8, book),
+                codebook_matmul_pallas(x, wi8, book, bm=8, bn=16, bk=16,
+                                       interpret=True)):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=2e-3)
+
+
+# --- edge shapes + masking explicitness --------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(1, 3, 7), (1, 1, 1), (2, 5, 128),
+                                   (7, 200, 3), (128, 1, 5)])
+def test_lut_edge_shapes_exact(m, k, n):
+    """M=1, K < bk, N odd, degenerate dims — through the routed op AND
+    every explicit route."""
+    a, w, t = _lut_case(99, m, k, n, 17, 33, 1000)
+    want = np.asarray(ref.lut_matmul_ref(a, w, t))
+    np.testing.assert_array_equal(np.asarray(ops.lut_matmul(a, w, t)), want)
+    for kc in (1, 64, 128):
+        for variant in ("rows", "flat"):
+            got = lut_matmul_xla(a, w, t, kc=kc, variant=variant)
+            np.testing.assert_array_equal(np.asarray(got), want)
+    got = lut_matmul_pallas(a, w, t, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 3, 7), (2, 5, 128), (7, 200, 3)])
+def test_codebook_edge_shapes(m, k, n):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wi = jnp.asarray(rng.integers(0, 16, (k, n)), jnp.int32)
+    book = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    want = np.asarray(ref.codebook_matmul_ref(x, wi, book))
+    np.testing.assert_allclose(
+        np.asarray(ops.codebook_matmul(x, wi, book)), want, rtol=2e-5,
+        atol=2e-4)
+    got = codebook_matmul_pallas(x, wi, book, bm=128, bn=128, bk=128,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+
+
+def test_lut_ragged_k_masking_is_explicit():
+    """K ragged vs bk, with table[0, 0] deliberately nonzero and all ids 0:
+    any unmasked tail contribution adds a multiple of table[0, 0] — exact
+    equality proves the tail handling is explicit masking, not an
+    assumption that padded/OOB gathers read zeros."""
+    R, C = 4, 4
+    t = jnp.full((R, C), 7, jnp.int32)         # every entry visible
+    for (m, k, n, bk) in [(3, 5, 4, 16), (1, 1, 1, 8), (4, 37, 3, 16)]:
+        a = jnp.zeros((m, k), jnp.int32)
+        w = jnp.zeros((k, n), jnp.int32)
+        want = np.full((m, n), 7 * k, np.int64).astype(np.int32)
+        got = lut_matmul_pallas(a, w, t, bm=8, bn=8, bk=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        for variant in ("rows", "flat"):
+            got = lut_matmul_xla(a, w, t, kc=bk, variant=variant)
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_codebook_ragged_k_masking_is_explicit():
+    """Same masking probe for the float kernel: book[0] nonzero, plus
+    non-finite activations — the kernel masks BOTH operands on the ragged
+    tail (an unmasked NaN times a masked-to-zero weight would still
+    poison the accumulator)."""
+    book = jnp.asarray([5.0, -1.0], jnp.float32)
+    m, k, n = 3, 5, 4
+    x = jnp.ones((m, k), jnp.float32)
+    wi = jnp.zeros((k, n), jnp.int32)
+    want = np.full((m, n), 5.0 * k, np.float32)
+    got = codebook_matmul_pallas(x, wi, book, bm=8, bn=8, bk=16,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+# --- page gather: ragged tables + id clamping --------------------------------
+
+@pytest.mark.parametrize("B,P,pages,rest", [(1, 1, 2, (4, 2, 3)),
+                                            (3, 5, 7, (4, 2)),
+                                            (2, 9, 16, (8,))])
+def test_page_gather_parity(B, P, pages, rest):
+    from repro.kernels.page_gather import page_gather_pallas
+    rng = np.random.default_rng(11)
+    pool = jnp.asarray(rng.standard_normal((pages,) + rest), jnp.float32)
+    pt = jnp.asarray(rng.integers(0, pages, (B, P)), jnp.int32)
+    got = page_gather_pallas(pool, pt, interpret=True)
+    want = np.asarray(pool)[np.asarray(pt)]
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # the ops-level CPU fallback must agree with the kernel
+    np.testing.assert_array_equal(np.asarray(ops.gather_pages(pool, pt)),
+                                  want)
+
+
+def test_page_gather_oob_ids_clamp():
+    """Out-of-range page ids (negative or >= n_pages) clamp into the pool
+    on BOTH routes — the bounded-garbage contract: a bad id degrades to a
+    valid page read, never UB / NaN / INT_MIN fill."""
+    from repro.kernels.page_gather import page_gather_pallas
+    rng = np.random.default_rng(5)
+    pool = jnp.asarray(rng.standard_normal((4, 2, 3)), jnp.float32)
+    pt = jnp.asarray([[-3, 0], [2, 9]], jnp.int32)
+    clamped = np.clip(np.asarray(pt), 0, 3)
+    want = np.asarray(pool)[clamped]
+    got = page_gather_pallas(pool, pt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(np.asarray(ops.gather_pages(pool, pt)),
+                                  want)

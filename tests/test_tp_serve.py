@@ -48,6 +48,21 @@ def test_tp_serve_token_parity(matrix, tp):
 
 
 @pytest.mark.parametrize("tp", [2, 4])
+def test_lut_acc_psum_bit_exact(tp):
+    """The §10 int-accumulator psum: a row-parallel lut contraction's
+    int32 accumulator (and its decoded float output) under tp=N is
+    bit-identical to single-device — integer addition is associative, so
+    sharding the K reduction cannot change a single bit.  Exercises the
+    real w2 site of the quantized model with the replicated precomputed
+    table (kernels/dispatch.attach_lut_tables contract)."""
+    ref = run_under_devices("tp_serve_cases:lut_acc_psum_case", {"tp": 1})
+    got = run_under_devices("tp_serve_cases:lut_acc_psum_case", {"tp": tp})
+    assert got["acc"] == ref["acc"], f"tp={tp} int32 accumulators diverged"
+    assert got["y"] == ref["y"], f"tp={tp} decoded outputs diverged"
+    assert got["s"] == ref["s"]
+
+
+@pytest.mark.parametrize("tp", [2, 4])
 def test_decode_collectives_bounded(tp):
     """No all-gather of cache-sized operands in the decode step: the
     largest collective payload (jaxpr psums AND compiled-HLO collectives,

@@ -98,6 +98,59 @@ def golden_serve_case(tp: int = 2) -> list:
     return eng.serve(PROMPTS[:2], max_new=MAX_NEW)
 
 
+def lut_acc_psum_case(tp: int = 1) -> dict:
+    """The §10 row-parallel lut contract at the *accumulator* level: psum
+    over int32 partial accumulators must be bit-identical to the
+    single-device int32 accumulation (integer addition is associative —
+    unlike the float psum of the codebook backend, which is only ever
+    close).  Runs the real w2 row-parallel site (K=256 reduction) from the
+    quantized model, through the same ``_lut_acc`` + replicated
+    precomputed table the engine traces.
+
+    Returns raw int32 accumulators AND the decoded backend_matmul floats
+    (bit-stable too: decode is a deterministic function of the acc), both
+    as exact int/float lists for cross-process comparison.
+    """
+    from repro.kernels import dispatch
+
+    model, params, cp = _model_params()
+    site = cp["blocks"]["mlp"]["w2"]
+    w_idx = jnp.asarray(site["w_idx"][0])                 # (K=256, N=128)
+    codebook = jnp.asarray(site["codebook"][0])           # (|W|=256,)
+    K, N = w_idx.shape
+    spec = dispatch.make_lut_spec(codebook, fan_in=K)
+    table = dispatch.build_lut_table(codebook, spec)      # replicated
+    rng = np.random.default_rng(42)
+    x2 = jnp.asarray(rng.standard_normal((8, K)) * 2.0, jnp.float32)
+
+    da = spec.da
+    a_idx = jnp.clip(jnp.round((x2 - spec.a_min) / da),
+                     0, spec.levels - 1).astype(jnp.int32)
+    mesh = _mesh(tp)
+    if mesh is None:
+        acc = dispatch._lut_acc(x2, w_idx, codebook, spec, table)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compat import shard_map
+
+        def body(al, wl):
+            from repro.kernels import ops
+            return jax.lax.psum(ops.lut_matmul(al, wl, table), "model")
+
+        f = shard_map(jax.jit(body), mesh=mesh,
+                      in_specs=(P(None, "model"), P("model", None)),
+                      out_specs=P(None, None), check_vma=False)
+        acc = f(a_idx, w_idx)
+
+    with dispatch.use_backend("lut", spec, mesh):
+        y = dispatch.backend_matmul(x2, w_idx, codebook, kind="row",
+                                    table=table)
+    return {"acc": np.asarray(acc).astype(int).tolist(),
+            "y": [[float(v) for v in row] for row in np.asarray(y)],
+            "K": int(K), "N": int(N), "s": spec.s}
+
+
 # --- collective-bytes accounting --------------------------------------------
 
 _COLLECTIVES = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
