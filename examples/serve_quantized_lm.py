@@ -35,7 +35,8 @@ import repro.configs as configs
 from repro.core.export import memory_report
 from repro.core.quantizer import cluster_params, codebook_indices, init_state
 from repro.models.model_zoo import build
-from repro.serving import ServeEngine, SpecConfig, to_codebook_params
+from repro.serving import (ServeEngine, SpecConfig, Telemetry,
+                           to_codebook_params)
 
 
 def main():
@@ -69,6 +70,12 @@ def main():
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, 8)]
                for _ in range(args.requests)]
 
+    # one metrics registry for the whole run (DESIGN.md §13): each engine
+    # below attaches its subsystem stats, and the end-of-run summary reads
+    # them from one place instead of per-subsystem hand-rolled prints
+    tel = Telemetry()
+    tel.attach_kernel_counters()
+
     for backend in ("dense", "codebook", "lut"):
         max_new = args.lut_max_new if backend == "lut" else args.max_new
         engine = ServeEngine(model, cparams, max_len=64, backend=backend,
@@ -96,12 +103,11 @@ def main():
                          max_batch=args.requests, paged=True,
                          page_size=args.page_size, kv_dtype=args.kv_dtype,
                          prefix_cache=args.prefix_cache)
+    tel.attach_engine(engine)
     outs = engine.serve(shared, max_new=args.max_new // 2)
     st = engine.pool.stats
     print(f"[   paged] shared system prompt ({len(system)} tokens × "
-          f"{args.requests} requests): prefix hit rate "
-          f"{100 * st.hit_rate:.0f}% ({st.hit_pages} pages reused, "
-          f"{st.cow_copies} CoW), peak cache "
+          f"{args.requests} requests): peak cache "
           f"{engine.pool.bytes_per_page() * st.peak_pages_in_use / 1e6:.3f}MB"
           f" vs {engine.dense_cache_bytes() / 1e6:.3f}MB dense slab "
           f"({args.kv_dtype} pages, {args.page_size} tokens/page)")
@@ -123,16 +129,17 @@ def main():
                                            draft_params=cparams,
                                            draft_backend="lut",
                                            lut_levels=512))
+    tel.attach_engine(spec_eng)
     want = target.serve(prompts, max_new=args.max_new // 2)
     got = spec_eng.serve(prompts, max_new=args.max_new // 2)
-    st = spec_eng.spec_stats
     print(f"[    spec] lut(512)-tier draft -> codebook-tier target, k={k}: "
-          f"{'identical tokens' if got == want else 'DIVERGED'}, "
-          f"{st.rounds} verify rounds for "
-          f"{args.requests * (args.max_new // 2)} tokens "
-          f"(acceptance {100 * st.acceptance_rate:.0f}%, "
-          f"{st.tokens_per_round:.1f} tokens/round)")
+          f"{'identical tokens' if got == want else 'DIVERGED'} over "
+          f"{args.requests * (args.max_new // 2)} tokens")
     print(f"           continuation: {got[0][8:]}")
+
+    # the end-of-run rollup — prefix hit rate, spec acceptance, kernel
+    # dispatch routes — read from the registry the subsystems fed above
+    print(tel.summary())
 
 
 if __name__ == "__main__":

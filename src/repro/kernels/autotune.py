@@ -218,6 +218,21 @@ def _measure(kernel: str, cfg: dict, m: int, k: int, n: int,
 _MEM: dict = {}            # in-process cache, seeded lazily from the file
 _MEM_LOADED = False
 
+# How each kernel_config call resolved — a fixed vocabulary so snapshot
+# schemas stay stable.  Process-global (like _MEM, which persists across
+# engines); serving telemetry reads these as deltas from attach time.
+TUNING_COUNTS = {"explicit_hit": 0, "memory_hit": 0, "model_select": 0,
+                 "measured_select": 0}
+
+
+def tuning_counts() -> dict:
+    return dict(TUNING_COUNTS)
+
+
+def reset_tuning_counts() -> None:
+    for k in TUNING_COUNTS:
+        TUNING_COUNTS[k] = 0
+
 
 def clear_memory_cache():
     global _MEM_LOADED
@@ -237,17 +252,21 @@ def kernel_config(kernel: str, m: int, k: int, n: int, *, dtype: str,
     global _MEM_LOADED
     key = cache_key(kernel, plat, m, k, n, dtype, table_shape)
     if cache is not None and key in cache:
+        TUNING_COUNTS["explicit_hit"] += 1
         return cache[key]
     if not _MEM_LOADED:
         _MEM.update(load_cache())
         _MEM_LOADED = True
     if cache is None and key in _MEM:
+        TUNING_COUNTS["memory_hit"] += 1
         return _MEM[key]
     cands = candidates(kernel, plat, m, k, n, dtype, table_shape)
     if measure:
+        TUNING_COUNTS["measured_select"] += 1
         best = min(cands, key=lambda c: _measure(kernel, c, m, k, n, dtype,
                                                  table_shape, seed))
     else:
+        TUNING_COUNTS["model_select"] += 1
         # min() is stable: equal-cost ties resolve to the earlier
         # (larger-tile / preferred-variant) candidate — deterministically
         best = min(cands, key=lambda c: model_cost(kernel, c, m, k, n,

@@ -51,7 +51,8 @@ import numpy as np
 __all__ = ["BACKENDS", "LutSpec", "BackendSpec", "make_lut_spec",
            "use_backend", "matmul_backend", "matmul_mesh", "backend_matmul",
            "bind_backend", "build_lut_table", "attach_lut_tables",
-           "kernel_config", "autotune_shapes"]
+           "kernel_config", "autotune_shapes", "matmul_call_counts",
+           "reset_matmul_call_counts"]
 
 BACKENDS = ("dense", "codebook", "lut")
 
@@ -207,6 +208,27 @@ class _State:
 
 _STATE = _State()
 
+# Trace-time dispatch counters: "{backend}.{route}" -> number of
+# backend_matmul sites traced through that route (local | col | row |
+# replicated).  Process-global like the backend state itself; the serving
+# telemetry registry (serving/telemetry.py) reads these as deltas — this
+# module must never import serving/.
+MATMUL_CALLS: dict = {}
+
+
+def _count_route(route: str) -> None:
+    key = f"{_STATE.backend}.{route}"
+    MATMUL_CALLS[key] = MATMUL_CALLS.get(key, 0) + 1
+
+
+def matmul_call_counts() -> dict:
+    """Snapshot of the trace-time route counters."""
+    return dict(MATMUL_CALLS)
+
+
+def reset_matmul_call_counts() -> None:
+    MATMUL_CALLS.clear()
+
 
 def matmul_backend() -> str:
     """The backend active for traces happening right now."""
@@ -276,6 +298,7 @@ def backend_matmul(x, w_idx, codebook, kind: str | None = None, table=None):
             and _STATE.mesh.shape["model"] > 1:
         y = _sharded_matmul(x2, w_idx, codebook, kind, _STATE.mesh, table)
     else:
+        _count_route("local")
         y = _local_matmul(x2, w_idx, codebook, table)
     return y.reshape(*lead, -1).astype(x.dtype)
 
@@ -316,12 +339,14 @@ def _sharded_matmul(x2, w_idx, codebook, kind, mesh, table=None):
         return _lut_matmul(xl, wl, codebook, spec, table)
 
     if kind == "col" and N % tp == 0:
+        _count_route("col")
         f = shard_map(kernel, mesh=mesh,
                       in_specs=(P(None, None), P(None, "model")),
                       out_specs=P(None, "model"), check_vma=False)
         return f(x2, w_idx)
 
     if kind == "row" and K % tp == 0:
+        _count_route("row")
         if backend == "lut":
             def body(xl, wl):
                 # psum the int32 accumulator, decode the scale once after:
@@ -341,6 +366,7 @@ def _sharded_matmul(x2, w_idx, codebook, kind, mesh, table=None):
         return f(x2, w_idx)
 
     # replicated fallback (axis does not divide tp, or unannotated site)
+    _count_route("replicated")
     f = shard_map(kernel, mesh=mesh,
                   in_specs=(P(None, None), P(None, None)),
                   out_specs=P(None, None), check_vma=False)

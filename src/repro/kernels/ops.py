@@ -36,7 +36,26 @@ from repro.kernels import lut_matmul as _lm
 from repro.kernels import page_gather as _pg
 
 __all__ = ["codebook_matmul", "lut_matmul", "act_quant", "kmeans_assign",
-           "gather_pages", "on_tpu", "supports_compiled_pallas"]
+           "gather_pages", "on_tpu", "supports_compiled_pallas",
+           "route_counts", "reset_route_counts"]
+
+# Trace-time platform-route counters: "{kernel}.{impl}" -> times that impl
+# was selected while tracing (pallas | pallas_interpret | xla).  Read as
+# deltas by serving/telemetry.py; kernels/ never imports serving/.
+ROUTE_CALLS: dict = {}
+
+
+def _count_route(kernel: str, impl: str) -> None:
+    key = f"{kernel}.{impl}"
+    ROUTE_CALLS[key] = ROUTE_CALLS.get(key, 0) + 1
+
+
+def route_counts() -> dict:
+    return dict(ROUTE_CALLS)
+
+
+def reset_route_counts() -> None:
+    ROUTE_CALLS.clear()
 
 
 def on_tpu() -> bool:
@@ -76,7 +95,9 @@ def codebook_matmul(x, w_idx, codebook):
     n = w_idx.shape[1]
     cfg = _tuned("codebook", m, k, n, x.dtype, codebook.shape)
     if cfg.get("impl") == "xla":
+        _count_route("codebook", "xla")
         return _cm.codebook_matmul_xla(x, w_idx, codebook)
+    _count_route("codebook", "pallas_interpret" if _interp() else "pallas")
     return _cm.codebook_matmul_pallas(x, w_idx, codebook, bm=cfg["bm"],
                                       bn=cfg["bn"], bk=cfg["bk"],
                                       interpret=_interp())
@@ -113,8 +134,10 @@ def lut_matmul(a_idx, w_idx, table):
     n = w_idx.shape[1]
     cfg = _tuned("lut", m, k, n, a_idx.dtype, table.shape)
     if cfg.get("impl") == "xla":
+        _count_route("lut", "xla")
         return _lm.lut_matmul_xla(a_idx, w_idx, table, kc=cfg["kc"],
                                   variant=cfg["variant"])
+    _count_route("lut", "pallas_interpret" if _interp() else "pallas")
     return _lm.lut_matmul_pallas(a_idx, w_idx, table, bm=cfg["bm"],
                                  bn=cfg["bn"], bk=cfg["bk"],
                                  unroll=cfg.get("unroll", 8),
@@ -134,7 +157,9 @@ def gather_pages(pool, page_table):
     (serving-only, like ``lut_matmul``).
     """
     if supports_compiled_pallas():
+        _count_route("page_gather", "pallas")
         return _pg.page_gather_pallas(pool, page_table, interpret=False)
+    _count_route("page_gather", "xla")
     # mode='clip' matches the Pallas kernel's explicit page-id clamp (the
     # jnp.take default is 'fill', which would turn an OOB id into NaN/INT_MIN
     # rather than the bounded-garbage contract both paths promise)

@@ -115,7 +115,12 @@ def run_server(args, engine, cfg):
     if not trace:
         raise SystemExit("--server got an empty trace (check --requests / "
                          "--trace-file)")
-    srv = Server(engine, quantum=args.quantum, preempt=args.preempt)
+    tel = None
+    if args.metrics_out or args.trace_out:
+        from repro.serving.telemetry import Telemetry
+        tel = Telemetry()
+    srv = Server(engine, quantum=args.quantum, preempt=args.preempt,
+                 telemetry=tel)
     t0 = time.time()
     rep = srv.replay(trace)
     wall = time.time() - t0
@@ -125,8 +130,10 @@ def run_server(args, engine, cfg):
     print(f"[server] ttft p50/p99 {rep.p50_ttft:.3f}/{rep.p99_ttft:.3f}s, "
           f"tpot p50/p99 {rep.p50_tpot:.3f}/{rep.p99_tpot:.3f}s "
           f"(virtual clock)")
-    print(f"[server] {rep.preemptions} preemptions, {rep.pages_swapped} "
-          f"pages swapped, SLO attainment {100 * rep.slo_attainment:.0f}%")
+    print(f"[server] {rep.preemptions} preemptions, "
+          f"{rep.pages_swapped_out} pages swapped out / "
+          f"{rep.pages_swapped_in} back in, SLO attainment "
+          f"{100 * rep.slo_attainment:.0f}%")
     print(f"[server] admission order: {rep.admission_order}")
     if engine.paged:
         st = engine.pool.stats
@@ -134,6 +141,15 @@ def run_server(args, engine, cfg):
               f"{engine.pool.usable_pages} pages, prefix hit rate "
               f"{100 * st.hit_rate:.0f}%, swap out/in "
               f"{st.swapped_out_pages}/{st.swapped_in_pages} pages")
+    if tel is not None:
+        if args.metrics_out:
+            tel.export_metrics(args.metrics_out)
+            print(f"[telemetry] metrics snapshot -> {args.metrics_out}")
+        if args.trace_out:
+            tel.export_trace(args.trace_out)
+            print(f"[telemetry] Perfetto trace -> {args.trace_out} "
+                  "(open at https://ui.perfetto.dev)")
+        print(tel.summary())
     h = srv.sched.handles[0]
     print("sample:", h.prompt, "->", h.tokens)
 
@@ -186,6 +202,13 @@ def main():
                     action=argparse.BooleanOptionalAction)
     ap.add_argument("--slo-ttft", type=float, default=None)
     ap.add_argument("--slo-tpot", type=float, default=None)
+    ap.add_argument("--metrics-out", default="",
+                    help="--server only: write the telemetry registry "
+                         "snapshot (canonical JSON) here after the drain")
+    ap.add_argument("--trace-out", default="",
+                    help="--server only: write a Perfetto/Chrome "
+                         "trace.json of request/slot lifecycle spans "
+                         "(virtual-clock time) here after the drain")
     ap.add_argument("--seed", type=int, default=0,
                     help="traffic/workload PRNG seed")
     args = ap.parse_args()
@@ -201,6 +224,9 @@ def main():
     if args.server and args.spec_draft != "none":
         ap.error("the scheduler drives plain decode rounds; drop "
                  "--spec-draft for --server")
+    if (args.metrics_out or args.trace_out) and not args.server:
+        ap.error("--metrics-out/--trace-out report the scheduler drain; "
+                 "add --server")
 
     mesh = None
     if args.tp > 1:

@@ -11,5 +11,6 @@ from repro.serving.scheduler import (AsyncScheduler, RequestHandle,
 from repro.serving.server import (Server, ServerReport, load_trace,
                                   poisson_trace, save_trace)
 from repro.serving.spec import SpecConfig, SpecStats
+from repro.serving.telemetry import NULL_TELEMETRY, Telemetry
 from repro.kernels.dispatch import (BACKENDS, BackendSpec, LutSpec,
                                     make_lut_spec, use_backend)

@@ -81,6 +81,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import dispatch
 from repro.models.model_zoo import Model
 from repro.serving.kvcache import PagePool
+from repro.serving.telemetry import NULL_TELEMETRY
 from repro.serving.spec import (SpecConfig, SpecStats, filter_logits,
                                 ngram_propose, ngram_propose_host,
                                 spec_accept)
@@ -234,8 +235,12 @@ class ServeEngine:
     top_k: int = 0                 # 0 = off; sampling only (greedy is argmax)
     top_p: float = 1.0             # 1.0 = off; nucleus filtering
     spec: SpecConfig | None = None  # speculative decoding (DESIGN.md §9)
+    telemetry: object = None       # serving.telemetry registry (§13); None
+    #                                normalizes to the zero-cost null object
 
     def __post_init__(self):
+        if self.telemetry is None:
+            self.telemetry = NULL_TELEMETRY
         cfg = self.model.cfg
         if cfg.family not in _ENGINE_FAMILIES:
             raise NotImplementedError(
@@ -1038,6 +1043,7 @@ class ServeEngine:
         if self.paged:
             adm, first, st.key = self._paged_admit(prompt, stop, st.key)
             if adm is None:
+                self.telemetry.count("engine.admit_blocked")
                 return None
             st.adm[slot] = adm
             st.pt_np[slot] = 0
@@ -1098,6 +1104,13 @@ class ServeEngine:
                 toks[b] = out_np[b, prev[b]:gen[b]].tolist()
             if gen[b] >= stops[b]:
                 done.append(b)
+        tel = self.telemetry
+        if tel.enabled and toks:
+            tel.count("engine.steps")
+            tel.count("engine.tokens", sum(len(t) for t in toks.values()))
+            tel.observe("engine.batch_occupancy", len(toks))
+            tel.count("engine.stops_finished", len(done))
+            tel.count("engine.stops_quantum", len(toks) - len(done))
         return toks, done
 
     def sched_release(self, st: SchedState, slot: int) -> None:
@@ -1164,6 +1177,7 @@ class ServeEngine:
             pool = self.pool
             adm = pool.swap_in(blob.reserve)
             if adm is None:
+                self.telemetry.count("engine.swap_in_blocked")
                 return False
             P = pool.pages_per_slot
             pids = np.zeros((P,), np.int32)

@@ -89,9 +89,15 @@ class PoolStats:
     cow_copies: int = 0
     evictions: int = 0
     peak_pages_in_use: int = 0
+    peak_page_refs: int = 0      # refcount high-water across all pages
     truncated_pages: int = 0     # pages returned by speculative rollback
-    swapped_out_pages: int = 0   # pages released by scheduler preemption
-    swapped_in_pages: int = 0    # pages re-allocated by swap-in
+    # Swap counters spell their direction and count page *references*
+    # released/re-acquired by the pool (the full reservation) — distinct
+    # from the scheduler's pages_swapped_out/in, which count data pages
+    # actually moved through the host blob.  serving/telemetry.py
+    # re-exports both under one canonical vocabulary (pool.* vs sched.*).
+    swapped_out_pages: int = 0   # page refs released by scheduler preemption
+    swapped_in_pages: int = 0    # page refs re-acquired by swap-in
 
     @property
     def hit_rate(self) -> float:
@@ -237,6 +243,9 @@ class PagePool:
         used = self.pages_in_use()
         if used > self.stats.peak_pages_in_use:
             self.stats.peak_pages_in_use = used
+        top = int(self.ref.max()) if self.ref.size else 0
+        if top > self.stats.peak_page_refs:
+            self.stats.peak_page_refs = top
 
     def _alloc(self) -> int:
         if not self.free:
@@ -276,6 +285,7 @@ class PagePool:
         self.table[key] = pid
         self.key_of[pid] = key
         self.ref[pid] += 1
+        self._note_usage()
 
     # --- request lifecycle ----------------------------------------------------
 

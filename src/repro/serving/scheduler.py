@@ -46,6 +46,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
+from repro.serving.telemetry import NULL_TELEMETRY
+
 __all__ = ["AsyncScheduler", "RequestHandle", "StepCosts", "VirtualClock",
            "QUEUED", "RUNNING", "SWAPPED", "FINISHED"]
 
@@ -83,6 +85,16 @@ class StepCosts:
     swap_page: float = 2e-3          # per page moved by swap-out/swap-in
 
 
+def _blob_bytes(blob) -> int:
+    """Host bytes held by a SwapBlob's KV payload.  Telemetry-only (the
+    simulation suite's stub engines swap structureless blobs, so ``data``
+    is optional here)."""
+    data = getattr(blob, "data", None)
+    if not data:
+        return 0
+    return sum(int(getattr(v, "nbytes", 0)) for v in data.values())
+
+
 class RequestHandle:
     """One submitted request's live view: state, streamed tokens, and
     per-request metrics (TTFT/TPOT in injected-clock seconds)."""
@@ -104,7 +116,12 @@ class RequestHandle:
         self.first_token_at = None
         self.finished_at = None
         self.n_preempt = 0
-        self.pages_swapped = 0               # swap-OUT direction only
+        # data pages moved to the host blob by preemption (swap-OUT
+        # direction; the canonical direction-suffixed spelling shared with
+        # PoolStats.swapped_out_pages and the telemetry registry — note
+        # the pool counts released page *references*, this counts *data*
+        # pages, so the two differ by the unfilled reservation tail)
+        self.pages_swapped_out = 0
         self.slot = None
         self._admit_seq = -1                 # recency key for victim choice
 
@@ -168,7 +185,7 @@ class AsyncScheduler:
     suite compares run-to-run."""
 
     def __init__(self, engine, *, clock=None, costs=None, quantum: int = 1,
-                 preempt: bool = True, key=None):
+                 preempt: bool = True, key=None, telemetry=None):
         if engine.spec is not None:
             raise NotImplementedError(
                 "the scheduler drives plain decode rounds; speculative "
@@ -188,8 +205,20 @@ class AsyncScheduler:
         self.handles: dict[int, RequestHandle] = {}
         self.events: list[tuple] = []        # (t, kind, rid) replay log
         self.n_preemptions = 0
+        self.n_pages_swapped_out = 0         # data pages preemption moved
+        self.n_pages_swapped_in = 0          # data pages restore moved back
         self._seq = 0
         self._admits = 0
+        # the telemetry registry (serving/telemetry.py, DESIGN.md §13);
+        # None = the zero-cost null object.  The scheduler owns the clock,
+        # so it binds the tracer and wires the engine's subsystems here —
+        # unconditionally, so a re-used engine's counters always point at
+        # THIS session's registry (or the null object when disabled).
+        self.telemetry = NULL_TELEMETRY if telemetry is None else telemetry
+        engine.telemetry = self.telemetry
+        if self.telemetry.enabled:
+            self.telemetry.bind_clock(self.clock)
+            self.telemetry.attach_engine(engine)
 
     # --- submission ----------------------------------------------------------
 
@@ -212,6 +241,9 @@ class AsyncScheduler:
         self.handles[h.rid] = h
         heapq.heappush(self.pending, (t, h.rid))
         self._log("submit", h.rid)
+        if self.telemetry.enabled:
+            self.telemetry.count("sched.submitted")
+            self.telemetry.instant("requests", h.rid, "submit")
         return h
 
     # --- internals -----------------------------------------------------------
@@ -226,6 +258,10 @@ class AsyncScheduler:
             h = self.handles[rid]
             heapq.heappush(self.ready, (-h.priority, h.arrival, rid))
             self._log("arrive", rid)
+            if self.telemetry.enabled:
+                self.telemetry.count("sched.arrivals")
+                self.telemetry.instant("requests", rid, "arrive")
+                self.telemetry.open_span("requests", rid, "queued")
 
     def next_arrival(self) -> float | None:
         return self.pending[0][0] if self.pending else None
@@ -257,22 +293,40 @@ class AsyncScheduler:
         h.state = FINISHED
         h.finished_at = self.clock.now()
         self._log("finish", h.rid)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("sched.finished")
+            tel.close_span("requests", h.rid, "running")
+            tel.instant("requests", h.rid, "finish")
+            if h.slo_ttft is not None or h.slo_tpot is not None:
+                tel.count("sched.slo_hits" if h.slo_met()
+                          else "sched.slo_misses")
 
     # --- placement + preemption ----------------------------------------------
 
     def _place(self, h: RequestHandle, slot: int) -> bool:
         """Admit (fresh) or swap in (preempted) ``h`` into ``slot``."""
         eng = self.engine
+        tel = self.telemetry
         if h.rid in self.blobs:
             blob = self.blobs[h.rid]
+            t0 = self.clock.now()
             if not eng.sched_swap_in(self.st, slot, blob):
                 return False
             del self.blobs[h.rid]
-            # the restore pays swap time but pages_swapped counts only the
-            # swap-OUT direction (matching PoolStats.swapped_out_pages)
             self.clock.advance(self.costs.swap_page * blob.n_pages)
+            self.n_pages_swapped_in += blob.n_pages
             self._log("resume", h.rid)
+            if tel.enabled:
+                tel.count("sched.resumes")
+                tel.count("sched.pages_swapped_in", blob.n_pages)
+                tel.count("sched.swap_bytes_in", _blob_bytes(blob))
+                tel.span("slots", slot, "swap_in", t0, self.clock.now())
+                tel.close_span("requests", h.rid, "swapped")
+                tel.open_span("requests", h.rid, "running")
+                tel.instant("requests", h.rid, "resume")
         else:
+            t0 = self.clock.now()
             first = eng.sched_admit(self.st, slot, h.prompt, h.max_new)
             if first is None:
                 return False
@@ -280,6 +334,12 @@ class AsyncScheduler:
             if h.admitted_at is None:
                 h.admitted_at = self.clock.now()
             self._log("admit", h.rid)
+            if tel.enabled:
+                tel.count("sched.admissions")
+                tel.span("slots", slot, "prefill", t0, self.clock.now())
+                tel.close_span("requests", h.rid, "queued")
+                tel.open_span("requests", h.rid, "running")
+                tel.instant("requests", h.rid, "admit")
             self._emit(h, [first])           # prefill samples token #1
         h.state = RUNNING
         h.slot = slot
@@ -314,18 +374,29 @@ class AsyncScheduler:
         return min(cands, key=lambda h: (h.priority, -h._admit_seq))
 
     def _preempt(self, victim: RequestHandle) -> None:
-        blob = self.engine.sched_swap_out(self.st, victim.slot)
+        slot, t0 = victim.slot, self.clock.now()
+        blob = self.engine.sched_swap_out(self.st, slot)
         self.clock.advance(self.costs.swap_page * blob.n_pages)
         self.blobs[victim.rid] = blob
-        self.slots[victim.slot] = None
+        self.slots[slot] = None
         victim.slot = None
         victim.state = SWAPPED
         victim.n_preempt += 1
-        victim.pages_swapped += blob.n_pages
+        victim.pages_swapped_out += blob.n_pages
         self.n_preemptions += 1
+        self.n_pages_swapped_out += blob.n_pages
         heapq.heappush(self.ready,
                        (-victim.priority, victim.arrival, victim.rid))
         self._log("preempt", victim.rid)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("sched.preemptions")
+            tel.count("sched.pages_swapped_out", blob.n_pages)
+            tel.count("sched.swap_bytes_out", _blob_bytes(blob))
+            tel.span("slots", slot, "swap_out", t0, self.clock.now())
+            tel.close_span("requests", victim.rid, "running")
+            tel.open_span("requests", victim.rid, "swapped")
+            tel.instant("requests", victim.rid, "preempt")
 
     def _admit_ready(self) -> int:
         """Place queue heads until one blocks (strict head-of-line).
@@ -358,8 +429,13 @@ class AsyncScheduler:
         needed), decode one quantum, stream new tokens, harvest
         finishers.  Returns False once fully idle (nothing pending,
         queued, or in flight)."""
+        tel = self.telemetry
+        t_round0 = self.clock.now()
         self._harvest()
         placed = self._admit_ready()
+        if tel.enabled:
+            tel.observe("sched.queue_depth", len(self.ready))
+        t_dec0 = self.clock.now()
         toks, done = self.engine.serve_step(self.st, self.quantum)
         if toks:
             # a round is as long as its longest slot actually decoded —
@@ -367,15 +443,24 @@ class AsyncScheduler:
             # would inflate TPOT/makespan deterministically
             self.clock.advance(self.costs.decode_step
                                * max(len(t) for t in toks.values()))
+            if tel.enabled:
+                for slot in sorted(toks):
+                    tel.span("slots", slot, "decode", t_dec0,
+                             self.clock.now())
             for slot in sorted(toks):
                 self._emit(self.slots[slot], toks[slot])
         for slot in done:
             self._finish(slot)
         if placed or toks or done:
+            if tel.enabled:
+                tel.count("sched.rounds")
+                tel.span("sched", 0, "round", t_round0, self.clock.now())
             return True
         nxt = self.next_arrival()
         if nxt is not None:                  # idle-jump to the next event
             self.clock.advance(nxt - self.clock.now())
+            if tel.enabled:
+                tel.instant("sched", 0, "idle_jump")
             return True
         if not (self.ready or self.running):
             return False

@@ -91,7 +91,8 @@ class ServerReport:
     p50_tpot: float
     p99_tpot: float
     preemptions: int
-    pages_swapped: int
+    pages_swapped_out: int           # data pages preemption moved out
+    pages_swapped_in: int            # data pages restore moved back
     slo_attainment: float            # over requests that set an SLO
     admission_order: list
 
@@ -113,7 +114,8 @@ class ServerReport:
             p50_tpot=pct([h.tpot for h in handles], 50),
             p99_tpot=pct([h.tpot for h in handles], 99),
             preemptions=sched.n_preemptions,
-            pages_swapped=sum(h.pages_swapped for h in handles),
+            pages_swapped_out=sum(h.pages_swapped_out for h in handles),
+            pages_swapped_in=sched.n_pages_swapped_in,
             slo_attainment=att,
             admission_order=sched.admission_order)
 
@@ -127,11 +129,12 @@ class Server:
     ``submit()``/``poll()`` compose into live loops."""
 
     def __init__(self, engine, *, clock=None, costs=None, quantum: int = 1,
-                 preempt: bool = True, key=None):
+                 preempt: bool = True, key=None, telemetry=None):
         self.clock = VirtualClock() if clock is None else clock
         self.sched = AsyncScheduler(engine, clock=self.clock, costs=costs,
                                     quantum=quantum, preempt=preempt,
-                                    key=key)
+                                    key=key, telemetry=telemetry)
+        self.telemetry = self.sched.telemetry
 
     def submit(self, prompt, max_new: int, **kw):
         return self.sched.submit(prompt, max_new, **kw)

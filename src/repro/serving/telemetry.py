@@ -1,0 +1,443 @@
+"""Deterministic serving telemetry: lifecycle spans, a metrics registry,
+and Perfetto trace export under the injected virtual clock (DESIGN.md §13).
+
+Observability with the same discipline the paper applies to memory
+(core/export.py counts every deployed byte): every admission, preemption,
+swapped page, decode round, and kernel dispatch is accounted for — and
+because nothing under ``serving/`` reads the wall clock (the §11 rule,
+pinned by tests/test_scheduler_sim.py), the account is *replayable*.  Two
+replays of a seeded trace produce byte-identical metric snapshots and
+event logs, so telemetry itself is a regression gate
+(tests/test_telemetry.py, tests/golden_telemetry.json) instead of a
+best-effort log.
+
+Three surfaces, one object:
+
+* **Spans** — ``Telemetry`` records lifecycle spans on named tracks:
+  per-request (``queued → running ⇄ swapped → finished`` on the
+  ``requests`` track), per-slot (``prefill`` / ``decode`` / ``swap_out`` /
+  ``swap_in`` on the ``slots`` track), and per-round (``round`` on the
+  ``sched`` track), all timestamped by the scheduler's injected clock.
+  ``to_perfetto()`` emits the Chrome trace-event JSON that Perfetto
+  (https://ui.perfetto.dev) opens directly — one process per track, one
+  thread per request/slot; ``event_log()`` is the same record as
+  structured rows.
+* **Metrics registry** — typed counters / gauges / histograms plus
+  snapshot-time *providers* that pull the per-subsystem stats objects
+  (``PoolStats``, ``SpecStats``, the kernels' dispatch/tuning counters)
+  into one ``snapshot()`` → canonical-JSON surface.  The canonical stat
+  vocabulary lives here: swap counters always spell their direction
+  (``*_swapped_out_*`` / ``*_swapped_in_*``), and the two swap units stay
+  distinct — ``pool.swapped_out_pages`` counts page *references* released
+  by ``PagePool.swap_out`` (the whole reservation), while
+  ``sched.pages_swapped_out`` counts *data* pages actually moved through
+  the host blob (what the swap cost model bills).  ``RequestHandle`` /
+  ``ServerReport`` use the same ``pages_swapped_out`` spelling.
+* **Zero overhead when disabled** — the default wiring is
+  ``NULL_TELEMETRY``, whose methods are argument-swallowing no-ops with
+  ``enabled=False``; hot paths guard their aggregation work behind
+  ``tel.enabled``.  The smoke bench gates the disabled path at <2% tok/s
+  vs an instrumented run (benchmarks/serve_throughput.py).
+
+Determinism contract: every number in ``snapshot()`` / ``event_log()`` /
+``to_perfetto()`` derives from the virtual clock, the seeded trace, or
+deterministic allocator/tuner state — never the wall; floats are rounded
+to 9 decimals (matching the scheduler's event-log rounding) and JSON is
+dumped with sorted keys.  One caveat rides the kernels provider: the
+autotune memory cache persists per process, so ``tuning.*`` hit/miss
+splits are deltas from provider attach time and compare equal only across
+*fresh-engine* replays (the contended reference pair is dense — its
+kernel section is structurally present and identically zero).
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = ["Telemetry", "NULL_TELEMETRY", "DEFAULT_BUCKETS", "TRACKS"]
+
+# Histogram bucket upper edges (inclusive "≤ edge"; one overflow bucket
+# rides above the last).  Occupancy / queue-depth style counts — small
+# ints — so a coarse doubling ladder is enough.
+DEFAULT_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
+
+# Track name -> Perfetto pid.  Fixed assignment keeps exports stable.
+TRACKS = {"requests": 1, "slots": 2, "sched": 3}
+
+
+def _canon(obj):
+    """Canonicalize for byte-stable JSON: floats to 9 decimals (the
+    scheduler's event rounding), numpy scalars to Python ints/floats."""
+    if isinstance(obj, dict):
+        return {str(k): _canon(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_canon(v) for v in obj]
+    if isinstance(obj, bool) or obj is None or isinstance(obj, str):
+        return obj
+    if isinstance(obj, int):
+        return int(obj)
+    if isinstance(obj, float):
+        return round(float(obj), 9)
+    if hasattr(obj, "item"):                      # numpy scalar
+        return _canon(obj.item())
+    return obj
+
+
+class _Hist:
+    """Fixed-edge histogram: per-bucket counts + count/sum/min/max."""
+
+    __slots__ = ("edges", "counts", "count", "total", "lo", "hi")
+
+    def __init__(self, edges):
+        self.edges = tuple(edges)
+        self.counts = [0] * (len(self.edges) + 1)
+        self.count = 0
+        self.total = 0.0
+        self.lo = None
+        self.hi = None
+
+    def observe(self, v):
+        v = float(v)
+        for i, e in enumerate(self.edges):
+            if v <= e:
+                self.counts[i] += 1
+                break
+        else:
+            self.counts[-1] += 1
+        self.count += 1
+        self.total += v
+        self.lo = v if self.lo is None else min(self.lo, v)
+        self.hi = v if self.hi is None else max(self.hi, v)
+
+    def to_json(self):
+        return {"edges": list(self.edges), "counts": list(self.counts),
+                "count": self.count, "sum": self.total,
+                "min": self.lo, "max": self.hi}
+
+
+class Telemetry:
+    """Tracer + metrics registry over one injected clock.
+
+    Construction is cheap and clock-less; whoever owns the virtual clock
+    (``AsyncScheduler`` via ``Server(telemetry=...)``) calls
+    ``bind_clock`` before emitting spans.  All methods are safe to call
+    in any order; span begin/end pairs are keyed ``(track, tid, name)``.
+    """
+
+    enabled = True
+
+    def __init__(self, clock=None):
+        self.clock = clock
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._hists: dict[str, _Hist] = {}
+        self._providers: list[tuple[str, object]] = []
+        self._events: list[tuple] = []       # ("X", t0, t1, trk, tid, name)
+        self._open: dict[tuple, float] = {}  # (trk, tid, name) -> t0
+        self._kernels_attached = False
+
+    def bind_clock(self, clock) -> None:
+        self.clock = clock
+
+    # --- metrics -------------------------------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        self._counters[name] = self._counters.get(name, 0) + n
+
+    def gauge(self, name: str, value) -> None:
+        self._gauges[name] = value
+
+    def observe(self, name: str, value, edges=None) -> None:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = _Hist(DEFAULT_BUCKETS if edges is None
+                                          else edges)
+        h.observe(value)
+
+    def add_provider(self, prefix: str, fn) -> None:
+        """Register a snapshot-time stats source: ``fn()`` returns a flat
+        dict merged under ``prefix`` in every ``snapshot()``."""
+        self._providers.append((prefix, fn))
+
+    # --- spans ---------------------------------------------------------------
+
+    def span(self, track: str, tid: int, name: str, t0: float,
+             t1: float) -> None:
+        """A complete span with explicit times — what clock-advance-
+        delimited work (prefill, decode rounds, swaps) emits."""
+        self._events.append(("X", round(t0, 9), round(t1, 9),
+                             track, int(tid), name))
+
+    def open_span(self, track: str, tid: int, name: str) -> None:
+        self._open[(track, int(tid), name)] = self.clock.now()
+
+    def close_span(self, track: str, tid: int, name: str) -> None:
+        t0 = self._open.pop((track, int(tid), name), None)
+        if t0 is not None:
+            self.span(track, tid, name, t0, self.clock.now())
+
+    def instant(self, track: str, tid: int, name: str) -> None:
+        self._events.append(("I", round(self.clock.now(), 9),
+                             track, int(tid), name))
+
+    # --- snapshot / export ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """The whole registry — counters, gauges, histograms, and every
+        provider's live stats — as one canonicalized dict.  Contains no
+        wall-clock-derived field by construction (this module lives under
+        ``serving/``, where the wall is banned)."""
+        snap = {"counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {k: h.to_json()
+                               for k, h in self._hists.items()}}
+        for prefix, fn in self._providers:
+            sect = snap.setdefault(prefix, {})
+            sect.update(fn())
+        return _canon(snap)
+
+    def snapshot_json(self) -> str:
+        return json.dumps(self.snapshot(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def event_log(self) -> list:
+        """Structured span/instant rows in emission order (which is itself
+        deterministic under a replayed trace)."""
+        out = []
+        for ev in self._events:
+            if ev[0] == "X":
+                _, t0, t1, track, tid, name = ev
+                out.append({"ph": "X", "t0": t0, "t1": t1, "track": track,
+                            "tid": tid, "name": name})
+            else:
+                _, t, track, tid, name = ev
+                out.append({"ph": "I", "t": t, "track": track, "tid": tid,
+                            "name": name})
+        return out
+
+    def event_log_json(self) -> str:
+        return json.dumps(self.event_log(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def to_perfetto(self) -> dict:
+        """Chrome trace-event JSON (the format Perfetto opens): "X"
+        complete events on one process per track / one thread per
+        request/slot, timestamps in microseconds of *virtual* time."""
+        us = lambda t: int(round(t * 1e6))               # noqa: E731
+        events, seen = [], set()
+        for track, pid in sorted(TRACKS.items(), key=lambda kv: kv[1]):
+            events.append({"ph": "M", "pid": pid, "name": "process_name",
+                           "args": {"name": track}})
+        for ev in self._events:
+            track, tid = (ev[3], ev[4]) if ev[0] == "X" else (ev[2], ev[3])
+            pid = TRACKS.get(track, 99)
+            if (pid, tid) not in seen:
+                seen.add((pid, tid))
+                events.append({"ph": "M", "pid": pid, "tid": tid,
+                               "name": "thread_name",
+                               "args": {"name": f"{track[:-1] if track.endswith('s') else track} {tid}"}})
+            if ev[0] == "X":
+                _, t0, t1, _, _, name = ev
+                events.append({"ph": "X", "pid": pid, "tid": tid,
+                               "ts": us(t0), "dur": us(t1 - t0),
+                               "name": name, "cat": track})
+            else:
+                _, t, _, _, name = ev
+                events.append({"ph": "i", "pid": pid, "tid": tid,
+                               "ts": us(t), "name": name, "cat": track,
+                               "s": "t"})
+        return {"traceEvents": events,
+                "displayTimeUnit": "ms",
+                "otherData": {"clock": "virtual"}}
+
+    def export_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_perfetto(), f, indent=1)
+
+    def export_metrics(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(json.dumps(self.snapshot(), sort_keys=True, indent=1)
+                    + "\n")
+
+    # --- subsystem wiring ----------------------------------------------------
+
+    def attach_engine(self, engine) -> None:
+        """Point an engine's hot-path counters here and register its
+        subsystem stats (page pool, spec acceptance, kernel dispatch) as
+        snapshot-time providers.  Schedulers call this; batch users
+        (examples, benchmarks) can call it directly."""
+        engine.telemetry = self
+        if getattr(engine, "paged", False):
+            self.add_provider("pool", _pool_provider(engine))
+        if getattr(engine, "spec", None) is not None \
+                or getattr(engine, "spec_stats", None) is not None:
+            self.add_provider("spec", _spec_provider(engine))
+        self.attach_kernel_counters()
+
+    def attach_kernel_counters(self) -> None:
+        """Register the kernels-layer counters (trace-time matmul routes,
+        autotune cache hits, platform fallback routes) as a provider.
+        Those counters are process-global (kernels/ must not import
+        serving/), so the provider reports *deltas* from attach time —
+        comparable across fresh-engine replays; see the module-docstring
+        caveat on the persistent autotune memory cache.  Idempotent per
+        registry (attaching several engines shares one baseline)."""
+        if self._kernels_attached:
+            return
+        self._kernels_attached = True
+        from repro.kernels import autotune, dispatch, ops
+
+        base = _kernel_counts(autotune, dispatch, ops)
+
+        def prov():
+            cur = _kernel_counts(autotune, dispatch, ops)
+            out = {}
+            for k, v in cur.items():
+                d = v - base.get(k, 0)
+                # tuning.* keys are a fixed vocabulary — always present so
+                # the snapshot schema is stable; route keys appear on use
+                if d or k.startswith("tuning."):
+                    out[k] = d
+            return out
+
+        self.add_provider("kernels", prov)
+
+    # --- human summary -------------------------------------------------------
+
+    def summary(self) -> str:
+        """Compact end-of-run lines (what examples print instead of
+        hand-rolled per-subsystem reports)."""
+        s = self.snapshot()
+        c = s.get("counters", {})
+        g = lambda k: c.get(k, 0)                        # noqa: E731
+        lines = []
+        if g("sched.submitted"):                 # batch users have no scheduler
+            lines.append(f"[telemetry] requests: {g('sched.admissions')} "
+                         f"admitted, {g('sched.preemptions')} preempted "
+                         f"({g('sched.pages_swapped_out')} pages out / "
+                         f"{g('sched.pages_swapped_in')} in), "
+                         f"{g('sched.finished')} finished")
+            slo = g("sched.slo_hits") + g("sched.slo_misses")
+            if slo:
+                lines[-1] += f"; SLO {g('sched.slo_hits')}/{slo} met"
+        if g("engine.steps"):
+            lines.append(f"[telemetry] engine: {g('engine.steps')} decode "
+                         f"rounds, {g('engine.tokens')} tokens, "
+                         f"{g('engine.stops_finished')} finished / "
+                         f"{g('engine.stops_quantum')} quantum-bounded "
+                         f"slot-rounds, {g('engine.admit_blocked')} blocked "
+                         "admissions")
+        pool = s.get("pool")
+        if pool:
+            lines.append(f"[telemetry] pool: prefix hit rate "
+                         f"{100 * pool['hit_rate']:.0f}% "
+                         f"({pool['hit_pages']} hit / {pool['miss_pages']} "
+                         f"miss), peak {pool['peak_pages_in_use']} pages / "
+                         f"refcount high-water {pool['peak_page_refs']}, "
+                         f"{pool['cow_copies']} CoW, "
+                         f"{pool['evictions']} evictions, swap "
+                         f"{pool['swapped_out_pages']} out / "
+                         f"{pool['swapped_in_pages']} in")
+        spec = s.get("spec")
+        if spec and spec.get("proposed"):
+            lines.append(f"[telemetry] spec: acceptance "
+                         f"{100 * spec['acceptance_rate']:.0f}% "
+                         f"({spec['accepted']}/{spec['proposed']} drafted), "
+                         f"{spec['tokens_per_round']:.1f} tokens/round over "
+                         f"{spec['rounds']} rounds")
+        kern = s.get("kernels")
+        if kern and any(not k.startswith("tuning.") for k in kern):
+            routes = ", ".join(f"{k}={v}" for k, v in sorted(kern.items())
+                               if not k.startswith("tuning."))
+            lines.append(f"[telemetry] kernels: {routes}")
+        return "\n".join(lines) if lines else "[telemetry] nothing recorded"
+
+
+def _pool_provider(engine):
+    def prov():
+        st = engine.pool.stats
+        return {"hit_pages": st.hit_pages, "miss_pages": st.miss_pages,
+                "hit_rate": st.hit_rate, "cow_copies": st.cow_copies,
+                "evictions": st.evictions,
+                "peak_pages_in_use": st.peak_pages_in_use,
+                "peak_page_refs": st.peak_page_refs,
+                "truncated_pages": st.truncated_pages,
+                "swapped_out_pages": st.swapped_out_pages,
+                "swapped_in_pages": st.swapped_in_pages,
+                "pages_in_use": engine.pool.pages_in_use(),
+                "pressure": engine.pool.pressure()}
+    return prov
+
+
+def _spec_provider(engine):
+    def prov():
+        ss = engine.spec_stats
+        return {"rounds": ss.rounds, "proposed": ss.proposed,
+                "accepted": ss.accepted, "emitted": ss.emitted,
+                "acceptance_rate": ss.acceptance_rate,
+                "tokens_per_round": ss.tokens_per_round}
+    return prov
+
+
+def _kernel_counts(autotune, dispatch, ops) -> dict:
+    out = {}
+    for k, v in dispatch.matmul_call_counts().items():
+        out[f"matmul.{k}"] = v
+    for k, v in autotune.tuning_counts().items():
+        out[f"tuning.{k}"] = v
+    for k, v in ops.route_counts().items():
+        out[f"route.{k}"] = v
+    return out
+
+
+class _NullTelemetry:
+    """The disabled default: every method is a no-op, ``enabled`` is
+    False so hot paths skip their aggregation work entirely.  A single
+    shared instance — never mutated, safe to hang on every engine."""
+
+    enabled = False
+
+    def bind_clock(self, clock):
+        pass
+
+    def count(self, name, n=1):
+        pass
+
+    def gauge(self, name, value):
+        pass
+
+    def observe(self, name, value, edges=None):
+        pass
+
+    def add_provider(self, prefix, fn):
+        pass
+
+    def span(self, track, tid, name, t0, t1):
+        pass
+
+    def open_span(self, track, tid, name):
+        pass
+
+    def close_span(self, track, tid, name):
+        pass
+
+    def instant(self, track, tid, name):
+        pass
+
+    def attach_engine(self, engine):
+        pass
+
+    def attach_kernel_counters(self):
+        pass
+
+    def snapshot(self):
+        return {}
+
+    def event_log(self):
+        return []
+
+    def summary(self):
+        return "[telemetry] disabled"
+
+
+NULL_TELEMETRY = _NullTelemetry()

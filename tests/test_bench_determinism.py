@@ -20,8 +20,10 @@ import sys
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
 
-# wall-clock-derived fields, stripped before comparison
-_TIMING_KEYS = {"speedup", "wall_s", "ms_per_request", "seed_speedup_at_8"}
+# wall-clock-derived fields, stripped before comparison ("overhead_pct"
+# is the telemetry overhead gate's measured timing ratio)
+_TIMING_KEYS = {"speedup", "wall_s", "ms_per_request", "seed_speedup_at_8",
+                "overhead_pct"}
 
 
 def _strip(obj):

@@ -1,0 +1,255 @@
+"""Deterministic-telemetry suite (DESIGN.md §13, ISSUE 7).
+
+The telemetry contract, locked down four ways:
+
+* **Byte-identity** — two fresh engine+scheduler replays of the seeded
+  contended trace produce byte-identical metric snapshots, event logs,
+  and Perfetto exports.  Every number derives from the virtual clock and
+  deterministic allocator/tuner state; nothing reads the wall (the rule
+  itself is pinned by test_scheduler_sim.test_no_wall_clock_in_serving,
+  which scans serving/telemetry.py too).
+* **Golden snapshot** — the contended reference replay's snapshot +
+  event log join the golden-decode family (tests/golden_telemetry.json,
+  regenerate with GOLDEN_UPDATE=1).  The snapshot is token-VALUE
+  independent (counts derive from the trace's max_new bounds and
+  allocator decisions), so the golden is machine-portable; only the
+  platform-routed ``kernels`` section is excluded (xla vs pallas route
+  names differ by platform — the byte-identity test above still covers
+  it).
+* **Cross-checks** — registry counters must agree with the independently
+  computed ``ServerReport`` (preemptions, swap pages, token counts).
+* **Units** — counter/gauge/histogram semantics, canonical rounding, the
+  disabled null object, and the Perfetto event structure.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+import repro.configs as C
+from repro.models.model_zoo import build
+from repro.serving import ServeEngine, Server
+from repro.serving.server import CONTENDED_ENGINE_KW, contended_trace
+from repro.serving.telemetry import NULL_TELEMETRY, TRACKS, Telemetry
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden_telemetry.json")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _instrumented_replay(model, params, trace):
+    """One fresh engine+scheduler drain of ``trace`` with telemetry on.
+    Snapshots are taken HERE, immediately after the drain: the kernels
+    provider reports deltas from attach time, so deferring the snapshot
+    past another engine's tracing would fold that engine's counts in."""
+    eng = ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+    tel = Telemetry()
+    srv = Server(eng, telemetry=tel)
+    rep = srv.replay(trace)
+    return {"snapshot": tel.snapshot_json(),
+            "events": tel.event_log_json(),
+            "perfetto": json.dumps(tel.to_perfetto(), sort_keys=True),
+            "tel": tel, "rep": rep, "sched": srv.sched}
+
+
+# --- byte-identical replay ----------------------------------------------------
+
+def test_replay_telemetry_byte_identical(tiny):
+    """The acceptance criterion: the seeded contended trace replayed
+    through two fresh engine+scheduler+registry stacks produces
+    byte-identical snapshots, event logs, and Perfetto traces."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r1 = _instrumented_replay(model, params, trace)
+    r2 = _instrumented_replay(model, params, trace)
+    assert r1["rep"].preemptions >= 1, "trace is not contended — weak test"
+    assert r1["snapshot"].encode() == r2["snapshot"].encode()
+    assert r1["events"].encode() == r2["events"].encode()
+    assert r1["perfetto"].encode() == r2["perfetto"].encode()
+
+
+def test_telemetry_does_not_change_decisions(tiny):
+    """Observability must be write-only: the instrumented replay's event
+    log (admissions, preemptions, resumes, finishes, timestamps) equals
+    the uninstrumented one's."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    eng = ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+    srv = Server(eng)                      # telemetry disabled
+    srv.replay(trace)
+    assert srv.sched.events == r["sched"].events
+
+
+# --- golden snapshot ----------------------------------------------------------
+
+def test_golden_telemetry_snapshot(tiny):
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    snap = json.loads(r["snapshot"])
+    snap.pop("kernels", None)              # platform-routed (xla vs pallas)
+    got = {"snapshot": snap, "events": json.loads(r["events"])}
+    if os.environ.get("GOLDEN_UPDATE"):
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        pytest.skip("golden file regenerated — review and commit the diff")
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert got["snapshot"] == want["snapshot"], \
+        "telemetry snapshot drifted from the golden contended replay"
+    assert got["events"] == want["events"], \
+        "telemetry event log drifted from the golden contended replay"
+
+
+# --- registry vs report cross-checks ------------------------------------------
+
+def test_counters_match_report(tiny):
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    rep, c = r["rep"], json.loads(r["snapshot"])["counters"]
+    assert c["sched.submitted"] == c["sched.arrivals"] == len(trace)
+    assert c["sched.finished"] == rep.n_requests
+    assert c["sched.preemptions"] == rep.preemptions
+    assert c["sched.pages_swapped_out"] == rep.pages_swapped_out
+    assert c["sched.pages_swapped_in"] == rep.pages_swapped_in
+    assert c["sched.preemptions"] == c["sched.resumes"], \
+        "every preempted request must resume on a drained trace"
+    assert c["sched.swap_bytes_out"] == c["sched.swap_bytes_in"] > 0
+    # every token is either the admission's prefill sample or a decode-
+    # round emission; the registry splits them, the report sums them
+    assert c["engine.tokens"] + c["sched.admissions"] == rep.n_tokens
+    pool = json.loads(r["snapshot"])["pool"]
+    # the pool releases whole reservations; the scheduler moves only the
+    # data pages actually written — the canonical-naming distinction
+    assert pool["swapped_out_pages"] >= c["sched.pages_swapped_out"]
+    assert pool["peak_page_refs"] >= 1
+
+
+# --- Perfetto export ----------------------------------------------------------
+
+def test_perfetto_structure(tiny):
+    """The exported trace must be loadable Chrome-trace JSON with a full
+    lifecycle per request: thread metadata, X spans on the requests
+    track, instants for every scheduler decision."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    doc = json.loads(r["perfetto"])
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["clock"] == "virtual"
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert procs == set(TRACKS)
+    req_pid = TRACKS["requests"]
+    for rid in range(len(trace)):
+        named = {e["name"] for e in evs
+                 if e.get("pid") == req_pid and e.get("tid") == rid}
+        assert {"queued", "running", "admit", "finish"} <= named, \
+            f"request {rid} is missing lifecycle events: {named}"
+    for e in evs:
+        if e["ph"] == "X":
+            assert isinstance(e["ts"], int) and isinstance(e["dur"], int)
+            assert e["dur"] >= 0
+    # a preempted request shows the full detour: swapped span + resume
+    pre = [e["tid"] for e in evs if e.get("pid") == req_pid
+           and e["name"] == "preempt"]
+    assert pre, "contended trace exported no preempt instants"
+    names = {e["name"] for e in evs
+             if e.get("pid") == req_pid and e.get("tid") == pre[0]}
+    assert {"swapped", "resume"} <= names
+    # slot-track spans exist for prefill and decode work
+    slot_names = {e["name"] for e in evs
+                  if e.get("pid") == TRACKS["slots"] and e["ph"] == "X"}
+    assert {"prefill", "decode", "swap_out", "swap_in"} <= slot_names
+
+
+def test_export_files_round_trip(tiny, tmp_path):
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    mpath, tpath = tmp_path / "m.json", tmp_path / "t.json"
+    r["tel"].export_metrics(str(mpath))
+    r["tel"].export_trace(str(tpath))
+    with open(mpath) as f:
+        assert json.load(f) == json.loads(r["snapshot"])
+    with open(tpath) as f:
+        assert json.load(f) == json.loads(r["perfetto"])
+
+
+# --- registry units -----------------------------------------------------------
+
+def test_registry_units():
+    tel = Telemetry()
+    tel.count("a")
+    tel.count("a", 2)
+    tel.gauge("g", 0.1 + 0.2)              # canonicalized to 9 decimals
+    for v in (0, 1, 5, 200):
+        tel.observe("h", v)
+    snap = tel.snapshot()
+    assert snap["counters"]["a"] == 3
+    assert snap["gauges"]["g"] == round(0.1 + 0.2, 9)
+    h = snap["histograms"]["h"]
+    assert h["count"] == 4 and h["min"] == 0 and h["max"] == 200
+    assert sum(h["counts"]) == 4
+    assert h["counts"][-1] == 1            # 200 overflows the last edge
+    # canonical JSON: sorted keys, stable across dict insertion order
+    tel2 = Telemetry()
+    tel2.gauge("g", 0.1 + 0.2)
+    for v in (0, 1, 5, 200):
+        tel2.observe("h", v)
+    tel2.count("a", 3)
+    assert tel.snapshot_json() == tel2.snapshot_json()
+
+
+def test_providers_merge_under_prefix():
+    tel = Telemetry()
+    tel.add_provider("pool", lambda: {"x": 1})
+    tel.add_provider("pool", lambda: {"y": 2.5})
+    snap = tel.snapshot()
+    assert snap["pool"] == {"x": 1, "y": 2.5}
+
+
+def test_null_telemetry_is_inert():
+    n = NULL_TELEMETRY
+    assert n.enabled is False
+    n.count("a")
+    n.gauge("g", 1)
+    n.observe("h", 1)
+    n.instant("requests", 0, "x")
+    n.open_span("requests", 0, "x")
+    n.close_span("requests", 0, "x")
+    n.span("slots", 0, "x", 0.0, 1.0)
+    n.bind_clock(None)
+    n.attach_kernel_counters()
+    assert n.snapshot() == {}
+    assert n.event_log() == []
+
+
+def test_span_timestamps_use_injected_clock():
+    class FakeClock:
+        t = 2.0
+
+        def now(self):
+            return self.t
+
+    tel = Telemetry()
+    tel.bind_clock(FakeClock())
+    tel.open_span("requests", 7, "queued")
+    tel.close_span("requests", 7, "queued")
+    tel.instant("sched", 0, "tick")
+    log = tel.event_log()
+    assert log[0] == {"ph": "X", "t0": 2.0, "t1": 2.0, "track": "requests",
+                      "tid": 7, "name": "queued"}
+    assert log[1] == {"ph": "I", "t": 2.0, "track": "sched", "tid": 0,
+                      "name": "tick"}

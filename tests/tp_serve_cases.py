@@ -84,7 +84,7 @@ def sched_trace_case(tp: int = 1) -> dict:
             "streams": {str(h.rid): list(h.tokens)
                         for h in srv.sched.handles.values()},
             "preemptions": rep.preemptions,
-            "pages_swapped": rep.pages_swapped,
+            "pages_swapped_out": rep.pages_swapped_out,
             "admission_order": rep.admission_order}
 
 
