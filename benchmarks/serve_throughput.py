@@ -262,6 +262,85 @@ def telemetry_overhead(model, params, *, seed=0, reps=3):
             "overhead_pct": (t_off / t_on - 1.0) * 100.0}
 
 
+def probe_overhead(model, params, *, seed=0, reps=3):
+    """The probes-ON overhead gate (<2% tok/s, DESIGN.md §14): drain the
+    same contended trace through warm probes-off vs probes-on engines.
+    The instrumented forward carries a handful of (L,) f32 counters
+    through the decode while_loop; min-of-reps timing with two
+    re-measure rounds absorbs scheduler jitter, mirroring the telemetry
+    gate above."""
+    from repro.serving.server import (CONTENDED_ENGINE_KW, Server,
+                                      contended_trace)
+
+    trace = contended_trace(seed + 1, model.cfg.vocab)
+    off = ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+    on = ServeEngine(model, params, probes=True, **CONTENDED_ENGINE_KW)
+
+    def drain(eng):
+        return Server(eng).replay(trace).n_tokens
+
+    n_tok = drain(off)                       # warm both jit caches
+    drain(on)
+
+    def best(eng):
+        t = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            drain(eng)
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    t_off, t_on = best(off), best(on)
+    for _ in range(2):                       # absorb scheduler jitter
+        if t_on <= 1.02 * t_off:
+            break
+        t_off = min(t_off, best(off))
+        t_on = min(t_on, best(on))
+    return {"n_tokens": n_tok,
+            "probes_off_tok_s": n_tok / t_off,
+            "probes_on_tok_s": n_tok / t_on,
+            "overhead_pct": (t_on / t_off - 1.0) * 100.0}
+
+
+_GOLDEN_NUMERICS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "tests", "golden_numerics.json")
+_GOLDEN_NUMERICS_CFG = ("qwen3-1.7b", 2)     # (arch, layers) the golden blesses
+
+
+def numerics_sentinels(model, params, arch, layers):
+    """Re-measure the golden probe scenarios and check them against the
+    committed bounds (tests/golden_numerics.json — blessed by
+    tests/test_probes.py with GOLDEN_UPDATE=1).  Returns
+    (numerics-by-scenario, failure strings).  Skipped (None, []) when
+    the bench model differs from the golden config — counters only
+    compare on identical weights."""
+    from repro.serving import probes as nprobes
+
+    if (arch, layers) != _GOLDEN_NUMERICS_CFG:
+        print(f"[smoke] numerics sentinels skipped: golden is blessed for "
+              f"{_GOLDEN_NUMERICS_CFG}, bench ran ({arch}, {layers})")
+        return None, []
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, state = cluster_params(params, wq, init_state(wq), 200,
+                               jax.random.PRNGKey(1))
+    cparams = to_codebook_params(pq, wq, state, min_size=256)
+    nums = nprobes.run_golden_scenarios(model, params, cparams)
+    with open(_GOLDEN_NUMERICS) as f:
+        golden = json.load(f)
+    fails = []
+    for name, num in nums.items():
+        for msg in nprobes.sentinel_check(num, golden.get(name)):
+            fails.append(f"numerics[{name}]: {msg}")
+    worst_hr = min(min(n["headroom_bits"]) for n in nums.values())
+    worst_sat = max(max(n["sat_rate"]) for n in nums.values())
+    worst_kv = max(max(n["kv_err_max"]) for n in nums.values())
+    print(f"[smoke] numerics sentinels over {len(nums)} scenarios: "
+          f"headroom min {worst_hr:.1f} bits, sat rate max "
+          f"{100 * worst_sat:.2f}%, kv err max {worst_kv:.4f} "
+          f"({'FAIL' if fails else 'PASS'})")
+    return nums, fails
+
+
 _TP_SENTINEL = "TP_BENCH_RESULT "
 
 
@@ -412,7 +491,7 @@ def main():
         sys.exit(run_tp(args))
     if args.smoke:
         sys.exit(smoke(model, cfg, params, rng, args.json_out,
-                       seed=args.seed))
+                       seed=args.seed, arch=args.arch))
 
     wq = WeightQuantConfig(num_weights=256, method="kmeans")
     pq, state = cluster_params(params, wq, init_state(wq), 1000,
@@ -518,7 +597,8 @@ def main():
         print(f"[telemetry] metrics -> {mpath}, Perfetto trace -> {tpath}")
 
 
-def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
+def smoke(model, cfg, params, rng, json_out="", seed=0,
+          arch="qwen3-1.7b") -> int:
     """CI gate for the paged + speculative paths; returns an exit code."""
     prompts = [list(map(int, rng.integers(0, cfg.vocab, n)))
                for n in (3, 7, 5, 9)]
@@ -614,17 +694,35 @@ def smoke(model, cfg, params, rng, json_out="", seed=0) -> int:
                      f"{over['overhead_pct']:.2f}% vs the instrumented run "
                      "(gate: < 2%)")
 
+    # --- numerics probes: overhead + drift sentinels (DESIGN.md §14) ---------
+    pover = probe_overhead(model, params, seed=seed)
+    print(f"[smoke] probes: off {pover['probes_off_tok_s']:.1f} vs on "
+          f"{pover['probes_on_tok_s']:.1f} tok/s — instrumented decode "
+          f"costs {pover['overhead_pct']:+.2f}% (need < 2%)")
+    if pover["overhead_pct"] >= 2.0:
+        fails.append(f"probes-on serving paid {pover['overhead_pct']:.2f}% "
+                     "vs probes-off (gate: < 2%)")
+    nums, nfails = numerics_sentinels(model, params, arch, cfg.n_layers)
+    fails.extend(nfails)
+
     if json_out:
         write_bench_json(json_out, {
             "mode": "smoke",
             "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
                       "reduction_x": ratio, "prefix_hit_rate": hit},
             "spec": spec, "server": server,
-            "telemetry_overhead": over, "fails": fails})
+            "telemetry_overhead": over, "probe_overhead": pover,
+            "fails": fails})
         mpath, tpath = _telemetry_paths(json_out)
         tel.export_metrics(mpath)
         tel.export_trace(tpath)
         print(f"[telemetry] metrics -> {mpath}, Perfetto trace -> {tpath}")
+        if nums is not None:
+            base = json_out[:-5] if json_out.endswith(".json") else json_out
+            npath = base + ".numerics.json"
+            with open(npath, "w") as f:
+                json.dump(nums, f, indent=1, sort_keys=True)
+            print(f"[numerics] scenario report -> {npath}")
 
     for f in fails:
         print(f"[smoke] FAIL: {f}")

@@ -9,6 +9,10 @@ The same compressed params are served three ways:
     lut       Pallas lut_matmul integer engine      (faithful §4: no
               multiplications in the contraction)
 
+each with in-graph numerics probes on (DESIGN.md §14) — a per-backend
+saturation / accumulator-headroom / KV-error table prints after the
+three runs, the runtime evidence that the discretized paths are healthy.
+
 then once more through the **paged KV cache** (DESIGN.md §8): requests
 share a common system prompt, so their full prompt pages are computed and
 stored once — the prefix-cache hit rate and the int8-page pool footprint
@@ -76,12 +80,14 @@ def main():
     tel = Telemetry()
     tel.attach_kernel_counters()
 
+    probe_rows = {}
     for backend in ("dense", "codebook", "lut"):
         max_new = args.lut_max_new if backend == "lut" else args.max_new
         engine = ServeEngine(model, cparams, max_len=64, backend=backend,
-                             max_batch=args.requests)
+                             max_batch=args.requests, probes=True)
         # warm with the shapes that will be timed (jit retraces on change)
         engine.generate(prompts, max_new=max_new)
+        engine.reset_probes()
         t0 = time.time()
         outs = engine.generate(prompts, max_new=max_new)
         dt = time.time() - t0
@@ -89,6 +95,22 @@ def main():
         print(f"[{backend:>8}] {n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s, "
               f"int8 KV cache, codebook weights)")
         print(f"           continuation: {outs[0][8:]}")
+        probe_rows[backend] = engine.numerics()
+
+    # --- numerics health (DESIGN.md §14) -------------------------------------
+    # the probes that rode the timed runs above: how hard each backend's
+    # discretization actually worked on this model — activations clipped
+    # to the level grid, int32 margin left in the lut contraction, and the
+    # error the int8 KV round-trip put on what attention reads back
+    print("[numerics] per-backend discretization health (worst layer):")
+    print(f"           {'backend':<9} {'sat rate':>9} {'acc headroom':>13} "
+          f"{'kv err max':>11} {'widx oob':>9}")
+    for be, num in probe_rows.items():
+        sat = max(num["sat_rate"] or [0.0])
+        hr = min(num["headroom_bits"] or [31.0])
+        kv = max(num["kv_err_max"] or [0.0])
+        print(f"           {be:<9} {100 * sat:>8.2f}% {hr:>8.1f} bits "
+              f"{kv:>11.4f} {num['widx_oob']:>9}")
 
     # --- paged KV cache + prefix reuse (DESIGN.md §8) ------------------------
     # N requests sharing one system prompt: its full pages are computed and

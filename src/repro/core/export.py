@@ -106,6 +106,7 @@ class MemoryReport:
     table_bytes: int        # A×W mult table + activation table
     kv_fp_bytes: int = 0      # serving state: dense float KV slab
     kv_packed_bytes: int = 0  # serving state: paged int8 cache in use
+    lut_table_bytes: int = 0  # actual attached lut_table leaves (if any)
 
     @property
     def savings_vs_fp32(self) -> float:
@@ -162,17 +163,32 @@ def memory_report(index_tree: PyTree, n_weights: int, n_levels: int,
     fold serving state into the claim: a deployed LM ships its KV cache
     alongside its weights, so the "less than one third" comparison is
     (fp32 weights + float slab) vs (packed indices + paged int8 cache).
+
+    The walk is path-aware: ``lut_table`` leaves (the precomputed §4
+    A×W tables ``dispatch.attach_lut_tables`` hangs next to each routed
+    index dict) are int32 but are *tables*, not per-weight indices —
+    they are counted by their actual bytes into the table accounting
+    instead of inflating ``n_params``/entropy.  Without attached tables
+    the analytic (|A|+1)×(|W|+1) mult-table size is used as before.
     """
-    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(index_tree)
-              if np.issubdtype(np.asarray(x).dtype, np.integer)]
-    flat = (np.concatenate([x.reshape(-1) for x in leaves])
-            if leaves else np.zeros(0, np.int64))
+    idx_leaves, tables = [], []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(index_tree):
+        a = np.asarray(leaf)
+        if any(getattr(k, "key", getattr(k, "name", None)) == "lut_table"
+               for k in path):
+            tables.append(a)
+        elif np.issubdtype(a.dtype, np.integer):
+            idx_leaves.append(a)
+    flat = (np.concatenate([x.reshape(-1) for x in idx_leaves])
+            if idx_leaves else np.zeros(0, np.int64))
     n = int(flat.size)
     bits = bits_per_index(n_weights)
-    # mult table (|A|+1)×(|W|+1) ints + activation table + f32 codebook
+    lut_table_bytes = sum(int(a.nbytes) for a in tables)
+    # mult table: actual attached lut_table leaves when present, else the
+    # analytic (|A|+1)×(|W|+1) ints; + activation table + f32 codebook
+    mult_bytes = lut_table_bytes or (n_levels + 1) * (n_weights + 1) * acc_bytes
     t_entries = table_entries or 4 * n_levels
-    table_bytes = ((n_levels + 1) * (n_weights + 1) * acc_bytes
-                   + t_entries * 4 + n_weights * 4)
+    table_bytes = mult_bytes + t_entries * 4 + n_weights * 4
     ent = entropy_bits(flat, n_weights) if n else 0.0
     return MemoryReport(
         n_params=n, n_weights=n_weights, n_levels=n_levels,
@@ -183,4 +199,5 @@ def memory_report(index_tree: PyTree, n_weights: int, n_levels: int,
         entropy_bytes=int(math.ceil(n * ent / 8)) + table_bytes,
         table_bytes=table_bytes,
         kv_fp_bytes=kv_fp_bytes,
-        kv_packed_bytes=kv_packed_bytes)
+        kv_packed_bytes=kv_packed_bytes,
+        lut_table_bytes=lut_table_bytes)

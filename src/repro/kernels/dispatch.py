@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import probes
+
 __all__ = ["BACKENDS", "LutSpec", "BackendSpec", "make_lut_spec",
            "use_backend", "matmul_backend", "matmul_mesh", "backend_matmul",
            "bind_backend", "build_lut_table", "attach_lut_tables",
@@ -300,6 +302,9 @@ def backend_matmul(x, w_idx, codebook, kind: str | None = None, table=None):
     else:
         _count_route("local")
         y = _local_matmul(x2, w_idx, codebook, table)
+    # Numerics taps sit here, on the full (pre-shard_map) activations and
+    # the decoded output — a no-op unless a probes.layer frame is open.
+    probes.tap_matmul(x2, y, _STATE.backend, _STATE.lut_spec)
     return y.reshape(*lead, -1).astype(x.dtype)
 
 

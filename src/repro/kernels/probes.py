@@ -1,0 +1,210 @@
+"""In-graph numerics probes: the functional core (DESIGN.md §14).
+
+The paper's claim is that discretization loses nothing — this module is
+how the serving stack *measures* that at runtime instead of asserting it.
+Every silent ``clip`` in the kernels (activation snapping to the §4 level
+grid, int8 KV rounding, page-table canonicalization) gets a counter, and
+the counters ride the jitted forward as ordinary fixed-shape arrays:
+
+* **State** is a flat dict of (L,)-per-layer and scalar float32 counters
+  (``init_state``).  It threads through ``lax.scan``/``lax.while_loop``
+  carries like any other cache plane — no host sync, no ``io_callback``.
+  An *empty* dict is the off state: it contributes zero pytree leaves, so
+  the traced program is bit-identical to an uninstrumented one.
+* **Recording** is trace-time ambient: a scan body opens a collector
+  frame (``layer(state, l)``), the tap helpers called from arbitrarily
+  deep code (``kernels.dispatch``, ``models.attention.quantize_kv``,
+  ``models.layers.ffn_act``) append their values to the innermost frame,
+  and the frame merges them into the carried state at layer ``l`` on
+  exit.  With no frame open every tap is a no-arg early return — XLA
+  never sees the instrumentation.
+* **Nested-trace guard**: a frame remembers the JAX trace it was opened
+  under and taps fired from a *different* trace (an inner ``lax.scan``
+  such as flash-attention's KV streaming, a ``shard_map`` body such as
+  the MoE dispatch or the TP attention paths) silently no-op — recording
+  across trace boundaries would leak tracers.  Shard-mapped sites are
+  instead covered from outside the ``shard_map`` (see
+  ``dispatch.backend_matmul``) or documented as uncovered.
+
+Counter semantics (all float32; sums are exact below 2^24 events — the
+precision caveat of long-horizon totals is documented in DESIGN.md §14):
+
+    act_sat / act_total  (L,)  elements outside the activation grid /
+                               elements seen (lut a_min..a_max snapping +
+                               the relu6 act-quant rails)
+    acc_max              (L,)  high-water max |int32 accumulator| of the
+                               lut contraction, derived from the decoded
+                               output (|y|·2^s/Δa — exact to f32)
+    kv_err_max/_sum/_cnt (L,)  int8 KV round-trip |dequant − orig|
+    matmul_calls         (L,)  routed backend_matmul sites traced
+    page_oob             ()    page-table ids outside [0, n_pages)
+    tokens               ()    token positions processed
+
+This module must stay importable from ``models/`` and ``kernels/`` —
+it depends on jax only, never on ``serving/`` (the serving-side summary,
+static index audit, and drift sentinels live in ``serving.probes``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_state", "layer", "bump", "active", "record",
+           "tap_matmul", "tap_kv", "tap_act", "PER_LAYER", "MAXES",
+           "SCALARS"]
+
+PER_LAYER = ("act_sat", "act_total", "acc_max", "kv_err_max", "kv_err_sum",
+             "kv_err_cnt", "matmul_calls")
+MAXES = ("acc_max", "kv_err_max")
+SCALARS = ("page_oob", "tokens")
+
+
+def init_state(n_layers: int) -> dict:
+    """Fresh all-zero probe state: (L,) per-layer counters + scalars.
+    Each key gets its OWN buffer — the state is threaded through donating
+    jits, and aliased leaves would be donated twice."""
+    st = {k: jnp.zeros((n_layers,), jnp.float32) for k in PER_LAYER}
+    st.update({k: jnp.zeros((), jnp.float32) for k in SCALARS})
+    return st
+
+
+# --- ambient collector frames ------------------------------------------------
+
+class _Frame:
+    __slots__ = ("token", "recs")
+
+    def __init__(self, token):
+        self.token = token
+        self.recs: dict[str, list] = {}
+
+
+_FRAMES: list[_Frame] = []
+
+
+def _cur_trace():
+    """Identity of the innermost JAX trace being built right now.  Used
+    to fence recording to the frame's own trace; on a JAX without the
+    API the guard degrades to always-match (taps under nested traces
+    would then raise a leak error instead of silently skipping)."""
+    try:
+        return jax.core.trace_ctx.trace
+    except AttributeError:      # pragma: no cover - jax version drift
+        return None
+
+
+def active() -> bool:
+    """True when a collector frame is open for the *current* trace —
+    the cheap gate every tap checks before computing anything."""
+    return bool(_FRAMES) and _FRAMES[-1].token is _cur_trace()
+
+
+def record(name: str, value) -> None:
+    """Append one value to the innermost frame (no-op when inactive)."""
+    if not active():
+        return
+    _FRAMES[-1].recs.setdefault(name, []).append(value)
+
+
+def _merge(state: dict, recs: dict, l) -> dict:
+    """Fold a frame's recordings into the carried state at layer ``l``."""
+    out = dict(state)
+    for name, vals in recs.items():
+        cur = out.get(name)
+        if cur is None or cur.ndim != 1:
+            continue
+        vs = [jnp.asarray(v, jnp.float32) for v in vals]
+        acc = vs[0]
+        if name in MAXES:
+            for v in vs[1:]:
+                acc = jnp.maximum(acc, v)
+            out[name] = cur.at[l].max(acc)
+        else:
+            for v in vs[1:]:
+                acc = acc + v
+            out[name] = cur.at[l].add(acc)
+    return out
+
+
+class _Box:
+    """Mutable result slot: ``with layer(ps, l) as pb: ...`` leaves the
+    merged state in ``pb.state`` after the block exits."""
+
+    __slots__ = ("state",)
+
+    def __init__(self, state):
+        self.state = state
+
+
+@contextlib.contextmanager
+def layer(state: dict, l):
+    """Collector frame for one scanned layer body.  ``state`` empty →
+    inert (no frame, no ops); otherwise taps fired under this frame are
+    merged into ``state`` at index ``l`` when the block exits."""
+    box = _Box(state)
+    if not state:
+        yield box
+        return
+    fr = _Frame(_cur_trace())
+    _FRAMES.append(fr)
+    try:
+        yield box
+    finally:
+        _FRAMES.pop()
+    box.state = _merge(state, fr.recs, l)
+
+
+def bump(state: dict, name: str, v) -> dict:
+    """Direct scalar-counter update (no frame needed) — for quantities
+    available at the top of a traced function (page tables, token
+    counts).  No-op on the empty state."""
+    if not state or name not in state:
+        return state
+    return {**state, name: state[name] + jnp.asarray(v, jnp.float32)}
+
+
+# --- tap helpers (call sites in dispatch / attention / layers) ---------------
+
+def tap_matmul(x2, y, backend: str, spec) -> None:
+    """One routed backend_matmul: call count, lut grid saturation on the
+    *full* (pre-shard_map) activations, and the int32 accumulator
+    high-water decoded from the output (|acc| = |y|·2^s/Δa — y is the
+    accumulator times a power-of-two-scaled constant, so the round-trip
+    is exact up to f32 resolution of the accumulator itself)."""
+    if not active():
+        return
+    record("matmul_calls", 1.0)
+    if backend == "lut" and spec is not None:
+        xf = x2.astype(jnp.float32)
+        record("act_sat", jnp.sum((xf < spec.a_min)
+                                  | (xf > spec.a_max)).astype(jnp.float32))
+        record("act_total", float(x2.size))
+        scale = (2.0 ** spec.s) / spec.da
+        record("acc_max",
+               jnp.round(jnp.max(jnp.abs(y.astype(jnp.float32))) * scale))
+
+
+def tap_kv(t, q, scale) -> None:
+    """int8 KV round-trip error at one quantize_kv call site: the error
+    the *reader* actually sees (dequantized through the stored bf16
+    scale), max + sum + count per layer."""
+    if not active():
+        return
+    deq = q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+    err = jnp.abs(deq - t.astype(jnp.float32))
+    record("kv_err_max", jnp.max(err))
+    record("kv_err_sum", jnp.sum(err))
+    record("kv_err_cnt", float(err.size))
+
+
+def tap_act(x, lo: float, hi: float) -> None:
+    """act_quant saturation: pre-activation elements outside the bounded
+    kind's output rails (relu6: [0, 6]) — the inputs the quantized
+    nonlinearity pins to an endpoint level."""
+    if not active():
+        return
+    xf = x.astype(jnp.float32)
+    record("act_sat", jnp.sum((xf < lo) | (xf > hi)).astype(jnp.float32))
+    record("act_total", float(x.size))

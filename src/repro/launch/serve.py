@@ -39,6 +39,14 @@ Knobs:
                                      TTFT/TPOT/SLO report prints after the
                                      drain.  The wall clock is only read
                                      HERE; serving/ itself is clockless.
+    --probes                         in-graph numerics probes (DESIGN.md
+                                     §14): per-layer activation-saturation,
+                                     int32-accumulator-headroom, and int8-KV
+                                     round-trip-error counters threaded
+                                     through the jitted decode; a summary
+                                     block prints after the run
+    --numerics-out PATH              write the full numerics summary JSON
+                                     there after the run (needs --probes)
     --traffic {poisson,replay}       synthetic seeded Poisson arrivals, or
                                      a JSON trace from --trace-file
     --rate R                         poisson arrivals per virtual second
@@ -65,6 +73,7 @@ CPU smoke runs:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -96,6 +105,23 @@ def _ensure_devices(n: int):
                      f"{len(jax.devices())} ({jax.default_backend()})")
 
 
+def report_numerics(engine, out_path=""):
+    """One-block probe summary (worst layer of each series) + optional
+    full JSON dump — shared by batch and --server modes."""
+    num = engine.numerics()
+    hr = min(num["headroom_bits"] or [31.0])
+    sat = max(num["sat_rate"] or [0.0])
+    kv = max(num["kv_err_max"] or [0.0])
+    print(f"[numerics] {num['backend']}: {num['tokens']:.0f} tokens probed, "
+          f"sat rate max {100 * sat:.2f}%, acc headroom min {hr:.1f} bits, "
+          f"kv err max {kv:.4f}, page_oob {num['page_oob']:.0f}, "
+          f"widx neg/oob {num['widx_neg']}/{num['widx_oob']}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(num, f, indent=1, sort_keys=True)
+        print(f"[numerics] report -> {out_path}")
+
+
 def run_server(args, engine, cfg):
     """--server mode: drain a traffic trace through the scheduler and
     report.  The ONLY wall-clock reads live here, outside serving/."""
@@ -116,7 +142,7 @@ def run_server(args, engine, cfg):
         raise SystemExit("--server got an empty trace (check --requests / "
                          "--trace-file)")
     tel = None
-    if args.metrics_out or args.trace_out:
+    if args.metrics_out or args.trace_out or args.probes:
         from repro.serving.telemetry import Telemetry
         tel = Telemetry()
     srv = Server(engine, quantum=args.quantum, preempt=args.preempt,
@@ -150,6 +176,8 @@ def run_server(args, engine, cfg):
             print(f"[telemetry] Perfetto trace -> {args.trace_out} "
                   "(open at https://ui.perfetto.dev)")
         print(tel.summary())
+    if args.probes:
+        report_numerics(engine, args.numerics_out)
     h = srv.sched.handles[0]
     print("sample:", h.prompt, "->", h.tokens)
 
@@ -209,6 +237,13 @@ def main():
                     help="--server only: write a Perfetto/Chrome "
                          "trace.json of request/slot lifecycle spans "
                          "(virtual-clock time) here after the drain")
+    ap.add_argument("--probes", action="store_true",
+                    help="in-graph numerics probes (DESIGN.md §14): "
+                         "saturation / accumulator-headroom / KV-error "
+                         "counters threaded through the jitted decode")
+    ap.add_argument("--numerics-out", default="",
+                    help="write the numerics summary JSON here after the "
+                         "run (needs --probes)")
     ap.add_argument("--seed", type=int, default=0,
                     help="traffic/workload PRNG seed")
     args = ap.parse_args()
@@ -227,6 +262,11 @@ def main():
     if (args.metrics_out or args.trace_out) and not args.server:
         ap.error("--metrics-out/--trace-out report the scheduler drain; "
                  "add --server")
+    if args.numerics_out and not args.probes:
+        ap.error("--numerics-out reports the probe counters; add --probes")
+    if args.probes and args.spec_draft != "none":
+        ap.error("numerics probes instrument the plain decode loops; drop "
+                 "--spec-draft for --probes")
 
     mesh = None
     if args.tp > 1:
@@ -288,7 +328,8 @@ def main():
                          paged=args.paged, page_size=args.page_size,
                          kv_dtype=args.kv_dtype,
                          prefix_cache=args.prefix_cache,
-                         top_k=args.top_k, top_p=args.top_p, spec=spec)
+                         top_k=args.top_k, top_p=args.top_p, spec=spec,
+                         probes=args.probes)
     if args.server:
         run_server(args, engine, cfg)
         return
@@ -304,6 +345,8 @@ def main():
         engine.pool.reset_stats()
     if spec is not None:
         engine.spec_stats.reset()
+    if args.probes:
+        engine.reset_probes()          # count only the timed run below
 
     t0 = time.time()
     if args.uniform:
@@ -334,6 +377,8 @@ def main():
               f"{ss.rounds} rounds, acceptance "
               f"{100 * ss.acceptance_rate:.0f}%, "
               f"{ss.tokens_per_round:.1f} tokens/round")
+    if args.probes:
+        report_numerics(engine, args.numerics_out)
     print("sample:", outs[0][:args.prompt_len], "->",
           outs[0][args.prompt_len:])
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import probes
 from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init
 
 __all__ = ["AttnConfig", "attn_init", "attn_apply", "init_kv_cache",
@@ -630,7 +631,12 @@ def quantize_kv(t):
     amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-6) / KV_QMAX
     q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -KV_QMAX, KV_QMAX)
-    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+    qi, sc = q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+    # Round-trip error probe against the *stored* (int8, bf16-scale) pair —
+    # inert unless a probes.layer frame is open in the current trace (the
+    # shard_map TP call sites are auto-fenced by the trace-token guard).
+    probes.tap_kv(t, qi, sc)
+    return qi, sc
 
 
 def dequantize_kv(q, scale):

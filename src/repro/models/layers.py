@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import ActQuantConfig, act_apply
-from repro.kernels import dispatch
+from repro.kernels import dispatch, probes
 
 __all__ = [
     "dense_init", "dense", "rms_norm_init", "rms_norm", "layer_norm_init",
@@ -138,6 +138,11 @@ def ffn_act(x, kind: str, levels: int):
             return jnp.tanh(x)
         raise ValueError(kind)
     bounded = {"silu": "relu6", "gelu": "relu6", "relu": "relu6"}.get(kind, kind)
+    if bounded == "relu6":
+        # Saturation probe: inputs outside the hard rails get pinned to an
+        # endpoint level by the quantized nonlinearity.  Only relu6 has true
+        # rail clipping (tanh/sigmoid saturate asymptotically, no clip).
+        probes.tap_act(x, 0.0, 6.0)
     return act_apply(ActQuantConfig(bounded, levels), x)
 
 

@@ -26,6 +26,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import probes
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import moe as M
@@ -524,28 +525,38 @@ def prefill_chunk(params, cfg, batch, cache, mesh=None):
     x = L.embed_lookup(params["embed"], tokens).astype(dt)
     acfg = attn_cfg(cfg)
 
-    def body(carry, p_l):
-        h, kc, vc, sc, l = carry
-        a, kc, vc, sc = A.attn_prefill_chunk(
-            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=pos,
-            page_table=page_table, write_pid=write_pid, past_len=start,
-            k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
-        h = h + a
-        if "moe" in p_l:
-            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
-                            moe_cfg(cfg), mesh)
-        else:
-            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
-                         cfg.act_kind, cfg.act_levels, mesh)
-        return (h + y, kc, vc, sc, l + 1), None
+    ps0 = cache.get("probes", {})
+    if ps0:
+        n_pages = cache["k"].shape[1]
+        ps0 = probes.bump(ps0, "page_oob", jnp.sum(
+            (page_table < 0) | (page_table >= n_pages)).astype(jnp.float32))
 
-    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+    def body(carry, p_l):
+        h, kc, vc, sc, l, ps = carry
+        with probes.layer(ps, l) as pb:
+            a, kc, vc, sc = A.attn_prefill_chunk(
+                p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=pos,
+                page_table=page_table, write_pid=write_pid, past_len=start,
+                k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
+            h = h + a
+            if "moe" in p_l:
+                y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                                moe_cfg(cfg), mesh)
+            else:
+                y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                             cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1, pb.state), None
+
+    (x, nk, nv, nsc, _, ps1), _ = jax.lax.scan(
         body, (x, cache["k"], cache["v"], _paged_scales(cache),
-               jnp.zeros((), jnp.int32)),
+               jnp.zeros((), jnp.int32), ps0),
         params["blocks"], unroll=_unroll(cfg))
     new_cache = {**cache, "k": nk, "v": nv}
     if nsc is not None:
         new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    if ps0:
+        new_cache["probes"] = probes.bump(ps1, "tokens",
+                                          length.astype(jnp.float32))
     x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     x_last = L.rms_norm(params["final_norm"], x_last)
     return _logits(params, cfg, x_last), new_cache
@@ -576,29 +587,38 @@ def _decode_step_paged(params, cfg, tokens, cache, mesh):
     x = L.embed_lookup(params["embed"], tokens).astype(dt)
     acfg = attn_cfg(cfg)
 
-    def body(carry, p_l):
-        h, kc, vc, sc, l = carry
-        a, kc, vc, sc = A.attn_decode_paged(
-            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg,
-            pos=pos[:, None].astype(jnp.int32), page_table=pt,
-            write_pid=write_pid, write_off=write_off, valid_len=vlen,
-            k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
-        h = h + a
-        if "moe" in p_l:
-            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
-                            moe_cfg(cfg), mesh)
-        else:
-            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
-                         cfg.act_kind, cfg.act_levels, mesh)
-        return (h + y, kc, vc, sc, l + 1), None
+    ps0 = cache.get("probes", {})
+    if ps0:
+        n_pages = cache["k"].shape[1]
+        ps0 = probes.bump(ps0, "page_oob", jnp.sum(
+            (pt < 0) | (pt >= n_pages)).astype(jnp.float32))
 
-    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+    def body(carry, p_l):
+        h, kc, vc, sc, l, ps = carry
+        with probes.layer(ps, l) as pb:
+            a, kc, vc, sc = A.attn_decode_paged(
+                p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg,
+                pos=pos[:, None].astype(jnp.int32), page_table=pt,
+                write_pid=write_pid, write_off=write_off, valid_len=vlen,
+                k_pool=kc, v_pool=vc, layer=l, scales=sc, mesh=mesh, dp=dp)
+            h = h + a
+            if "moe" in p_l:
+                y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                                moe_cfg(cfg), mesh)
+            else:
+                y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                             cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1, pb.state), None
+
+    (x, nk, nv, nsc, _, ps1), _ = jax.lax.scan(
         body, (x, cache["k"], cache["v"], _paged_scales(cache),
-               jnp.zeros((), jnp.int32)),
+               jnp.zeros((), jnp.int32), ps0),
         params["blocks"], unroll=_unroll(cfg))
     new_cache = {**cache, "k": nk, "v": nv, "pos": pos + 1}
     if nsc is not None:
         new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    if ps0:
+        new_cache["probes"] = probes.bump(ps1, "tokens", float(B))
     x = L.rms_norm(params["final_norm"], x)
     return _logits(params, cfg, x), new_cache
 
@@ -631,29 +651,38 @@ def _verify_step_paged(params, cfg, tokens, cache, mesh):
     x = L.embed_lookup(params["embed"], tokens).astype(dt)
     acfg = attn_cfg(cfg)
 
-    def body(carry, p_l):
-        h, kc, vc, sc, l = carry
-        a, kc, vc, sc = A.attn_verify_paged(
-            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
-            page_table=pt, write_pid=write_pid, write_off=write_off,
-            valid_len=vlen, k_pool=kc, v_pool=vc, layer=l, scales=sc,
-            mesh=mesh, dp=dp)
-        h = h + a
-        if "moe" in p_l:
-            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
-                            moe_cfg(cfg), mesh)
-        else:
-            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
-                         cfg.act_kind, cfg.act_levels, mesh)
-        return (h + y, kc, vc, sc, l + 1), None
+    ps0 = cache.get("probes", {})
+    if ps0:
+        n_pages = cache["k"].shape[1]
+        ps0 = probes.bump(ps0, "page_oob", jnp.sum(
+            (pt < 0) | (pt >= n_pages)).astype(jnp.float32))
 
-    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+    def body(carry, p_l):
+        h, kc, vc, sc, l, ps = carry
+        with probes.layer(ps, l) as pb:
+            a, kc, vc, sc = A.attn_verify_paged(
+                p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
+                page_table=pt, write_pid=write_pid, write_off=write_off,
+                valid_len=vlen, k_pool=kc, v_pool=vc, layer=l, scales=sc,
+                mesh=mesh, dp=dp)
+            h = h + a
+            if "moe" in p_l:
+                y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                                moe_cfg(cfg), mesh)
+            else:
+                y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                             cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1, pb.state), None
+
+    (x, nk, nv, nsc, _, ps1), _ = jax.lax.scan(
         body, (x, cache["k"], cache["v"], _paged_scales(cache),
-               jnp.zeros((), jnp.int32)),
+               jnp.zeros((), jnp.int32), ps0),
         params["blocks"], unroll=_unroll(cfg))
     new_cache = {**cache, "k": nk, "v": nv}
     if nsc is not None:
         new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    if ps0:
+        new_cache["probes"] = probes.bump(ps1, "tokens", float(B * K1))
     x = L.rms_norm(params["final_norm"], x)
     return _logits(params, cfg, x), new_cache
 
@@ -693,32 +722,38 @@ def verify_step(params, cfg, tokens, cache, mesh=None):
     acfg = attn_cfg(cfg)
     qkv = cfg.kv_quant
 
+    ps0 = cache.get("probes", {})
+
     def body(carry, p_l):
-        h, kc, vc, sc, l = carry
-        a, kc, vc, sc = A.attn_verify_cached(
-            p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
-            insert_at=ins, valid_len=vlen, k_all=kc, v_all=vc, layer=l,
-            scales=sc, mesh=mesh,
-            dp=dp_axes(mesh) if mesh is not None else None)
-        h = h + a
-        if "moe" in p_l:
-            y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
-                            moe_cfg(cfg), mesh)
-        else:
-            y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
-                         cfg.act_kind, cfg.act_levels, mesh)
-        return (h + y, kc, vc, sc, l + 1), None
+        h, kc, vc, sc, l, ps = carry
+        with probes.layer(ps, l) as pb:
+            a, kc, vc, sc = A.attn_verify_cached(
+                p_l["attn"], L.rms_norm(p_l["ln1"], h), acfg, pos=ppos,
+                insert_at=ins, valid_len=vlen, k_all=kc, v_all=vc, layer=l,
+                scales=sc, mesh=mesh,
+                dp=dp_axes(mesh) if mesh is not None else None)
+            h = h + a
+            if "moe" in p_l:
+                y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                                moe_cfg(cfg), mesh)
+            else:
+                y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                             cfg.act_kind, cfg.act_levels, mesh)
+        return (h + y, kc, vc, sc, l + 1, pb.state), None
 
     sc0 = ((cache["kv"]["k_scale"], cache["kv"]["v_scale"]) if qkv else None)
-    (x, nk, nv, nsc, _), _ = jax.lax.scan(
+    (x, nk, nv, nsc, _, ps1), _ = jax.lax.scan(
         body, (x, cache["kv"]["k"], cache["kv"]["v"], sc0,
-               jnp.zeros((), jnp.int32)),
+               jnp.zeros((), jnp.int32), ps0),
         params["blocks"], unroll=_unroll(cfg))
     new_kv = {"k": nk, "v": nv}
     if qkv:
         new_kv.update(k_scale=nsc[0], v_scale=nsc[1])
     x = L.rms_norm(params["final_norm"], x)
-    return _logits(params, cfg, x), {**cache, "kv": new_kv}
+    out_cache = {**cache, "kv": new_kv}
+    if ps0:
+        out_cache["probes"] = probes.bump(ps1, "tokens", float(B * K1))
+    return _logits(params, cfg, x), out_cache
 
 
 def decode_step(params, cfg, tokens, cache, mesh=None):
@@ -769,40 +804,45 @@ def decode_step(params, cfg, tokens, cache, mesh=None):
         acfg = attn_cfg(cfg)
 
         qkv = cfg.kv_quant
+        ps0 = cache.get("probes", {})
 
         def body(carry, p_l):
-            h, kc, vc, sc, l = carry
-            a, kc, vc, sc = A.attn_decode_cached(
-                p_l["attn"], norm(p_l["ln1"], h), acfg, pos=pos,
-                insert_at=ins, valid_len=vlen,
-                k_all=kc, v_all=vc, layer=l, scales=sc,
-                mesh=mesh, dp=dp_axes(mesh) if mesh is not None else None)
-            h = shard_act(h + a, mesh)
-            if cfg.family == "audio":
-                c, _ = A.attn_apply(p_l["xattn"], L.layer_norm(p_l["ln_x"], h),
-                                    attn_cfg(cfg, causal=False),
-                                    kv_override=memory)
-                h = shard_act(h + c, mesh)
-                y = L.mlp_block(p_l["mlp"], L.layer_norm(p_l["ln2"], h),
-                                cfg.act_kind, cfg.act_levels, mesh)
-            elif "moe" in p_l:
-                y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
-                                moe_cfg(cfg), mesh)
-            else:
-                y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
-                             cfg.act_kind, cfg.act_levels, mesh)
-            h = shard_act(h + y, mesh)
-            return (h, kc, vc, sc, l + 1), None
+            h, kc, vc, sc, l, ps = carry
+            with probes.layer(ps, l) as pb:
+                a, kc, vc, sc = A.attn_decode_cached(
+                    p_l["attn"], norm(p_l["ln1"], h), acfg, pos=pos,
+                    insert_at=ins, valid_len=vlen,
+                    k_all=kc, v_all=vc, layer=l, scales=sc,
+                    mesh=mesh, dp=dp_axes(mesh) if mesh is not None else None)
+                h = shard_act(h + a, mesh)
+                if cfg.family == "audio":
+                    c, _ = A.attn_apply(p_l["xattn"],
+                                        L.layer_norm(p_l["ln_x"], h),
+                                        attn_cfg(cfg, causal=False),
+                                        kv_override=memory)
+                    h = shard_act(h + c, mesh)
+                    y = L.mlp_block(p_l["mlp"], L.layer_norm(p_l["ln2"], h),
+                                    cfg.act_kind, cfg.act_levels, mesh)
+                elif "moe" in p_l:
+                    y = M.moe_apply(p_l["moe"], L.rms_norm(p_l["ln2"], h),
+                                    moe_cfg(cfg), mesh)
+                else:
+                    y = L.swiglu(p_l["mlp"], L.rms_norm(p_l["ln2"], h),
+                                 cfg.act_kind, cfg.act_levels, mesh)
+                h = shard_act(h + y, mesh)
+            return (h, kc, vc, sc, l + 1, pb.state), None
 
         sc0 = (cache["kv"]["k_scale"], cache["kv"]["v_scale"]) if qkv else None
-        (x, nk, nv, nsc, _), _ = jax.lax.scan(
+        (x, nk, nv, nsc, _, ps1), _ = jax.lax.scan(
             body, (x, cache["kv"]["k"], cache["kv"]["v"], sc0,
-                   jnp.zeros((), jnp.int32)),
+                   jnp.zeros((), jnp.int32), ps0),
             params["blocks"], unroll=_unroll(cfg))
         new_kv = {"k": nk, "v": nv}
         if qkv:
             new_kv.update(k_scale=nsc[0], v_scale=nsc[1])
         new_cache = {**cache, "kv": new_kv, "pos": pos_scalar + 1}
+        if ps0:
+            new_cache["probes"] = probes.bump(ps1, "tokens", float(B))
 
     elif cfg.family == "ssm_rwkv":
         def body(h, xs):
@@ -939,10 +979,25 @@ def prefill(params, cfg, batch, mesh=None):
                 return h, (kq, vq, ksc, vsc)
             return h, (kv["k"].astype(cdt), kv["v"].astype(cdt))
 
-        def body(h, p_l):
-            return blk(p_l, h, None)
-        x, planes = jax.lax.scan(body, x, params["blocks"],
-                                 unroll=_unroll(cfg))
+        ps0 = batch.get("probes") or {}
+        if ps0:
+            # Probe-instrumented body: same blk, carry extended with the
+            # counters + a layer index (the plain prefill carry is just x, so
+            # the off path below keeps its original, untouched trace).
+            def bodyp(carry, p_l):
+                h, ps, l = carry
+                with probes.layer(ps, l) as pb:
+                    h, plane = blk(p_l, h, None)
+                return (h, pb.state, l + 1), plane
+            (x, ps1, _), planes = jax.lax.scan(
+                bodyp, (x, ps0, jnp.zeros((), jnp.int32)),
+                params["blocks"], unroll=_unroll(cfg))
+        else:
+            def body(h, p_l):
+                return blk(p_l, h, None)
+            x, planes = jax.lax.scan(body, x, params["blocks"],
+                                     unroll=_unroll(cfg))
+            ps1 = {}
         if cfg.kv_quant:
             nk, nv, nks, nvs = planes
             new_kv = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
@@ -950,6 +1005,10 @@ def prefill(params, cfg, batch, mesh=None):
             nk, nv = planes
             new_kv = {"k": nk, "v": nv}
         new_cache = {"kv": new_kv, "pos": jnp.asarray(Sq, jnp.int32)}
+        if ps0:
+            n_tok = (jnp.sum(lengths).astype(jnp.float32)
+                     if lengths is not None else float(B * Sq))
+            new_cache["probes"] = probes.bump(ps1, "tokens", n_tok)
         if memory is not None:
             new_cache["memory"] = memory.astype(cdt)
 

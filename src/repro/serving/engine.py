@@ -80,6 +80,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels import dispatch
 from repro.models.model_zoo import Model
+from repro.serving import probes as nprobes
 from repro.serving.kvcache import PagePool
 from repro.serving.telemetry import NULL_TELEMETRY
 from repro.serving.spec import (SpecConfig, SpecStats, filter_logits,
@@ -237,6 +238,9 @@ class ServeEngine:
     spec: SpecConfig | None = None  # speculative decoding (DESIGN.md §9)
     telemetry: object = None       # serving.telemetry registry (§13); None
     #                                normalizes to the zero-cost null object
+    probes: bool = False           # in-graph numerics probes (§14): thread
+    #                                per-layer discretization-health counters
+    #                                through prefill + the decode while_loop
 
     def __post_init__(self):
         if self.telemetry is None:
@@ -325,6 +329,20 @@ class ServeEngine:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+        # --- numerics probes (DESIGN.md §14) ---------------------------------
+        self._ps = {}
+        self._probe_audit = {}
+        if self.probes:
+            if self.spec is not None:
+                raise NotImplementedError(
+                    "numerics probes instrument the plain decode loops; "
+                    "speculative serve() is not instrumented — build the "
+                    "engine with probes=False or spec=None")
+            self._ps = nprobes.init_state(cfg.n_layers)
+            # w_idx is immutable at runtime: audit the clip-canonicalized
+            # index ids once on the host instead of per decode step
+            self._probe_audit = nprobes.static_index_audit(self.params)
 
         # --- speculative decoding (DESIGN.md §9) -----------------------------
         self.spec_stats = SpecStats()
@@ -421,9 +439,44 @@ class ServeEngine:
 
     # --- jitted bodies -------------------------------------------------------
 
-    def _prefill_fn(self, params, tokens, lengths):
-        return self.model.prefill(params, {"tokens": tokens,
-                                           "lengths": lengths}, self.mesh)
+    def _prefill_fn(self, params, tokens, lengths, ps=None):
+        batch = {"tokens": tokens, "lengths": lengths}
+        if ps:
+            batch["probes"] = ps     # probe counters ride the batch pytree
+        return self.model.prefill(params, batch, self.mesh)
+
+    # --- numerics probes (DESIGN.md §14) -------------------------------------
+    #
+    # The engine owns ONE accumulated probe state (`self._ps`).  Every jitted
+    # call that should collect gets the state injected into its cache operand
+    # immediately before the call and harvested immediately after — no pool /
+    # slot cache ever *persists* a "probes" key, so swap blobs, prefix pages,
+    # and admission splices are untouched.  The decode loops donate their
+    # cache operand, hence the strict reassign-from-result discipline.
+
+    def _ps_inject(self, cache):
+        if self.probes:
+            cache = {**cache, "probes": self._ps}
+        return cache
+
+    def _ps_extract(self, cache):
+        if self.probes and "probes" in cache:
+            self._ps = cache.pop("probes")
+        return cache
+
+    def numerics(self) -> dict:
+        """Canonical numerics snapshot: per-layer saturation/headroom/KV
+        error + the static index audit (empty when probes are off).  This
+        is the telemetry 'numerics' provider."""
+        if not self.probes:
+            return {}
+        return nprobes.summarize(self._ps, audit=self._probe_audit,
+                                 backend=self.backend)
+
+    def reset_probes(self) -> None:
+        """Zero the accumulated counters (fresh measurement window)."""
+        if self.probes:
+            self._ps = nprobes.init_state(self.model.cfg.n_layers)
 
     def _sample(self, logits, key):
         """Greedy argmax, or temperature sampling through the top-k / top-p
@@ -743,14 +796,16 @@ class ServeEngine:
                                                        - len(adm.pids)),
                                      np.int32))
         logits = None
+        cache = self._ps_inject(pool.cache)
         for ci, c in enumerate(range(adm.compute_from, adm.n_chunks)):
             toks = np.zeros((1, page), np.int32)
             chunk = prompt[c * page:(c + 1) * page]
             toks[0, :len(chunk)] = chunk
-            logits, pool.cache = self._prefill_chunk(
-                self.params, pool.cache, jnp.asarray(toks), row,
+            logits, cache = self._prefill_chunk(
+                self.params, cache, jnp.asarray(toks), row,
                 np.int32(c * page), np.int32(len(chunk)),
                 np.int32(adm.write_pids[ci]))
+        pool.cache = self._ps_extract(cache)
         return logits
 
     def _paged_admit(self, prompt, stop, key):
@@ -820,12 +875,14 @@ class ServeEngine:
                 raise RuntimeError(
                     "paged admission deadlock: no request in flight and the "
                     "pool cannot admit the next one")
-            cache = {**pool.cache, "page_table": jnp.asarray(pt_np),
-                     "pos": pos}
+            cache = self._ps_inject({**pool.cache,
+                                     "page_table": jnp.asarray(pt_np),
+                                     "pos": pos})
             cache, last, active, n_gen, out, key = self._decode_loop(
                 self.params, cache, last, active, n_gen, stops, out, key,
                 stop_on_event=True)
             pos = cache["pos"]
+            cache = self._ps_extract(cache)
             pool.cache = {k: v for k, v in cache.items()
                           if k not in ("page_table", "pos")}
             act, gen = np.asarray(active), np.asarray(n_gen)
@@ -1056,7 +1113,9 @@ class ServeEngine:
                 jnp.zeros((self.max_len,), jnp.int32).at[0].set(first))
         else:
             toks1, len1 = self._pad_prompts([list(prompt)])
-            lg1, c1 = self._prefill(self.params, toks1, len1)
+            lg1, c1 = self._prefill(self.params, toks1, len1,
+                                    self._ps if self.probes else None)
+            c1 = self._ps_extract(c1)
             st.key, sub = jax.random.split(st.key)
             firstd = self._sample(lg1, sub)
             act = jnp.asarray(st.live) & (st.n_gen < st.stops)
@@ -1085,9 +1144,11 @@ class ServeEngine:
                      "pos": st.pos}
         else:
             cache = st.cache
+        cache = self._ps_inject(cache)
         cache, st.last, _, st.n_gen, st.out, st.key = self._decode_loop(
             self.params, cache, st.last, act, st.n_gen, round_stops,
             st.out, st.key, stop_on_event=False)
+        cache = self._ps_extract(cache)
         if self.paged:
             st.pos = cache["pos"]
             self.pool.cache = {k: v for k, v in cache.items()
@@ -1241,7 +1302,8 @@ class ServeEngine:
         if int(jnp.max(lengths)) + max_new > self.max_len:
             raise ValueError("prompt + max_new exceeds max_len")
         key = jax.random.PRNGKey(0) if key is None else key
-        logits, cache = self._prefill(self.params, toks, lengths)
+        logits, cache = self._prefill(self.params, toks, lengths,
+                                      self._ps if self.probes else None)
         cache = self._place_kv(self._grow(cache))
         key, sub = jax.random.split(key)
         first = self._sample(logits, sub)
@@ -1249,9 +1311,10 @@ class ServeEngine:
         n_gen = jnp.ones((B,), jnp.int32)
         active = n_gen < stops
         out = jnp.zeros((B, max_new), jnp.int32).at[:, 0].set(first)
-        _, _, _, n_gen, out, _ = self._decode_loop(
+        cache, _, _, n_gen, out, _ = self._decode_loop(
             self.params, cache, first, active, n_gen, stops, out, key,
             stop_on_event=False)
+        self._ps_extract(cache)
         out = np.asarray(out)
         return [list(p) + out[i, :max_new].tolist()
                 for i, p in enumerate(prompts)]
@@ -1315,7 +1378,9 @@ class ServeEngine:
                     break
                 rid = queue.popleft()
                 toks1, len1 = self._pad_prompts([prompts[rid]])
-                lg1, c1 = self._prefill(self.params, toks1, len1)
+                lg1, c1 = self._prefill(self.params, toks1, len1,
+                                        self._ps if self.probes else None)
+                c1 = self._ps_extract(c1)
                 key, sub = jax.random.split(key)
                 first = self._sample(lg1, sub)
                 cache, last, active, n_gen, stops, out = self._admit(
@@ -1323,9 +1388,11 @@ class ServeEngine:
                     last, active, n_gen, stops, out)
                 slot_rid[b] = rid
             # decode in lockstep until some request finishes (the event)
+            cache = self._ps_inject(cache)
             cache, last, active, n_gen, out, key = self._decode_loop(
                 self.params, cache, last, active, n_gen, stops, out, key,
                 stop_on_event=True)
+            cache = self._ps_extract(cache)
             # harvest retired slots (leave happens between decode steps)
             act = np.asarray(active)
             gen = np.asarray(n_gen)

@@ -1,0 +1,241 @@
+"""Serving-side numerics observability (DESIGN.md §14).
+
+The in-graph collection machinery lives in ``repro.kernels.probes`` (it
+must be importable from ``models/`` without touching ``serving/``); this
+module is the host-side half the engine and telemetry stack consume:
+
+* ``static_index_audit`` — one-time host scan of the *immutable* weight
+  index planes: how many ids are stored negative (narrow signed dtypes;
+  resolved by the gathers' Python-style wrap) and how many remain
+  outside ``[0, |W|)`` even after the wrap — the addresses the kernels'
+  ``mode="clip"`` gathers would silently pin.  ``w_idx`` never changes
+  at runtime, so auditing it per decode step would be pure waste; the
+  engine checks it once at init and reports the counts alongside the
+  dynamic counters.
+* ``summarize`` — turn raw device counters into the canonical
+  ``numerics`` snapshot section: per-layer saturation rates, int32
+  accumulator headroom in bits, KV round-trip max/mean error, matmul
+  call counts, page-table OOB totals, and the static index audit.
+* ``golden_entry`` / ``sentinel_check`` — the drift-sentinel policy:
+  what ``GOLDEN_UPDATE=1`` commits to ``tests/golden_numerics.json`` for
+  each golden scenario, and how a fresh measurement is compared against
+  those committed bounds (exact equality for static integer counts,
+  bounded drift for measured floats, hard floors for safety margins —
+  accumulator headroom must stay > 0 bits everywhere, which is the
+  runtime validation of ``choose_scale``'s static no-overflow pick).
+
+No wall clocks here: everything is either pure arithmetic on counters
+or a deterministic walk of a params pytree.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+# Re-export the functional core so serving code (and tests) can treat
+# this module as the single probes entry point.
+from repro.kernels.probes import (  # noqa: F401
+    MAXES, PER_LAYER, SCALARS, active, bump, init_state, layer, record,
+    tap_act, tap_kv, tap_matmul,
+)
+
+INT32_MAX = float(2**31 - 1)
+
+#: headroom reported for layers whose accumulator never moved — the full
+#: signed-int32 magnitude budget.
+FULL_HEADROOM_BITS = 31.0
+
+__all__ = ["static_index_audit", "summarize", "golden_entry",
+           "sentinel_check", "run_golden_scenarios", "init_state", "layer",
+           "bump", "record", "active", "tap_act", "tap_kv", "tap_matmul",
+           "INT32_MAX", "FULL_HEADROOM_BITS", "PER_LAYER", "MAXES",
+           "SCALARS", "GOLDEN_PROMPTS", "GOLDEN_MAX_NEW",
+           "GOLDEN_SCENARIOS"]
+
+
+def static_index_audit(params) -> dict:
+    """Count weight-index ids the kernels' gathers canonicalize.
+
+    Walks every ``{"w_idx", "codebook"}`` site in the params tree (the
+    shape the compression pass emits and ``dispatch``/``layers.dense``
+    route on).  ``widx_neg`` counts ids *stored* negative — legitimate
+    for narrow signed dtypes (|W|=256 in int8 stores ids ≥ 128 as
+    negatives) and resolved by the gathers' Python-style wrap
+    (``id + |W|``).  ``widx_oob`` counts ids still outside ``[0, |W|)``
+    *after* that wrap — genuinely bad addresses the clip-mode gathers
+    would silently pin.  Returns ``{"widx_neg", "widx_oob",
+    "widx_total"}`` as plain ints.
+    """
+    neg = oob = total = 0
+
+    def walk(node) -> None:
+        nonlocal neg, oob, total
+        if not isinstance(node, dict):
+            return
+        if "w_idx" in node and "codebook" in node:
+            w = np.asarray(jax.device_get(node["w_idx"])).astype(np.int64)
+            if np.issubdtype(np.asarray(node["w_idx"]).dtype, np.integer):
+                n_w = int(np.asarray(node["codebook"]).shape[-1])
+                canon = np.where(w < 0, w + n_w, w)
+                neg += int((w < 0).sum())
+                oob += int(((canon < 0) | (canon >= n_w)).sum())
+                total += int(w.size)
+        for v in node.values():
+            walk(v)
+
+    walk(params)
+    return {"widx_neg": neg, "widx_oob": oob, "widx_total": total}
+
+
+def summarize(state: dict, *, audit: dict | None = None,
+              backend: str = "dense") -> dict:
+    """Raw device counters -> the canonical ``numerics`` section.
+
+    Derived series: ``sat_rate`` (clipped elements / elements seen),
+    ``headroom_bits`` (log2(INT32_MAX / acc_max), capped at the full
+    31-bit budget when a layer's accumulator never moved), and
+    ``kv_err_mean``.  Floats are canonicalized by the telemetry
+    ``snapshot()``; values here are plain Python numbers.
+    """
+    if not state:
+        return {}
+    host = jax.device_get(state)
+    sat = [float(v) for v in host["act_sat"]]
+    tot = [float(v) for v in host["act_total"]]
+    acc = [float(v) for v in host["acc_max"]]
+    kv_sum = [float(v) for v in host["kv_err_sum"]]
+    kv_cnt = [float(v) for v in host["kv_err_cnt"]]
+    headroom = [min(FULL_HEADROOM_BITS, math.log2(INT32_MAX / a))
+                if a > 0.0 else FULL_HEADROOM_BITS for a in acc]
+    out = {
+        "backend": backend,
+        "tokens": float(host["tokens"]),
+        "page_oob": float(host["page_oob"]),
+        "matmul_calls": [float(v) for v in host["matmul_calls"]],
+        "act_sat": sat,
+        "act_total": tot,
+        "sat_rate": [s / t if t > 0.0 else 0.0 for s, t in zip(sat, tot)],
+        "acc_max": acc,
+        "headroom_bits": headroom,
+        "kv_err_max": [float(v) for v in host["kv_err_max"]],
+        "kv_err_mean": [s / c if c > 0.0 else 0.0
+                        for s, c in zip(kv_sum, kv_cnt)],
+    }
+    out.update(audit or {})
+    return out
+
+
+# --- drift sentinels ---------------------------------------------------------
+#
+# Bounds policy (committed via GOLDEN_UPDATE=1 into golden_numerics.json):
+#   * static integer counts (widx_*, page_oob) must match EXACTLY — the
+#     index planes are deterministic artifacts of the compression seed;
+#   * measured floats (saturation rate, KV error) may drift by the
+#     platform slack below — XLA reduction order differs across
+#     backends/ISAs — but never past 1.25x + an absolute epsilon;
+#   * accumulator headroom has a hard floor at > 0 bits (overflow margin
+#     exists at all) and may not fall more than 1 bit below golden.
+
+SAT_RATE_SLACK = 1.25
+SAT_RATE_EPS = 2e-3
+KV_ERR_SLACK = 1.25
+KV_ERR_EPS = 1e-4
+HEADROOM_DROP_BITS = 1.0
+
+#: The golden sentinel scenarios: one fixed prompt set served through
+#: every backend × cache-mode combination (int8 pages on the paged rows
+#: so the KV round-trip probe sees real quantization).  ONE definition
+#: shared by tests/test_probes.py (which blesses golden_numerics.json)
+#: and benchmarks/serve_throughput.py --smoke (which gates against it) —
+#: the counters only compare when the scenarios match exactly.
+GOLDEN_PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [9, 10]]
+GOLDEN_MAX_NEW = 6
+GOLDEN_SCENARIOS = {
+    "dense/contig": ("dense", {}),
+    "dense/paged": ("dense",
+                    {"paged": True, "page_size": 8, "kv_dtype": "int8"}),
+    "codebook/contig": ("codebook", {}),
+    "codebook/paged": ("codebook",
+                       {"paged": True, "page_size": 8, "kv_dtype": "int8"}),
+    "lut/contig": ("lut", {}),
+    "lut/paged": ("lut",
+                  {"paged": True, "page_size": 8, "kv_dtype": "int8"}),
+}
+
+
+def run_golden_scenarios(model, params, cparams) -> dict:
+    """Serve the golden prompts through every sentinel scenario with
+    probes on; returns ``{scenario: numerics}``.  The engine import is
+    deferred — ``engine.py`` imports this module at load time."""
+    from repro.serving.engine import ServeEngine
+
+    out = {}
+    for name, (be, kw) in GOLDEN_SCENARIOS.items():
+        p = params if be == "dense" else cparams
+        eng = ServeEngine(model, p, max_len=48, max_batch=2, backend=be,
+                          probes=True, **kw)
+        eng.serve(GOLDEN_PROMPTS, max_new=GOLDEN_MAX_NEW)
+        out[name] = eng.numerics()
+    return out
+
+
+def golden_entry(num: dict) -> dict:
+    """What one golden scenario commits: worst-layer summaries + the
+    exact static index counts."""
+    return {
+        "sat_rate_max": max(num.get("sat_rate") or [0.0]),
+        "headroom_bits_min": min(num.get("headroom_bits")
+                                 or [FULL_HEADROOM_BITS]),
+        "kv_err_max": max(num.get("kv_err_max") or [0.0]),
+        "widx_neg": int(num.get("widx_neg", 0)),
+        "widx_oob": int(num.get("widx_oob", 0)),
+        "tokens": float(num.get("tokens", 0.0)),
+    }
+
+
+def sentinel_check(num: dict, golden: dict | None) -> list:
+    """Compare a fresh numerics snapshot against committed bounds.
+
+    Returns a list of human-readable failure strings; empty means the
+    sentinels pass.  ``golden`` None/empty fails loudly — a missing
+    entry means the scenario was never blessed.
+    """
+    if not num:
+        return ["empty numerics snapshot (probes not enabled?)"]
+    if not golden:
+        return ["no golden entry committed for this scenario "
+                "(run with GOLDEN_UPDATE=1 to bless it)"]
+    fails = []
+    for k in ("widx_neg", "widx_oob"):
+        if int(num.get(k, 0)) != int(golden.get(k, 0)):
+            fails.append(f"{k}: measured {num.get(k, 0)} != "
+                         f"golden {golden.get(k, 0)} (static counts must "
+                         f"match exactly)")
+    if float(num.get("page_oob", 0.0)) != 0.0:
+        fails.append(f"page_oob: {num['page_oob']} page-table ids outside "
+                     f"[0, n_pages) (expected 0)")
+
+    sat = max(num.get("sat_rate") or [0.0])
+    sat_bound = golden.get("sat_rate_max", 0.0) * SAT_RATE_SLACK + SAT_RATE_EPS
+    if sat > sat_bound:
+        fails.append(f"sat_rate_max: {sat:.6f} > bound {sat_bound:.6f} "
+                     f"(golden {golden.get('sat_rate_max', 0.0):.6f})")
+
+    hr = min(num.get("headroom_bits") or [FULL_HEADROOM_BITS])
+    if hr <= 0.0:
+        fails.append(f"headroom_bits_min: {hr:.2f} — int32 accumulator "
+                     f"margin exhausted (choose_scale guarantee violated)")
+    gold_hr = golden.get("headroom_bits_min")
+    if gold_hr is not None and hr < gold_hr - HEADROOM_DROP_BITS:
+        fails.append(f"headroom_bits_min: {hr:.2f} fell more than "
+                     f"{HEADROOM_DROP_BITS} bit below golden {gold_hr:.2f}")
+
+    kv = max(num.get("kv_err_max") or [0.0])
+    kv_bound = golden.get("kv_err_max", 0.0) * KV_ERR_SLACK + KV_ERR_EPS
+    if kv > kv_bound:
+        fails.append(f"kv_err_max: {kv:.6g} > bound {kv_bound:.6g} "
+                     f"(golden {golden.get('kv_err_max', 0.0):.6g})")
+    return fails

@@ -435,6 +435,11 @@ class AsyncScheduler:
         placed = self._admit_ready()
         if tel.enabled:
             tel.observe("sched.queue_depth", len(self.ready))
+            # counter-track samples (Perfetto "C" events): the load curves
+            # beside the lifecycle spans, stamped by the virtual clock
+            tel.counter("sched.queue_depth", len(self.ready))
+            if getattr(self.engine, "paged", False):
+                tel.counter("pool.pressure", self.engine.pool.pressure())
         t_dec0 = self.clock.now()
         toks, done = self.engine.serve_step(self.st, self.quantum)
         if toks:
@@ -447,6 +452,20 @@ class AsyncScheduler:
                 for slot in sorted(toks):
                     tel.span("slots", slot, "decode", t_dec0,
                              self.clock.now())
+                tel.counter("engine.batch_occupancy", len(toks))
+                if getattr(self.engine, "probes", False):
+                    # §14 numerics as counter tracks — small (L,) device
+                    # reads per round, sampled only when telemetry is on
+                    num = self.engine.numerics()
+                    if num.get("sat_rate"):
+                        tel.counter("numerics.sat_rate_max",
+                                    max(num["sat_rate"]))
+                    if num.get("headroom_bits"):
+                        tel.counter("numerics.headroom_bits_min",
+                                    min(num["headroom_bits"]))
+                    if num.get("kv_err_max"):
+                        tel.counter("numerics.kv_err_max",
+                                    max(num["kv_err_max"]))
             for slot in sorted(toks):
                 self._emit(self.slots[slot], toks[slot])
         for slot in done:

@@ -62,7 +62,10 @@ __all__ = ["Telemetry", "NULL_TELEMETRY", "DEFAULT_BUCKETS", "TRACKS"]
 DEFAULT_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
 
 # Track name -> Perfetto pid.  Fixed assignment keeps exports stable.
-TRACKS = {"requests": 1, "slots": 2, "sched": 3}
+# "counters" carries the "C" (counter-track) samples: load curves
+# (queue depth, pool pressure, batch occupancy) and the §14 numerics
+# series, drawn by Perfetto as area charts beside the lifecycle spans.
+TRACKS = {"requests": 1, "slots": 2, "sched": 3, "counters": 4}
 
 
 def _canon(obj):
@@ -180,6 +183,13 @@ class Telemetry:
         self._events.append(("I", round(self.clock.now(), 9),
                              track, int(tid), name))
 
+    def counter(self, name: str, value) -> None:
+        """One sample of a counter track at the current virtual time —
+        a Perfetto "C" event on the ``counters`` process.  Same named
+        series + monotone sample times = one load curve in the UI."""
+        self._events.append(("C", round(self.clock.now(), 9), name,
+                             round(float(value), 9)))
+
     # --- snapshot / export ---------------------------------------------------
 
     def snapshot(self) -> dict:
@@ -209,6 +219,10 @@ class Telemetry:
                 _, t0, t1, track, tid, name = ev
                 out.append({"ph": "X", "t0": t0, "t1": t1, "track": track,
                             "tid": tid, "name": name})
+            elif ev[0] == "C":
+                _, t, name, value = ev
+                out.append({"ph": "C", "t": t, "name": name,
+                            "value": value})
             else:
                 _, t, track, tid, name = ev
                 out.append({"ph": "I", "t": t, "track": track, "tid": tid,
@@ -229,6 +243,14 @@ class Telemetry:
             events.append({"ph": "M", "pid": pid, "name": "process_name",
                            "args": {"name": track}})
         for ev in self._events:
+            if ev[0] == "C":
+                # Counter tracks: Perfetto keys the series on (pid, name);
+                # no thread metadata, the value rides args.value.
+                _, t, name, value = ev
+                events.append({"ph": "C", "pid": TRACKS["counters"],
+                               "ts": us(t), "name": name,
+                               "args": {"value": value}})
+                continue
             track, tid = (ev[3], ev[4]) if ev[0] == "X" else (ev[2], ev[3])
             pid = TRACKS.get(track, 99)
             if (pid, tid) not in seen:
@@ -272,6 +294,10 @@ class Telemetry:
         if getattr(engine, "spec", None) is not None \
                 or getattr(engine, "spec_stats", None) is not None:
             self.add_provider("spec", _spec_provider(engine))
+        if getattr(engine, "probes", False):
+            # §14 numerics: the engine's accumulated probe counters become
+            # one canonical `numerics` section in every snapshot()
+            self.add_provider("numerics", engine.numerics)
         self.attach_kernel_counters()
 
     def attach_kernel_counters(self) -> None:
@@ -350,6 +376,17 @@ class Telemetry:
             routes = ", ".join(f"{k}={v}" for k, v in sorted(kern.items())
                                if not k.startswith("tuning."))
             lines.append(f"[telemetry] kernels: {routes}")
+        num = s.get("numerics")
+        if num and num.get("tokens"):
+            sat = max(num.get("sat_rate") or [0.0])
+            hr = min(num.get("headroom_bits") or [31.0])
+            kv = max(num.get("kv_err_max") or [0.0])
+            lines.append(f"[telemetry] numerics[{num.get('backend')}]: "
+                         f"{int(num['tokens'])} tokens probed, worst-layer "
+                         f"saturation {100 * sat:.3f}%, accumulator headroom "
+                         f"{hr:.1f} bits min, kv round-trip err {kv:.2e} max, "
+                         f"page_oob {int(num.get('page_oob', 0))}, widx_oob "
+                         f"{int(num.get('widx_oob', 0))}")
         return "\n".join(lines) if lines else "[telemetry] nothing recorded"
 
 
@@ -422,6 +459,9 @@ class _NullTelemetry:
         pass
 
     def instant(self, track, tid, name):
+        pass
+
+    def counter(self, name, value):
         pass
 
     def attach_engine(self, engine):

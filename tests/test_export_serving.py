@@ -120,6 +120,40 @@ def test_kv_cache_bytes_accounting():
     assert rep0.kv_fp_bytes == 0 and "deployed" not in rep0.row()
 
 
+def test_memory_report_counts_lut_table_as_table_not_indices():
+    """Attached ``lut_table`` leaves are int32 *tables*, not per-weight
+    indices: they must not inflate n_params/entropy, and the table
+    accounting must equal the actual attached pytree bytes."""
+    from repro.kernels.dispatch import attach_lut_tables, make_lut_spec
+
+    n_w = 256
+    rng = np.random.default_rng(7)
+    cb = jnp.asarray(rng.normal(scale=0.05, size=n_w), jnp.float32)
+    tree = {"blocks": {"proj": {
+        "w_idx": jnp.asarray(rng.integers(0, n_w, (64, 128)), jnp.int32),
+        "codebook": cb}}}
+    spec = make_lut_spec(cb, fan_in=64, levels=64)
+    with_tables = attach_lut_tables(tree, spec)
+    table = with_tables["blocks"]["proj"]["lut_table"]
+    assert table.dtype == jnp.int32 and table.shape == (64, n_w)
+
+    rep0 = memory_report(tree, n_w, spec.levels)
+    rep = memory_report(with_tables, n_w, spec.levels)
+    # index accounting identical with or without the attached tables
+    assert rep.n_params == rep0.n_params == 64 * 128
+    assert rep.entropy_bits_per_w == rep0.entropy_bits_per_w
+    # table accounting = ACTUAL attached bytes (+ act table + codebook),
+    # and the packed figure is indices + that — matching the real pytree
+    assert rep.lut_table_bytes == table.nbytes
+    assert rep.table_bytes == table.nbytes + 4 * spec.levels * 4 + n_w * 4
+    assert rep.packed_bytes == (rep.n_params * rep.index_bits + 7) // 8 \
+        + rep.table_bytes
+    # without attached tables, the analytic (|A|+1)x(|W|+1) estimate holds
+    assert rep0.lut_table_bytes == 0
+    assert rep0.table_bytes == (spec.levels + 1) * (n_w + 1) * 4 \
+        + 4 * spec.levels * 4 + n_w * 4
+
+
 def test_codebook_indices_memory_on_trained_lm():
     """End-to-end §4 accounting on a real (reduced) LM after clustering."""
     cfg = C.get("qwen3-1.7b").reduced()

@@ -1,0 +1,254 @@
+"""In-graph numerics probes suite (DESIGN.md §14, ISSUE 8).
+
+The probe contract, locked down five ways:
+
+* **Token identity** — probes-on decode emits exactly the tokens
+  probes-off decode does, across dense/codebook/lut × contiguous/paged
+  (int8 pages on the paged rows).  Instrumentation must be write-only.
+* **Oracle exactness** — a seeded saturation probe over a
+  ``backend_matmul`` driven outside the lut grid reports the exact clip
+  count a numpy oracle computes; the off (empty-dict) state is inert.
+* **Determinism** — two fresh engine+scheduler contended replays produce
+  byte-identical canonical-JSON ``numerics`` snapshots.
+* **Drift sentinels** — golden scenarios' worst-layer summaries are
+  committed to tests/golden_numerics.json (GOLDEN_UPDATE=1 regen) and a
+  fresh measurement must stay inside the bounds policy — notably int32
+  accumulator headroom > 0 bits everywhere, the runtime validation of
+  ``make_lut_spec``'s static no-overflow scale choice.
+* **Static audit** — the one-time w_idx scan counts negative/OOB ids the
+  clip-mode gathers would silently canonicalize.
+
+tp=2 parity for the probes-on path lives in tier-2
+(tests/test_tp_serve.py::test_tp_probes_token_identity).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.quantizer import WeightQuantConfig, cluster_params
+from repro.core.quantizer import init_state as quant_init_state
+from repro.kernels import dispatch
+from repro.kernels import probes as kprobes
+from repro.models.model_zoo import build
+from repro.serving import (ServeEngine, Server, SpecConfig, Telemetry,
+                           to_codebook_params)
+from repro.serving import probes as nprobes
+from repro.serving.server import CONTENDED_ENGINE_KW, contended_trace
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden_numerics.json")
+
+PROMPTS = nprobes.GOLDEN_PROMPTS
+MAX_NEW = nprobes.GOLDEN_MAX_NEW
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    cfg = C.get("qwen3-1.7b").reduced().replace(n_layers=2, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    wq = WeightQuantConfig(num_weights=256, method="kmeans")
+    pq, st = cluster_params(params, wq, quant_init_state(wq), 200,
+                            jax.random.PRNGKey(1))
+    cp = to_codebook_params(pq, wq, st, min_size=256)
+    return model, params, cp
+
+
+@pytest.fixture(scope="module")
+def probe_runs(zoo):
+    """Every golden scenario (backend × cache mode, the shared
+    ``nprobes.GOLDEN_SCENARIOS`` table) served twice — probes off, then
+    probes on — with the on-engine's numerics snapshot kept.  Paged rows
+    use int8 pages so the KV round-trip probe sees real quantization."""
+    model, params, cp = zoo
+    runs = {}
+    for name, (be, skw) in nprobes.GOLDEN_SCENARIOS.items():
+        p = params if be == "dense" else cp
+        kw = dict(max_len=48, max_batch=2, backend=be, **skw)
+        off = ServeEngine(model, p, **kw).serve(PROMPTS, max_new=MAX_NEW)
+        eng = ServeEngine(model, p, probes=True, **kw)
+        on = eng.serve(PROMPTS, max_new=MAX_NEW)
+        runs[name] = {"off": off, "on": on, "num": eng.numerics()}
+    return runs
+
+
+# --- token identity -----------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(nprobes.GOLDEN_SCENARIOS))
+def test_probes_token_identity(probe_runs, name):
+    """The acceptance criterion: instrumented decode is token-identical
+    to uninstrumented decode, and the counters it leaves behind are
+    internally consistent."""
+    be, mode = name.split("/")
+    r = probe_runs[name]
+    assert r["on"] == r["off"], \
+        f"{name}: probes changed the decoded tokens"
+    num = r["num"]
+    assert num["backend"] == be
+    assert num["tokens"] > 0.0
+    assert num["page_oob"] == 0.0
+    if be == "dense":
+        # plain float weights never route through backend_matmul
+        assert all(c == 0.0 for c in num["matmul_calls"])
+    else:
+        assert all(c > 0.0 for c in num["matmul_calls"])
+        # every layer saw the same number of routed matmuls
+        assert len(set(num["matmul_calls"])) == 1
+    if be == "lut":
+        # acceptance: accumulator headroom > 0 bits everywhere — the
+        # runtime check of make_lut_spec's static no-overflow pick
+        assert all(h > 0.0 for h in num["headroom_bits"]), num
+        assert all(a > 0.0 for a in num["acc_max"]), num
+        assert all(t > 0.0 for t in num["act_total"])
+    if mode == "paged":
+        assert max(num["kv_err_max"]) > 0.0, \
+            "int8 pages must show a nonzero KV round-trip error"
+        assert all(0.0 <= m <= x or x == 0.0 for m, x in
+                   zip(num["kv_err_mean"], num["kv_err_max"]))
+    else:
+        assert max(num["kv_err_max"]) == 0.0   # float cache: no quantize_kv
+    if be != "dense":
+        assert num["widx_total"] > 0 and num["widx_oob"] == 0
+
+
+# --- oracle exactness ---------------------------------------------------------
+
+def test_saturation_probe_matches_numpy_oracle():
+    """Seeded inputs driven outside the lut grid: the jitted probe's clip
+    count equals the numpy oracle's, exactly."""
+    rng = np.random.default_rng(0)
+    n_w, K, N, B = 16, 32, 8, 4
+    cb = jnp.asarray(rng.normal(scale=0.1, size=n_w), jnp.float32)
+    w_idx = jnp.asarray(rng.integers(0, n_w, (K, N)), jnp.int32)
+    spec = dispatch.make_lut_spec(cb, fan_in=K, levels=64,
+                                  a_range=(-2.0, 2.0))
+    x = jnp.asarray(rng.uniform(-4.0, 4.0, (B, K)), jnp.float32)
+
+    def f(x, ps):
+        with kprobes.layer(ps, 0) as pb:
+            y = dispatch.backend_matmul(x, w_idx, cb, kind="row")
+        return y, pb.state
+
+    with dispatch.use_backend("lut", spec):
+        _, ps = jax.jit(f)(x, kprobes.init_state(1))
+    xs = np.asarray(x)
+    want = int(((xs < spec.a_min) | (xs > spec.a_max)).sum())
+    assert want > 0, "seed produced no out-of-grid inputs — weak test"
+    assert int(np.asarray(ps["act_sat"])[0]) == want
+    assert float(np.asarray(ps["act_total"])[0]) == float(x.size)
+    assert float(np.asarray(ps["matmul_calls"])[0]) == 1.0
+    assert float(np.asarray(ps["acc_max"])[0]) > 0.0
+
+
+def test_empty_state_is_inert():
+    """The off state: an empty dict records nothing, allocates nothing,
+    and summarizes to nothing — XLA sees zero extra pytree leaves."""
+    with kprobes.layer({}, 0) as pb:
+        assert not kprobes.active()
+        kprobes.record("act_sat", 1.0)      # dropped: no frame open
+    assert pb.state == {}
+    assert kprobes.bump({}, "tokens", 1.0) == {}
+    assert nprobes.summarize({}) == {}
+    # taps outside any frame are no-ops even with a state in hand
+    kprobes.tap_act(jnp.zeros((4,)), 0.0, 6.0)
+    st = kprobes.init_state(2)
+    assert all(float(np.asarray(v).sum()) == 0.0 for v in st.values())
+
+
+# --- determinism --------------------------------------------------------------
+
+def _numerics_replay(model, params):
+    eng = ServeEngine(model, params, probes=True, **CONTENDED_ENGINE_KW)
+    tel = Telemetry()
+    srv = Server(eng, telemetry=tel)
+    srv.replay(contended_trace(1, model.cfg.vocab))
+    snap = json.loads(tel.snapshot_json())
+    return snap, tel
+
+
+def test_numerics_byte_identical_replay(zoo):
+    """Two fresh engine+scheduler contended replays → byte-identical
+    canonical-JSON numerics sections (and numerics counter tracks)."""
+    model, params, _ = zoo
+    s1, t1 = _numerics_replay(model, params)
+    s2, _ = _numerics_replay(model, params)
+    assert "numerics" in s1, "probes engine did not register its provider"
+    b1 = json.dumps(s1["numerics"], sort_keys=True).encode()
+    b2 = json.dumps(s2["numerics"], sort_keys=True).encode()
+    assert b1 == b2
+    assert s1["numerics"]["tokens"] > 0.0
+    # the scheduler sampled the probe-derived counter tracks
+    names = {e["name"] for e in t1.event_log() if e["ph"] == "C"}
+    assert {"numerics.sat_rate_max", "numerics.headroom_bits_min",
+            "numerics.kv_err_max"} <= names
+
+
+# --- drift sentinels ----------------------------------------------------------
+
+def test_golden_numerics_sentinels(probe_runs):
+    """The committed golden scenarios, re-measured and checked against
+    the bounds policy (exact static counts, bounded float drift, hard
+    headroom floor).  GOLDEN_UPDATE=1 re-blesses."""
+    nums = {name: r["num"] for name, r in probe_runs.items()}
+    got = {name: nprobes.golden_entry(n) for name, n in nums.items()}
+    if os.environ.get("GOLDEN_UPDATE"):
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        pytest.skip("golden file regenerated — review and commit the diff")
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert set(got) == set(want), "golden scenario set drifted"
+    for name, num in nums.items():
+        fails = nprobes.sentinel_check(num, want[name])
+        assert not fails, f"{name}: " + "; ".join(fails)
+
+
+def test_sentinel_bounds_policy():
+    """Unit-level: the check passes on its own golden_entry and trips on
+    each class of drift."""
+    num = {"sat_rate": [0.01, 0.0], "headroom_bits": [5.0, 8.0],
+           "kv_err_max": [0.01, 0.0], "widx_neg": 0, "widx_oob": 0,
+           "page_oob": 0.0, "tokens": 10.0}
+    g = nprobes.golden_entry(num)
+    assert nprobes.sentinel_check(num, g) == []
+    assert nprobes.sentinel_check(num, None)      # unblessed scenario
+    assert nprobes.sentinel_check({}, g)          # probes off
+    trips = {
+        "headroom": dict(num, headroom_bits=[-0.5, 8.0]),
+        "sat_rate": dict(num, sat_rate=[0.2, 0.0]),
+        "page_oob": dict(num, page_oob=2.0),
+        "widx_oob": dict(num, widx_oob=3),
+        "kv_err_max": dict(num, kv_err_max=[0.5, 0.0]),
+    }
+    for key, bad in trips.items():
+        fails = nprobes.sentinel_check(bad, g)
+        assert any(key in f for f in fails), (key, fails)
+
+
+# --- static audit + guard rails -----------------------------------------------
+
+def test_static_index_audit():
+    # -1 is a stored-negative id the gather wraps to 7 (in range);
+    # 9 and -12 stay outside [0, 8) even after the wrap — genuine OOB
+    tree = {"blk": {"w_idx": jnp.asarray([[0, -1], [-12, 9]], jnp.int32),
+                    "codebook": jnp.zeros((8,), jnp.float32)},
+            "float_leaf": jnp.zeros((3,))}
+    audit = nprobes.static_index_audit(tree)
+    assert audit == {"widx_neg": 2, "widx_oob": 2, "widx_total": 4}
+    assert nprobes.static_index_audit({"w": jnp.zeros((2, 2))}) == \
+        {"widx_neg": 0, "widx_oob": 0, "widx_total": 0}
+
+
+def test_probes_with_spec_engine_raises(zoo):
+    """Speculative serve() is not instrumented — the engine must refuse
+    loudly instead of silently dropping counters."""
+    model, params, _ = zoo
+    with pytest.raises(NotImplementedError, match="probes"):
+        ServeEngine(model, params, max_len=48, max_batch=2, probes=True,
+                    spec=SpecConfig(draft="ngram", k=3))

@@ -67,27 +67,31 @@ def _engine(model, params, cp, backend="dense", paged=False, **kw):
 def test_no_wall_clock_in_serving():
     """Nothing under serving/ may read the wall: time is injected.  The
     simulation suite's determinism rests on this being a rule, not a
-    habit — and the telemetry subsystem (ISSUE 7) must live under it
-    too: deterministic spans/snapshots depend on every timestamp coming
-    from the injected clock."""
+    habit — the telemetry subsystem (ISSUE 7) and both halves of the
+    numerics probes (ISSUE 8: serving/probes.py AND the in-graph
+    kernels/probes.py, which rides the jitted forward) must live under
+    it too: deterministic spans/snapshots/counters depend on every
+    timestamp coming from the injected clock."""
+    import repro.kernels.probes as KP
     import repro.serving as S
 
     forbidden = ("import time", "time.time", "from time ", "datetime",
                  "perf_counter", "monotonic(")
     sdir = os.path.dirname(os.path.abspath(S.__file__))
+    files = [(f"serving/{fn}", os.path.join(sdir, fn))
+             for fn in sorted(os.listdir(sdir)) if fn.endswith(".py")]
+    files.append(("kernels/probes.py", os.path.abspath(KP.__file__)))
     scanned = []
-    for fn in sorted(os.listdir(sdir)):
-        if not fn.endswith(".py"):
-            continue
-        scanned.append(fn)
-        with open(os.path.join(sdir, fn)) as f:
+    for label, path in files:
+        scanned.append(label)
+        with open(path) as f:
             src = f.read()
         for pat in forbidden:
-            assert pat not in src, \
-                f"serving/{fn} reads the wall clock ({pat!r})"
-    assert "telemetry.py" in scanned, \
-        "the telemetry module moved out of serving/ — the no-wall-clock " \
-        "rule no longer covers it"
+            assert pat not in src, f"{label} reads the wall clock ({pat!r})"
+    for must in ("serving/telemetry.py", "serving/probes.py",
+                 "kernels/probes.py"):
+        assert must in scanned, \
+            f"{must} moved — the no-wall-clock rule no longer covers it"
 
 
 # --- step-level parity with serve() ------------------------------------------

@@ -174,6 +174,50 @@ def test_perfetto_structure(tiny):
     assert {"prefill", "decode", "swap_out", "swap_in"} <= slot_names
 
 
+def test_counter_tracks_round_trip(tiny):
+    """ISSUE 8 satellite: the load-curve series (queue depth, pool
+    pressure, batch occupancy) export as Perfetto "C" counter events on
+    the counters track — value-carrying and identical between the event
+    log and the Chrome-trace JSON."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_replay(model, params, trace)
+    cs = [e for e in r["tel"].event_log() if e["ph"] == "C"]
+    names = {e["name"] for e in cs}
+    assert {"sched.queue_depth", "pool.pressure",
+            "engine.batch_occupancy"} <= names
+    doc = json.loads(r["perfetto"])
+    pcs = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert pcs and all(e["pid"] == TRACKS["counters"] for e in pcs)
+    assert all(isinstance(e["ts"], int) for e in pcs)
+    # same series, same order, same values in both exports
+    assert [(e["name"], e["value"]) for e in cs] == \
+        [(e["name"], e["args"]["value"]) for e in pcs]
+    # occupancy counts decoding slots: bounded by the engine's max_batch
+    occ = [e["value"] for e in cs if e["name"] == "engine.batch_occupancy"]
+    assert occ and all(1 <= v <= CONTENDED_ENGINE_KW["max_batch"]
+                       for v in occ)
+    # queue depth actually moves on a contended trace
+    qd = [e["value"] for e in cs if e["name"] == "sched.queue_depth"]
+    assert max(qd) > 0
+
+
+def test_counter_event_units():
+    """counter() samples the injected clock and canonicalizes values the
+    same way gauges do."""
+    class FakeClock:
+        def now(self):
+            return 1.5
+
+    tel = Telemetry()
+    tel.bind_clock(FakeClock())
+    tel.counter("q", 3)
+    tel.counter("q", 0.1 + 0.2)
+    log = tel.event_log()
+    assert log[0] == {"ph": "C", "t": 1.5, "name": "q", "value": 3.0}
+    assert log[1]["value"] == round(0.1 + 0.2, 9)
+
+
 def test_export_files_round_trip(tiny, tmp_path):
     model, params = tiny
     trace = contended_trace(1, model.cfg.vocab)
@@ -230,6 +274,7 @@ def test_null_telemetry_is_inert():
     n.open_span("requests", 0, "x")
     n.close_span("requests", 0, "x")
     n.span("slots", 0, "x", 0.0, 1.0)
+    n.counter("c", 1)
     n.bind_clock(None)
     n.attach_kernel_counters()
     assert n.snapshot() == {}

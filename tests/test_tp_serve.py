@@ -62,6 +62,34 @@ def test_lut_acc_psum_bit_exact(tp):
     assert got["s"] == ref["s"]
 
 
+def test_tp_probes_token_identity(matrix):
+    """ISSUE 8 tier-2 row: probes-on serve at tp=1 and tp=2 is
+    token-identical to the probes-off matrix, and the numerics counters
+    themselves agree across TP degrees (replicated probe state, taps on
+    the full pre-shard activations)."""
+    probed = {tp: run_under_devices("tp_serve_cases:probes_matrix",
+                                    {"tp": tp}) for tp in (1, 2)}
+    plain = {k: matrix[1][k] for k in probed[1]}
+    for tp in (1, 2):
+        got = {k: v["tokens"] for k, v in probed[tp].items()}
+        assert got == plain, f"tp={tp}: probes changed the decoded tokens"
+    for case, r1 in probed[1].items():
+        n1, n2 = r1["numerics"], probed[2][case]["numerics"]
+        for k in ("tokens", "matmul_calls", "act_sat", "act_total",
+                  "page_oob", "widx_neg", "widx_oob"):
+            assert n1[k] == n2[k], (case, k, n1[k], n2[k])
+        # float-derived series may differ only in the last bits
+        for k in ("acc_max", "headroom_bits"):
+            for a, b in zip(n1[k], n2[k]):
+                assert a == pytest.approx(b, rel=1e-3, abs=1e-6), (case, k)
+        # under a mesh, quantize_kv sits inside shard_map and the trace
+        # fence drops its tap (DESIGN.md §14: sharded inner sites are
+        # uncovered) — KV counters must read exactly zero, not garbage
+        assert max(n2["kv_err_max"]) == 0.0, case
+    assert max(probed[1]["dense/paged-int8/plain"]["numerics"]
+               ["kv_err_max"]) > 0.0, "tp=1 int8 row lost its KV tap"
+
+
 @pytest.mark.parametrize("tp", [2, 4])
 def test_decode_collectives_bounded(tp):
     """No all-gather of cache-sized operands in the decode step: the

@@ -66,6 +66,33 @@ def serve_matrix(tp: int = 1) -> dict:
     return out
 
 
+def probes_matrix(tp: int = 1) -> dict:
+    """Probes-ON serve tokens + numerics summaries for the plain
+    backend × cache-mode grid at TP degree ``tp`` (ISSUE 8): tokens must
+    match the probes-off ``serve_matrix`` rows (instrumentation is
+    write-only) and the counter summaries must agree across degrees —
+    the probe state is replicated, taps fire on the full pre-shard_map
+    activations, and sharded inner sites are trace-fenced out."""
+    model, params, cp = _model_params()
+    mesh = _mesh(tp)
+    out = {}
+    for be in ("dense", "codebook", "lut"):
+        p = params if be == "dense" else cp
+        for mode, mkw in (("contig", {}),
+                          ("paged", dict(paged=True, page_size=PAGE))):
+            eng = ServeEngine(model, p, max_len=MAX_LEN, max_batch=2,
+                              mesh=mesh, backend=be, probes=True, **mkw)
+            toks = eng.serve(PROMPTS, max_new=MAX_NEW)
+            out[f"{be}/{mode}/plain"] = {"tokens": toks,
+                                         "numerics": eng.numerics()}
+    eng = ServeEngine(model, params, max_len=MAX_LEN, max_batch=2, mesh=mesh,
+                      paged=True, page_size=PAGE, kv_dtype="int8", probes=True)
+    out["dense/paged-int8/plain"] = {"tokens": eng.serve(PROMPTS,
+                                                         max_new=MAX_NEW),
+                                     "numerics": eng.numerics()}
+    return out
+
+
 def sched_trace_case(tp: int = 1) -> dict:
     """Contended multi-tenant trace through the AsyncScheduler at TP
     degree ``tp`` (ISSUE 5): the pool allocator, admission gate, and
