@@ -29,6 +29,11 @@ Measures tokens/sec and mean per-request latency for:
                  wall-clock tok/s figure.  The smoke gate asserts the
                  contended streams stay token-identical to batch serve()
                  and that preemptions actually fired.
+* ``fleet``    — multi-replica serving (DESIGN.md §15): the N=1
+                 reduction gate (one-replica fleet == single Server) and
+                 a prefix-aware vs round-robin routing A/B on a grouped
+                 shared-prefix workload, scored by the fleet-wide prefix
+                 hit rate (gated: prefix must win).
 
 Every run (full and ``--smoke``) also emits a machine-readable
 ``BENCH_serve.json`` (``--json-out``) — tokens/sec per backend/batch, KV
@@ -210,6 +215,66 @@ def bench_server(model, params, *, seed=0, telemetry=None):
             "makespan": rep.makespan,
             "admission_order": rep.admission_order,
             "wall_s": wall, "tok_s": rep.n_tokens / wall}
+
+
+def grouped_prefix_trace(seed, vocab, n, *, n_groups=4, page=8, rate=60.0):
+    """The fleet routing workload: every request opens with one of
+    ``n_groups`` two-page system prompts plus a private tail — prefix
+    affinity keeps each group's chain hot on one replica, round-robin
+    scatters it across all pools."""
+    rng = np.random.default_rng(seed)
+    prefixes = [[int(t) for t in rng.integers(0, vocab, 2 * page)]
+                for _ in range(n_groups)]
+    t, rows = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        g = int(rng.integers(n_groups))
+        tail = [int(x) for x in
+                rng.integers(0, vocab, int(rng.integers(1, page)))]
+        rows.append({"arrival": round(t, 9), "prompt": prefixes[g] + tail,
+                     "max_new": int(rng.integers(2, 6)), "priority": 0,
+                     "slo_ttft": None, "slo_tpot": None})
+    return rows
+
+
+def bench_fleet(model, params, *, seed=0, n_replicas=4, n_requests=80):
+    """Multi-replica fleet serving (DESIGN.md §15): the N=1 reduction
+    gate (a one-replica fleet's report must equal the single Server's on
+    the contended trace) and a prefix-vs-round-robin routing A/B on the
+    grouped shared-prefix workload — the fleet-wide prefix hit rate is
+    the routing policy's score.  Event digests are virtual-clock
+    deterministic; only ``wall_s``/``tok_s`` are timing fields."""
+    from repro.serving import Fleet, Server
+    from repro.serving.server import CONTENDED_ENGINE_KW, contended_trace
+
+    trace = contended_trace(seed + 1, model.cfg.vocab,
+                            slo_ttft=0.3, slo_tpot=0.05)
+    srv = Server(ServeEngine(model, params, **CONTENDED_ENGINE_KW))
+    rep_s = srv.replay(trace)
+    f1 = Fleet([ServeEngine(model, params, **CONTENDED_ENGINE_KW)])
+    rep_f = f1.replay(trace)
+    n1_parity = rep_f.to_json() == rep_s.to_json()
+
+    grouped = grouped_prefix_trace(
+        seed, model.cfg.vocab, n_requests,
+        page=CONTENDED_ENGINE_KW["page_size"])
+    rows = {}
+    for policy in ("prefix", "round_robin"):
+        fleet = Fleet([ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+                       for _ in range(n_replicas)], policy=policy)
+        t0 = time.perf_counter()
+        rep = fleet.replay(grouped)
+        wall = time.perf_counter() - t0
+        rows[policy] = {"prefix_hit_rate": fleet.prefix_hit_rate(),
+                        "event_digest": fleet.event_digest(),
+                        "preemptions": rep.preemptions,
+                        "p50_ttft": rep.p50_ttft, "p99_ttft": rep.p99_ttft,
+                        "p50_tpot": rep.p50_tpot, "p99_tpot": rep.p99_tpot,
+                        "makespan": rep.makespan, "n_tokens": rep.n_tokens,
+                        "routed": fleet.n_routed_to,
+                        "wall_s": wall, "tok_s": rep.n_tokens / wall}
+    return {"n_replicas": n_replicas, "n_requests": n_requests,
+            "n_groups": 4, "n1_parity": n1_parity, "policies": rows}
 
 
 def _telemetry_paths(json_out: str) -> tuple[str, str]:
@@ -573,6 +638,17 @@ def main():
           + ("" if server["parity"] else
              " — WARNING: diverged from batch serve"))
 
+    # multi-replica fleet routing (DESIGN.md §15)
+    fleet = bench_fleet(model, params, seed=args.seed)
+    fp = fleet["policies"]
+    print(f"[fleet] {fleet['n_replicas']} replicas, {fleet['n_requests']} "
+          f"grouped-prefix arrivals: prefix routing hit rate "
+          f"{100 * fp['prefix']['prefix_hit_rate']:.0f}% vs round-robin "
+          f"{100 * fp['round_robin']['prefix_hit_rate']:.0f}%, "
+          f"{fp['prefix']['tok_s']:.1f} tok/s wall"
+          + ("" if fleet["n1_parity"] else
+             " — WARNING: fleet(N=1) diverged from the single server"))
+
     print(f"\n{'backend':<10} {'batch':>5} {'tok/s':>10} {'ms/request':>12}")
     for name, B, tps, lat in rows:
         print(f"{name:<10} {B:>5} {tps:>10.1f} {lat:>12.1f}")
@@ -590,7 +666,7 @@ def main():
             "seed_speedup_at_8": speedup_at_8,
             "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
                       "pool_utilization": util, "prefix_hit_rate": hit},
-            "spec": spec, "server": server})
+            "spec": spec, "server": server, "fleet": fleet})
         mpath, tpath = _telemetry_paths(args.json_out)
         tel.export_metrics(mpath)
         tel.export_trace(tpath)
@@ -684,6 +760,23 @@ def smoke(model, cfg, params, rng, json_out="", seed=0,
         fails.append("seed-0 trace produced no preemptions — the "
                      "scheduler gate is vacuous")
 
+    # --- multi-replica fleet (DESIGN.md §15) ---------------------------------
+    # fleet(N=1) must reduce to the single server, and prefix-aware
+    # routing must beat round-robin on the grouped shared-prefix workload
+    fleet = bench_fleet(model, params, seed=seed)
+    hit_p = fleet["policies"]["prefix"]["prefix_hit_rate"]
+    hit_rr = fleet["policies"]["round_robin"]["prefix_hit_rate"]
+    print(f"[smoke] fleet: N=1 parity {fleet['n1_parity']}, prefix routing "
+          f"hit rate {100 * hit_p:.0f}% vs round-robin {100 * hit_rr:.0f}% "
+          f"(need prefix > round-robin)")
+    if not fleet["n1_parity"]:
+        fails.append("fleet(N=1) report diverged from the single Server on "
+                     "the contended trace")
+    if hit_p <= hit_rr:
+        fails.append(f"prefix-aware routing hit rate {hit_p:.3f} did not "
+                     f"beat round-robin {hit_rr:.3f} on the grouped "
+                     "shared-prefix workload")
+
     # --- telemetry overhead gate (DESIGN.md §13) -----------------------------
     over = telemetry_overhead(model, params, seed=seed)
     print(f"[smoke] telemetry: off {over['telemetry_off_tok_s']:.1f} vs on "
@@ -710,7 +803,7 @@ def smoke(model, cfg, params, rng, json_out="", seed=0,
             "mode": "smoke",
             "paged": {"kv_peak_bytes": peak, "bf16_slab_bytes": slab,
                       "reduction_x": ratio, "prefix_hit_rate": hit},
-            "spec": spec, "server": server,
+            "spec": spec, "server": server, "fleet": fleet,
             "telemetry_overhead": over, "probe_overhead": pover,
             "fails": fails})
         mpath, tpath = _telemetry_paths(json_out)

@@ -39,6 +39,18 @@ Knobs:
                                      TTFT/TPOT/SLO report prints after the
                                      drain.  The wall clock is only read
                                      HERE; serving/ itself is clockless.
+    --replicas N                     --server only: a FleetRouter over N
+                                     independent engine replicas
+                                     (DESIGN.md §15) — load- and
+                                     prefix-aware routing, fleet-level
+                                     report aggregation
+    --route-policy {prefix,round_robin}
+                                     fleet routing policy
+    --drain-at T:REP                 drain replica REP at virtual time T
+                                     (repeatable): stop admitting, let its
+                                     running requests finish
+    --scale-at T:REP                 join a fresh replica REP at virtual
+                                     time T (repeatable)
     --probes                         in-graph numerics probes (DESIGN.md
                                      §14): per-layer activation-saturation,
                                      int32-accumulator-headroom, and int8-KV
@@ -68,6 +80,9 @@ CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --server --traffic poisson --rate 40 --requests 16 --paged \
         --priority-levels 2 --slo-ttft 0.3
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --server --replicas 3 --paged --rate 80 --requests 24 \
+        --drain-at 0.4:r0 --scale-at 0.6:r3
 """
 
 from __future__ import annotations
@@ -122,9 +137,21 @@ def report_numerics(engine, out_path=""):
         print(f"[numerics] report -> {out_path}")
 
 
-def run_server(args, engine, cfg):
-    """--server mode: drain a traffic trace through the scheduler and
-    report.  The ONLY wall-clock reads live here, outside serving/."""
+def _parse_at(specs, what):
+    """['0.5:r0', ...] -> [(0.5, 'r0'), ...] for --drain-at/--scale-at."""
+    out = []
+    for s in specs:
+        t, _, rep = s.partition(":")
+        if not rep:
+            raise SystemExit(f"{what} wants TIME:REPLICA, got {s!r}")
+        out.append((float(t), rep))
+    return out
+
+
+def run_server(args, engine, cfg, mk_engine):
+    """--server mode: drain a traffic trace through the scheduler (one
+    Server, or a FleetRouter over --replicas of them) and report.  The
+    ONLY wall-clock reads live here, outside serving/."""
     from repro.serving.server import Server, load_trace, poisson_trace
 
     if args.traffic == "replay":
@@ -145,11 +172,26 @@ def run_server(args, engine, cfg):
     if args.metrics_out or args.trace_out or args.probes:
         from repro.serving.telemetry import Telemetry
         tel = Telemetry()
-    srv = Server(engine, quantum=args.quantum, preempt=args.preempt,
-                 telemetry=tel)
-    t0 = time.time()
-    rep = srv.replay(trace)
-    wall = time.time() - t0
+    fleet = None
+    if args.replicas > 1 or args.drain_at or args.scale_at:
+        from repro.serving import Fleet
+        engines = {f"r{i}": engine if i == 0 else mk_engine()
+                   for i in range(args.replicas)}
+        fleet = Fleet(engines, quantum=args.quantum, preempt=args.preempt,
+                      telemetry=tel, policy=args.route_policy)
+        scale = [(t, rep, mk_engine)
+                 for t, rep in _parse_at(args.scale_at, "--scale-at")]
+        t0 = time.time()
+        rep = fleet.replay(trace,
+                           drain_at=_parse_at(args.drain_at, "--drain-at"),
+                           scale_at=scale)
+        wall = time.time() - t0
+    else:
+        srv = Server(engine, quantum=args.quantum, preempt=args.preempt,
+                     telemetry=tel)
+        t0 = time.time()
+        rep = srv.replay(trace)
+        wall = time.time() - t0
     print(f"[server] {rep.n_requests} requests / {rep.n_tokens} tokens "
           f"drained in {wall:.2f}s wall ({rep.n_tokens / wall:.1f} tok/s), "
           f"virtual makespan {rep.makespan:.3f}s")
@@ -161,7 +203,17 @@ def run_server(args, engine, cfg):
           f"{rep.pages_swapped_in} back in, SLO attainment "
           f"{100 * rep.slo_attainment:.0f}%")
     print(f"[server] admission order: {rep.admission_order}")
-    if engine.paged:
+    if fleet is not None:
+        for r, s in sorted(fleet.replica_stats().items()):
+            print(f"[fleet] {r}: {s['routed']} routed"
+                  + (", draining" if s["draining"] else "")
+                  + f", {s['preemptions']} preemptions, swap out/in "
+                  f"{s['pages_swapped_out']}/{s['pages_swapped_in']} pages")
+        if engine.paged:
+            print(f"[fleet] routing policy {args.route_policy}: fleet-wide "
+                  f"prefix hit rate {100 * fleet.prefix_hit_rate():.0f}%, "
+                  f"event digest {fleet.event_digest()[:16]}")
+    elif engine.paged:
         st = engine.pool.stats
         print(f"[kv] pool peak {st.peak_pages_in_use}/"
               f"{engine.pool.usable_pages} pages, prefix hit rate "
@@ -178,7 +230,7 @@ def run_server(args, engine, cfg):
         print(tel.summary())
     if args.probes:
         report_numerics(engine, args.numerics_out)
-    h = srv.sched.handles[0]
+    h = fleet.handles[0] if fleet is not None else srv.sched.handles[0]
     print("sample:", h.prompt, "->", h.tokens)
 
 
@@ -224,6 +276,21 @@ def main():
                     help="JSON trace for --traffic replay "
                          "(serving.server.save_trace format)")
     ap.add_argument("--priority-levels", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="--server only: serve through a FleetRouter over "
+                         "N independent engine replicas (DESIGN.md §15)")
+    ap.add_argument("--route-policy", default="prefix",
+                    choices=("prefix", "round_robin"),
+                    help="fleet routing: longest cached prompt prefix "
+                         "(ties: load, then free pages) or round-robin")
+    ap.add_argument("--drain-at", action="append", default=[],
+                    metavar="T:REP",
+                    help="drain replica REP at virtual time T (repeatable), "
+                         "e.g. --drain-at 0.5:r0")
+    ap.add_argument("--scale-at", action="append", default=[],
+                    metavar="T:REP",
+                    help="join a fresh replica named REP at virtual time T "
+                         "(repeatable), e.g. --scale-at 0.8:r4")
     ap.add_argument("--quantum", type=int, default=1,
                     help="decode tokens per scheduling round")
     ap.add_argument("--preempt", default=True,
@@ -264,6 +331,12 @@ def main():
                  "add --server")
     if args.numerics_out and not args.probes:
         ap.error("--numerics-out reports the probe counters; add --probes")
+    if ((args.replicas > 1 or args.drain_at or args.scale_at)
+            and not args.server):
+        ap.error("--replicas/--drain-at/--scale-at drive the fleet router; "
+                 "add --server")
+    if args.replicas < 1:
+        ap.error("--replicas wants at least 1")
     if args.probes and args.spec_draft != "none":
         ap.error("numerics probes instrument the plain decode loops; drop "
                  "--spec-draft for --probes")
@@ -322,16 +395,19 @@ def main():
     max_len = (args.prompt_len + args.max_new + 8
                + (args.spec_k if spec else 0))
     max_len += (-max_len) % args.tp        # the cache S axis shards over tp
-    engine = ServeEngine(model, params, max_len=max_len,
-                         temperature=args.temperature, mesh=mesh,
-                         backend=args.backend, max_batch=args.max_batch,
-                         paged=args.paged, page_size=args.page_size,
-                         kv_dtype=args.kv_dtype,
-                         prefix_cache=args.prefix_cache,
-                         top_k=args.top_k, top_p=args.top_p, spec=spec,
-                         probes=args.probes)
+    def mk_engine():
+        return ServeEngine(model, params, max_len=max_len,
+                           temperature=args.temperature, mesh=mesh,
+                           backend=args.backend, max_batch=args.max_batch,
+                           paged=args.paged, page_size=args.page_size,
+                           kv_dtype=args.kv_dtype,
+                           prefix_cache=args.prefix_cache,
+                           top_k=args.top_k, top_p=args.top_p, spec=spec,
+                           probes=args.probes)
+
+    engine = mk_engine()
     if args.server:
-        run_server(args, engine, cfg)
+        run_server(args, engine, cfg, mk_engine)
         return
     rng = np.random.default_rng(args.seed)
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len)]

@@ -5,11 +5,14 @@ request scheduler/server (§11)."""
 
 from repro.serving.compress import to_codebook_params, index_dtype_for
 from repro.serving.engine import SchedState, ServeEngine, SwapBlob
-from repro.serving.kvcache import Admission, PagePool, PoolStats
+from repro.serving.fleet import Fleet, ReplicaProbe
+from repro.serving.kvcache import Admission, PagePool, PoolStats, chain_keys
+from repro.serving.router import FleetRouter
 from repro.serving.scheduler import (AsyncScheduler, RequestHandle,
                                      StepCosts, VirtualClock)
-from repro.serving.server import (Server, ServerReport, load_trace,
-                                  poisson_trace, save_trace)
+from repro.serving.server import (Server, ServerReport, iter_trace,
+                                  load_trace, poisson_trace,
+                                  poisson_trace_iter, save_trace)
 from repro.serving.spec import SpecConfig, SpecStats
 from repro.serving.telemetry import NULL_TELEMETRY, Telemetry
 from repro.kernels.dispatch import (BACKENDS, BackendSpec, LutSpec,

@@ -135,12 +135,15 @@ class SchedState:
     (DESIGN.md §11).  One per scheduler session; every field is reassigned
     by the engine's ``sched_*`` calls — callers treat it as opaque.
 
-    ``live`` is the host-side occupancy mirror (which slots hold a
-    request); the per-slot device vectors mirror the ``serve()`` loop's
-    carry.  Contiguous engines own ``cache`` (KV slab + per-slot pos);
-    paged engines own the page-table mirror ``pt_np``, the per-slot
-    ``pos`` vector, and the per-slot ``Admission`` handles (the pool
-    itself lives on the engine)."""
+    The per-slot vectors are HOST numpy mirrors of the ``serve()`` loop's
+    carry: admissions/releases/swaps touch one slot at a time, and plain
+    indexed writes are free where eager device scatters cost a dispatch
+    each (the fleet path admits 100k+ requests per trace).  The jitted
+    decode loop converts them on entry; ``serve_step`` writes the round's
+    results back.  Contiguous engines own ``cache`` (device KV slab +
+    per-slot pos); paged engines own the page-table mirror ``pt_np``, the
+    per-slot ``pos`` vector, and the per-slot ``Admission`` handles (the
+    pool itself lives on the engine)."""
 
     live: object                     # (B,) np.bool_ — slot occupied
     last: object                     # (B,) int32 — last sampled token
@@ -150,7 +153,7 @@ class SchedState:
     key: object                      # PRNG carry (temperature > 0)
     cache: dict | None = None        # contiguous KV cache (with (B,) pos)
     pt_np: object | None = None      # paged (B, P) page-table host mirror
-    pos: object | None = None        # paged per-slot positions (device)
+    pos: object | None = None        # paged per-slot positions (host)
     adm: list | None = None          # paged per-slot Admission handles
 
 
@@ -1076,15 +1079,20 @@ class ServeEngine:
                 "the step-level API drives plain decode rounds; "
                 "speculative serve() remains a batch mode")
         B = self.max_batch
-        z = jnp.zeros((B,), jnp.int32)
+        # per-slot vectors live as HOST mirrors: sched_admit/release/swap
+        # touch one slot at a time, and eager device scatters would cost a
+        # dispatch each (the fleet admits 100k+ requests per trace).  The
+        # jitted decode loop converts them on entry; serve_step writes the
+        # round's results back (it already syncs them for harvesting).
         st = SchedState(
-            live=np.zeros((B,), bool), last=z, n_gen=z,
-            stops=jnp.ones((B,), jnp.int32),
-            out=jnp.zeros((B, self.max_len), jnp.int32),
+            live=np.zeros((B,), bool), last=np.zeros((B,), np.int32),
+            n_gen=np.zeros((B,), np.int32),
+            stops=np.ones((B,), np.int32),
+            out=np.zeros((B, self.max_len), np.int32),
             key=jax.random.PRNGKey(0) if key is None else key)
         if self.paged:
             st.pt_np = np.zeros((B, self.pool.pages_per_slot), np.int32)
-            st.pos = jnp.zeros((B,), jnp.int32)
+            st.pos = np.zeros((B,), np.int32)
             st.adm = [None] * B
         else:
             cache = self._place_kv(self.model.init_cache(
@@ -1105,12 +1113,12 @@ class ServeEngine:
             st.adm[slot] = adm
             st.pt_np[slot] = 0
             st.pt_np[slot, :len(adm.pids)] = adm.pids
-            st.pos = st.pos.at[slot].set(len(prompt))
-            st.last = st.last.at[slot].set(first)
-            st.n_gen = st.n_gen.at[slot].set(1)
-            st.stops = st.stops.at[slot].set(stop)
-            st.out = st.out.at[slot].set(
-                jnp.zeros((self.max_len,), jnp.int32).at[0].set(first))
+            st.pos[slot] = len(prompt)
+            st.last[slot] = first
+            st.n_gen[slot] = 1
+            st.stops[slot] = stop
+            st.out[slot] = 0
+            st.out[slot, 0] = first
         else:
             toks1, len1 = self._pad_prompts([list(prompt)])
             lg1, c1 = self._prefill(self.params, toks1, len1,
@@ -1118,10 +1126,12 @@ class ServeEngine:
             c1 = self._ps_extract(c1)
             st.key, sub = jax.random.split(st.key)
             firstd = self._sample(lg1, sub)
-            act = jnp.asarray(st.live) & (st.n_gen < st.stops)
-            st.cache, st.last, _, st.n_gen, st.stops, st.out = self._admit(
+            act = st.live & (st.n_gen < st.stops)
+            st.cache, last, _, n_gen, stops, out = self._admit(
                 st.cache, c1, slot, firstd[0], stop,
                 st.last, act, st.n_gen, st.stops, st.out)
+            st.last, st.n_gen = np.array(last), np.array(n_gen)
+            st.stops, st.out = np.array(stops), np.array(out)
             first = int(firstd[0])
         st.live[slot] = True
         return first
@@ -1134,29 +1144,32 @@ class ServeEngine:
         Returns ``(tokens, finished)``: the new tokens per slot this
         round, and the slots whose requests hit their true stop (the
         caller must harvest and ``sched_release`` them)."""
-        act = jnp.asarray(st.live) & (st.n_gen < st.stops)
-        if not bool(jnp.any(act)):
+        act = st.live & (st.n_gen < st.stops)
+        if not act.any():
             return {}, []
-        prev = np.asarray(st.n_gen).copy()
-        round_stops = jnp.minimum(st.stops, st.n_gen + quantum)
+        prev = st.n_gen.copy()
+        round_stops = np.minimum(st.stops, st.n_gen + quantum)
         if self.paged:
             cache = {**self.pool.cache, "page_table": jnp.asarray(st.pt_np),
-                     "pos": st.pos}
+                     "pos": jnp.asarray(st.pos)}
         else:
             cache = st.cache
         cache = self._ps_inject(cache)
-        cache, st.last, _, st.n_gen, st.out, st.key = self._decode_loop(
+        cache, last, _, n_gen, out, st.key = self._decode_loop(
             self.params, cache, st.last, act, st.n_gen, round_stops,
             st.out, st.key, stop_on_event=False)
         cache = self._ps_extract(cache)
+        # np.asarray over a device array is a read-only view — copy so the
+        # slot-wise sched_* writes stay plain numpy assignments
+        st.last, st.n_gen = np.array(last), np.array(n_gen)
+        st.out = np.array(out)
         if self.paged:
-            st.pos = cache["pos"]
+            st.pos = np.array(cache["pos"])
             self.pool.cache = {k: v for k, v in cache.items()
                                if k not in ("page_table", "pos")}
         else:
             st.cache = cache
-        gen, stops = np.asarray(st.n_gen), np.asarray(st.stops)
-        out_np = np.asarray(st.out)
+        gen, stops, out_np = st.n_gen, st.stops, st.out
         toks, done = {}, []
         for b in range(len(st.live)):
             if not st.live[b]:
@@ -1182,7 +1195,7 @@ class ServeEngine:
             self.pool.retire(st.adm[slot])
             st.adm[slot] = None
             st.pt_np[slot] = 0
-            st.pos = st.pos.at[slot].set(0)
+            st.pos[slot] = 0
         else:
             st.cache = {**st.cache,
                         "pos": st.cache["pos"].at[slot].set(0)}
@@ -1194,13 +1207,13 @@ class ServeEngine:
         prefix-cache hashes survive — ``PagePool.swap_out``).  The copy
         happens strictly before the release: a released page can be
         re-allocated and overwritten immediately."""
-        gen = int(np.asarray(st.n_gen)[slot])
-        stop = int(np.asarray(st.stops)[slot])
-        last = int(np.asarray(st.last)[slot])
-        out_row = np.asarray(st.out)[slot, :gen].copy()
+        gen = int(st.n_gen[slot])
+        stop = int(st.stops[slot])
+        last = int(st.last[slot])
+        out_row = st.out[slot, :gen].copy()
         if self.paged:
             pool, adm = self.pool, st.adm[slot]
-            pos = int(np.asarray(st.pos)[slot])
+            pos = int(st.pos[slot])
             n_data = -(-pos // self.page_size)
             reserve = adm.reserve
             pids = np.zeros((pool.pages_per_slot,), np.int32)
@@ -1210,7 +1223,7 @@ class ServeEngine:
             pool.swap_out(adm)
             st.adm[slot] = None
             st.pt_np[slot] = 0
-            st.pos = st.pos.at[slot].set(0)
+            st.pos[slot] = 0
             blob = SwapBlob(paged=True, pos=pos, stop=stop, n_gen=gen,
                             last=last, reserve=reserve, n_pages=n_data,
                             out_row=out_row, data=data)
@@ -1254,7 +1267,7 @@ class ServeEngine:
             st.adm[slot] = adm
             st.pt_np[slot] = 0
             st.pt_np[slot, :len(adm.pids)] = adm.pids
-            st.pos = st.pos.at[slot].set(blob.pos)
+            st.pos[slot] = blob.pos
         else:
             kv = {}
             for k, v in st.cache["kv"].items():
@@ -1264,12 +1277,11 @@ class ServeEngine:
                 kv[k] = jnp.asarray(pad)
             c1 = {"kv": kv, "pos": jnp.asarray([blob.pos], jnp.int32)}
             st.cache = self._restore_slot(st.cache, c1, slot)
-        row = np.zeros((self.max_len,), np.int32)
-        row[:blob.n_gen] = blob.out_row
-        st.out = st.out.at[slot].set(jnp.asarray(row))
-        st.last = st.last.at[slot].set(blob.last)
-        st.n_gen = st.n_gen.at[slot].set(blob.n_gen)
-        st.stops = st.stops.at[slot].set(blob.stop)
+        st.out[slot] = 0
+        st.out[slot, :blob.n_gen] = blob.out_row
+        st.last[slot] = blob.last
+        st.n_gen[slot] = blob.n_gen
+        st.stops[slot] = blob.stop
         st.live[slot] = True
         return True
 

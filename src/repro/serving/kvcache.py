@@ -71,13 +71,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PagePool", "PoolStats", "Admission"]
+__all__ = ["PagePool", "PoolStats", "Admission", "chain_keys"]
 
 _ROOT = ("root",)            # hash-chain seed for page 0 of every prompt
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def chain_keys(tokens, page_size: int) -> tuple[list, tuple | None]:
+    """The prompt's content-addressed prefix chain: one key per FULL page
+    (page c keyed by ``(key(c−1), tokens_in_page_c)``) plus the partial
+    tail page's key when the prompt is not page-aligned, else None.
+
+    This is THE key construction — ``PagePool.admit`` plans with it and
+    the fleet router (serving/router.py) scores replica affinity with it,
+    so a router-predicted hit is exactly an admit-time hit."""
+    page = int(page_size)
+    n_full = len(tokens) // page
+    keys, key = [], _ROOT
+    for c in range(n_full):
+        key = (key, tuple(tokens[c * page:(c + 1) * page]))
+        keys.append(key)
+    rem = len(tokens) % page
+    partial = None
+    if rem:
+        partial = (keys[-1] if n_full else _ROOT,
+                   tuple(tokens[n_full * page:]))
+    return keys, partial
 
 
 @dataclasses.dataclass
@@ -279,6 +301,25 @@ class PagePool:
             self.table.move_to_end(key)               # LRU touch
         return pid
 
+    def prefix_match_pages(self, tokens) -> int:
+        """How many leading prompt pages this pool already holds: full
+        pages matched along the hash chain, plus the partial tail when
+        every full page before it matched — the same count ``admit``
+        would share.  Read-only: no LRU touch, no refcount change, so a
+        router may probe every replica's pool without perturbing any
+        pool's eviction order (serving/router.py)."""
+        if not self.prefix_enabled:
+            return 0
+        keys, partial = chain_keys(tokens, self.page_size)
+        matched = 0
+        for key in keys:
+            if key not in self.table:
+                return matched
+            matched += 1
+        if partial is not None and partial in self.table:
+            matched += 1
+        return matched
+
     def _register(self, key, pid: int):
         if key in self.table or pid in self.key_of:
             return                                    # racer already cached it
@@ -310,15 +351,8 @@ class PagePool:
                 f"the pool {self.usable_pages}")
 
         n_full = plen // page
-        keys, key = [], _ROOT
-        for c in range(n_full):
-            key = (key, tuple(tokens[c * page:(c + 1) * page]))
-            keys.append(key)
         rem = plen % page
-        partial_key = None
-        if rem:
-            partial_key = (keys[-1] if n_full else _ROOT,
-                           tuple(tokens[n_full * page:]))
+        keys, partial_key = chain_keys(tokens, page)
 
         for use_prefix in ((True, False) if self.prefix_enabled else
                            (False,)):

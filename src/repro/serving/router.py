@@ -1,0 +1,96 @@
+"""Fleet routing policy: prefix- and load-aware replica choice
+(DESIGN.md §15).
+
+``FleetRouter`` picks which of N replicas receives each request.  It
+sees replicas only through small probe objects (load, free pages,
+prefix-match length), so the policy is testable over stub engines
+(tests/test_fleet.py) and the fleet facade (serving/fleet.py) just wires
+real ``AsyncScheduler``/``PagePool`` probes in.
+
+Policy — deterministic and replica-order-independent by construction:
+
+* **prefix** (default): score every admitting replica by
+  ``(prefix pages already cached, -unfinished load, free pages)`` and
+  take the maximum; the prefix length uses the PagePool's own
+  content-addressed hash chain (``kvcache.chain_keys``), so a predicted
+  hit is exactly an admit-time hit.  Ties fall to the lexicographically
+  smallest replica id.
+* **round_robin**: cycle through admitting replicas in sorted-id order
+  — the baseline the prefix policy is benchmarked against
+  (benchmarks/serve_throughput.py ``bench_fleet``).
+
+Candidates are always enumerated in sorted-id order, never dict
+insertion order, so a fleet constructed with its replicas permuted
+routes identically — the acceptance property tests/test_fleet.py pins.
+
+**Drain** removes a replica from the candidate set without touching its
+queue: in-flight and already-queued requests finish (or swap out and
+resume) on the replica itself; only NEW routes skip it.  **Scale-up**
+(``add``) makes a replica a candidate immediately.  The virtual-clock
+rule applies here as everywhere under ``serving/``: nothing reads the
+wall, so route decisions replay bit-identically.
+"""
+
+from __future__ import annotations
+
+__all__ = ["FleetRouter", "POLICIES"]
+
+POLICIES = ("prefix", "round_robin")
+
+
+class FleetRouter:
+    """Replica chooser over probe objects.
+
+    A probe must expose ``load()`` (unfinished requests assigned),
+    ``free_pages()`` (claimable capacity), and
+    ``prefix_match_pages(tokens)`` (leading prompt pages the replica's
+    pool already holds).  ``serving/fleet.py.ReplicaProbe`` adapts the
+    real engine stack; tests drive stubs."""
+
+    def __init__(self, policy: str = "prefix"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {POLICIES}")
+        self.policy = policy
+        self.probes: dict[str, object] = {}
+        self.draining: set[str] = set()
+        self.n_routed = 0                    # doubles as the RR cursor
+
+    # --- membership ----------------------------------------------------------
+
+    def add(self, rep: str, probe) -> None:
+        if rep in self.probes:
+            raise ValueError(f"replica {rep!r} already registered")
+        self.probes[rep] = probe
+
+    def drain(self, rep: str) -> None:
+        """Stop routing to ``rep``.  Its queued/running requests are
+        untouched — the replica drains itself."""
+        if rep not in self.probes:
+            raise KeyError(f"unknown replica {rep!r}")
+        self.draining.add(rep)
+
+    @property
+    def admitting(self) -> list[str]:
+        """Routable replica ids, in the canonical (sorted) order every
+        routing decision iterates."""
+        return [r for r in sorted(self.probes) if r not in self.draining]
+
+    # --- the decision --------------------------------------------------------
+
+    def route(self, prompt) -> str:
+        """Choose the replica for one request's prompt."""
+        reps = self.admitting
+        if not reps:
+            raise RuntimeError("no admitting replica (all drained?)")
+        if self.policy == "round_robin":
+            rep = reps[self.n_routed % len(reps)]
+        else:
+            # max() keeps the FIRST maximum, and reps is sorted, so full
+            # ties deterministically fall to the smallest replica id.
+            rep = max(reps, key=lambda r: (
+                self.probes[r].prefix_match_pages(prompt),
+                -self.probes[r].load(),
+                self.probes[r].free_pages()))
+        self.n_routed += 1
+        return rep

@@ -224,14 +224,22 @@ class AsyncScheduler:
 
     def submit(self, prompt, max_new: int, *, priority: int = 0,
                arrival: float | None = None, slo_ttft: float | None = None,
-               slo_tpot: float | None = None,
-               on_token=None) -> RequestHandle:
+               slo_tpot: float | None = None, on_token=None,
+               allow_past_arrival: bool = False) -> RequestHandle:
         """Register one request.  ``arrival`` defaults to now; a future
         arrival is held back until the clock reaches it.  Raises
-        immediately for a request that could never fit the engine."""
+        immediately for a request that could never fit the engine.
+
+        ``allow_past_arrival`` is the fleet-router path (serving/fleet.py):
+        a router that routes a request the moment the clock reaches its
+        arrival may hand it over slightly AFTER that instant (a replica's
+        decode round advanced the shared clock first), and the handle must
+        keep the ORIGINAL arrival so TTFT spans the routing delay.  A past
+        arrival is harvested on the next round; for direct users it stays
+        an error."""
         self.engine.sched_check(prompt, max_new)
         t = self.clock.now() if arrival is None else float(arrival)
-        if t < self.clock.now():
+        if t < self.clock.now() and not allow_past_arrival:
             raise ValueError(
                 f"arrival {t} is in the past (now={self.clock.now()})")
         h = RequestHandle(self, self._seq, prompt, max_new,
@@ -424,11 +432,18 @@ class AsyncScheduler:
 
     # --- the loop ------------------------------------------------------------
 
-    def step(self) -> bool:
+    def step(self, more_arrivals: bool = False) -> bool:
         """One scheduling round: harvest arrivals, admit (preempting if
         needed), decode one quantum, stream new tokens, harvest
         finishers.  Returns False once fully idle (nothing pending,
-        queued, or in flight)."""
+        queued, or in flight).
+
+        ``more_arrivals``: the caller (a fleet, serving/fleet.py) still
+        has traffic or clock advances to inject from OUTSIDE this
+        scheduler.  A round that makes no progress with a non-empty
+        queue then returns False instead of raising — a higher-priority
+        arrival may yet become the head and unblock placement — and the
+        caller owns starvation detection once its traffic runs out."""
         tel = self.telemetry
         t_round0 = self.clock.now()
         self._harvest()
@@ -483,6 +498,8 @@ class AsyncScheduler:
             return True
         if not (self.ready or self.running):
             return False
+        if more_arrivals:
+            return False                     # the caller has more to inject
         raise RuntimeError(
             "scheduler stalled: admission blocked with no request in "
             "flight and no future arrivals")

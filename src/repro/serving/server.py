@@ -24,8 +24,9 @@ import numpy as np
 
 from repro.serving.scheduler import AsyncScheduler, VirtualClock
 
-__all__ = ["Server", "ServerReport", "poisson_trace", "save_trace",
-           "load_trace", "contended_trace", "CONTENDED_ENGINE_KW"]
+__all__ = ["Server", "ServerReport", "poisson_trace", "poisson_trace_iter",
+           "save_trace", "load_trace", "iter_trace", "contended_trace",
+           "CONTENDED_ENGINE_KW"]
 
 # The reference contended workload: an engine one notch too small for
 # the trace below, so admissions queue and priority preemptions fire.
@@ -45,36 +46,95 @@ def contended_trace(seed: int, vocab: int, **over) -> list[dict]:
                          max_new=(2, 10), priorities=(0, 1), **over)
 
 
+def poisson_trace_iter(seed: int, n: int, *, rate: float = 20.0,
+                       vocab: int = 512, plen=(2, 10), max_new=(2, 12),
+                       priorities=(0,), slo_ttft: float | None = None,
+                       slo_tpot: float | None = None, shared_prefix=()):
+    """Streamed form of ``poisson_trace``: yields one row at a time with
+    O(1) rows live, so 100k+-request fleet traces (tests/test_fleet_scale
+    .py) never materialize in RAM.  Same seed → the same row sequence as
+    the list form, element for element.  ``shared_prefix``: tokens
+    prepended to every prompt (the shared-system-prompt workload the
+    prefix-aware router is measured on).  Arrivals are non-decreasing by
+    construction — what ``Fleet.replay`` requires of a streamed trace."""
+    rng = np.random.default_rng(seed)
+    prefix = [int(x) for x in shared_prefix]
+    t = 0.0
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        pl = int(rng.integers(plen[0], plen[1] + 1))
+        yield {
+            "arrival": round(t, 9),
+            "prompt": prefix + [int(x) for x in rng.integers(0, vocab, pl)],
+            "max_new": int(rng.integers(max_new[0], max_new[1] + 1)),
+            "priority": int(rng.choice(priorities)),
+            "slo_ttft": slo_ttft, "slo_tpot": slo_tpot}
+
+
 def poisson_trace(seed: int, n: int, *, rate: float = 20.0,
                   vocab: int = 512, plen=(2, 10), max_new=(2, 12),
                   priorities=(0,), slo_ttft: float | None = None,
-                  slo_tpot: float | None = None) -> list[dict]:
+                  slo_tpot: float | None = None,
+                  shared_prefix=()) -> list[dict]:
     """Seeded open-loop Poisson arrival trace: ``n`` requests at ``rate``
     arrivals per (virtual) second, prompt/stop lengths uniform over the
     given inclusive ranges, priority drawn uniformly from
     ``priorities``.  Pure function of its arguments."""
-    rng = np.random.default_rng(seed)
-    t, rows = 0.0, []
-    for _ in range(n):
-        t += float(rng.exponential(1.0 / rate))
-        pl = int(rng.integers(plen[0], plen[1] + 1))
-        rows.append({
-            "arrival": round(t, 9),
-            "prompt": [int(x) for x in rng.integers(0, vocab, pl)],
-            "max_new": int(rng.integers(max_new[0], max_new[1] + 1)),
-            "priority": int(rng.choice(priorities)),
-            "slo_ttft": slo_ttft, "slo_tpot": slo_tpot})
-    return rows
+    return list(poisson_trace_iter(
+        seed, n, rate=rate, vocab=vocab, plen=plen, max_new=max_new,
+        priorities=priorities, slo_ttft=slo_ttft, slo_tpot=slo_tpot,
+        shared_prefix=shared_prefix))
 
 
-def save_trace(path: str, trace: list[dict]) -> None:
+def save_trace(path: str, trace) -> None:
+    """Write a trace (list OR generator) as a JSON array, one row per
+    line — rows stream straight to disk, so saving a 100k+-request
+    generator never materializes it."""
     with open(path, "w") as f:
-        json.dump(trace, f, indent=1)
+        f.write("[")
+        sep = "\n"
+        for row in trace:
+            f.write(sep)
+            json.dump(row, f)
+            sep = ",\n"
+        f.write("\n]\n")
 
 
 def load_trace(path: str) -> list[dict]:
     with open(path) as f:
         return json.load(f)
+
+
+def iter_trace(path: str, chunk: int = 1 << 16):
+    """Stream a JSON-array trace row by row with O(1) rows buffered —
+    the replay-side twin of a generator ``save_trace``.  Accepts any
+    JSON array of objects (not just line-delimited ones)."""
+    dec = json.JSONDecoder()
+    with open(path) as f:
+        buf = f.read(chunk)
+        i = 0
+        while True:
+            while True:                      # skip [ , whitespace
+                while i < len(buf) and buf[i] in " \t\r\n,[":
+                    i += 1
+                if i < len(buf):
+                    break
+                more = f.read(chunk)
+                if not more:
+                    raise ValueError(f"{path}: truncated trace")
+                buf, i = more, 0
+            if buf[i] == "]":
+                return
+            try:
+                row, end = dec.raw_decode(buf, i)
+            except ValueError:
+                more = f.read(chunk)         # row split across the buffer
+                if not more:
+                    raise
+                buf, i = buf[i:] + more, 0
+                continue
+            yield row
+            buf, i = buf[end:], 0
 
 
 @dataclasses.dataclass

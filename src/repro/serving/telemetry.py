@@ -65,6 +65,9 @@ DEFAULT_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128)
 # "counters" carries the "C" (counter-track) samples: load curves
 # (queue depth, pool pressure, batch occupancy) and the §14 numerics
 # series, drawn by Perfetto as area charts beside the lifecycle spans.
+# Scoped tracks (a fleet replica's "r0.requests", "r0.slots", ... —
+# DESIGN.md §15) get pids above these in first-appearance order, which
+# is itself deterministic under a replayed trace.
 TRACKS = {"requests": 1, "slots": 2, "sched": 3, "counters": 4}
 
 
@@ -236,23 +239,35 @@ class Telemetry:
     def to_perfetto(self) -> dict:
         """Chrome trace-event JSON (the format Perfetto opens): "X"
         complete events on one process per track / one thread per
-        request/slot, timestamps in microseconds of *virtual* time."""
+        request/slot, timestamps in microseconds of *virtual* time.
+        Tracks beyond the fixed ``TRACKS`` set (a fleet's per-replica
+        ``r0.requests``/``r0.slots``/... — DESIGN.md §15) are assigned
+        pids in first-appearance order, deterministic under replay."""
         us = lambda t: int(round(t * 1e6))               # noqa: E731
+        tracks = dict(TRACKS)
+        for ev in self._events:                  # scoped-track discovery
+            if ev[0] == "C":
+                continue
+            track = ev[3] if ev[0] == "X" else ev[2]
+            if track not in tracks:
+                tracks[track] = max(tracks.values()) + 1
         events, seen = [], set()
-        for track, pid in sorted(TRACKS.items(), key=lambda kv: kv[1]):
+        for track, pid in sorted(tracks.items(), key=lambda kv: kv[1]):
             events.append({"ph": "M", "pid": pid, "name": "process_name",
                            "args": {"name": track}})
         for ev in self._events:
             if ev[0] == "C":
                 # Counter tracks: Perfetto keys the series on (pid, name);
-                # no thread metadata, the value rides args.value.
+                # no thread metadata, the value rides args.value.  Scoped
+                # series ("r0.sched.queue_depth") stay separate curves —
+                # the UI keys them by name.
                 _, t, name, value = ev
-                events.append({"ph": "C", "pid": TRACKS["counters"],
+                events.append({"ph": "C", "pid": tracks["counters"],
                                "ts": us(t), "name": name,
                                "args": {"value": value}})
                 continue
             track, tid = (ev[3], ev[4]) if ev[0] == "X" else (ev[2], ev[3])
-            pid = TRACKS.get(track, 99)
+            pid = tracks[track]
             if (pid, tid) not in seen:
                 seen.add((pid, tid))
                 events.append({"ph": "M", "pid": pid, "tid": tid,
@@ -280,6 +295,17 @@ class Telemetry:
         with open(path, "w") as f:
             f.write(json.dumps(self.snapshot(), sort_keys=True, indent=1)
                     + "\n")
+
+    # --- scoping (fleet replicas, DESIGN.md §15) -----------------------------
+
+    def scoped(self, scope: str) -> "_ScopedTelemetry":
+        """A facade over THIS registry that prefixes every metric name,
+        provider prefix, span track, and counter series with
+        ``<scope>.`` — one shared snapshot/export, per-scope sections
+        and tracks.  The fleet hands each replica's scheduler
+        ``telemetry.scoped("r0")`` etc., so one Perfetto trace carries
+        every replica's lifecycle spans side by side."""
+        return _ScopedTelemetry(self, scope)
 
     # --- subsystem wiring ----------------------------------------------------
 
@@ -427,6 +453,83 @@ def _kernel_counts(autotune, dispatch, ops) -> dict:
     return out
 
 
+class _ScopedTelemetry:
+    """Name-prefixing view of a shared ``Telemetry`` registry: every
+    counter/gauge/histogram name, provider prefix, span track, and
+    counter-track series gains ``<scope>.``.  State lives in the base
+    registry — ``snapshot``/``event_log``/exports delegate, so a fleet's
+    scoped replicas all land in ONE canonical surface.  Kernel counters
+    stay unscoped (they are process-global; scoping them would invent
+    per-replica numbers that don't exist)."""
+
+    enabled = True
+
+    def __init__(self, base, scope: str):
+        self._base = base
+        self.scope = str(scope)
+
+    def _n(self, name: str) -> str:
+        return f"{self.scope}.{name}"
+
+    def bind_clock(self, clock) -> None:
+        self._base.bind_clock(clock)
+
+    def count(self, name, n=1):
+        self._base.count(self._n(name), n)
+
+    def gauge(self, name, value):
+        self._base.gauge(self._n(name), value)
+
+    def observe(self, name, value, edges=None):
+        self._base.observe(self._n(name), value, edges)
+
+    def add_provider(self, prefix, fn):
+        self._base.add_provider(self._n(prefix), fn)
+
+    def span(self, track, tid, name, t0, t1):
+        self._base.span(self._n(track), tid, name, t0, t1)
+
+    def open_span(self, track, tid, name):
+        self._base.open_span(self._n(track), tid, name)
+
+    def close_span(self, track, tid, name):
+        self._base.close_span(self._n(track), tid, name)
+
+    def instant(self, track, tid, name):
+        self._base.instant(self._n(track), tid, name)
+
+    def counter(self, name, value):
+        self._base.counter(self._n(name), value)
+
+    def attach_engine(self, engine) -> None:
+        """Same wiring as ``Telemetry.attach_engine`` with the providers
+        registered under this scope ("r0.pool", "r0.spec", ...)."""
+        engine.telemetry = self
+        if getattr(engine, "paged", False):
+            self.add_provider("pool", _pool_provider(engine))
+        if getattr(engine, "spec", None) is not None \
+                or getattr(engine, "spec_stats", None) is not None:
+            self.add_provider("spec", _spec_provider(engine))
+        if getattr(engine, "probes", False):
+            self.add_provider("numerics", engine.numerics)
+        self._base.attach_kernel_counters()
+
+    def attach_kernel_counters(self) -> None:
+        self._base.attach_kernel_counters()
+
+    def scoped(self, scope: str) -> "_ScopedTelemetry":
+        return _ScopedTelemetry(self._base, self._n(scope))
+
+    def snapshot(self):
+        return self._base.snapshot()
+
+    def event_log(self):
+        return self._base.event_log()
+
+    def summary(self):
+        return self._base.summary()
+
+
 class _NullTelemetry:
     """The disabled default: every method is a no-op, ``enabled`` is
     False so hot paths skip their aggregation work entirely.  A single
@@ -469,6 +572,9 @@ class _NullTelemetry:
 
     def attach_kernel_counters(self):
         pass
+
+    def scoped(self, scope):
+        return self
 
     def snapshot(self):
         return {}

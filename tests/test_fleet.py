@@ -1,0 +1,418 @@
+"""Fleet-serving suite (DESIGN.md §15, ISSUE 9).
+
+The fleet contract, locked down four ways:
+
+* **Reduction** — ``Fleet`` with one replica IS the single server:
+  token-for-token streams, identical scheduler decisions, identical
+  ``ServerReport`` on the PR 5 contended reference trace.
+* **Determinism** — a seeded 4-replica contended trace replays
+  byte-identically (merged event log, per-request streams, report,
+  digest) across fresh runs AND across permuted replica construction
+  order; drain/scale-up mid-trace replays byte-identically too.  The
+  streamed-trace path produces the same bytes as the list path.
+* **Routing** — prefix-aware routing sends a shared-system-prompt
+  workload to the replicas that already hold the prefix chain: the
+  fleet-wide prefix hit rate must measurably beat round-robin.
+* **Invariants** — a hypothesis state machine walks a fleet of stub
+  engines (REAL ``PagePool`` allocation under each) through
+  route/drain/scale/preempt transitions: no request lost or
+  double-admitted, per-replica page claims conserved, drained replicas
+  reach zero load in bounded rounds.
+
+Swap accounting is cross-checked registry-vs-report: the fleet report
+sums the schedulers' *data*-page counters and never the pools' released
+*reference* counters (the §13 dual-unit rule).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import (Fleet, FleetRouter, ServeEngine, Server,
+                           Telemetry, poisson_trace)
+from repro.serving.kvcache import chain_keys
+from repro.serving.scheduler import FINISHED
+from repro.serving.server import (CONTENDED_ENGINE_KW, contended_trace,
+                                  iter_trace, load_trace,
+                                  poisson_trace_iter, save_trace)
+from test_scheduler_sim import _StubEngine, tiny  # noqa: F401  (fixture)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # direct (non-pytest) imports
+    from _hypothesis_fallback import given, settings, strategies as st
+
+STUB_KW = dict(max_batch=2, n_pages=9, page_size=8)
+
+
+def grouped_trace(seed, n, *, n_groups=4, page=8, rate=100.0, vocab=50,
+                  max_new=(2, 6)):
+    """The shared-system-prompt workload: every request opens with one of
+    ``n_groups`` two-page system prefixes, then a private suffix — the
+    case prefix-aware routing exists for."""
+    rng = np.random.default_rng(seed)
+    prefixes = [[int(x) for x in rng.integers(0, vocab, 2 * page)]
+                for _ in range(n_groups)]
+    t, rows = 0.0, []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        g = int(rng.integers(n_groups))
+        sfx = [int(x) for x in
+               rng.integers(0, vocab, int(rng.integers(1, page)))]
+        rows.append({"arrival": round(t, 9), "prompt": prefixes[g] + sfx,
+                     "max_new": int(rng.integers(max_new[0],
+                                                 max_new[1] + 1)),
+                     "priority": 0, "slo_ttft": None, "slo_tpot": None})
+    return rows
+
+
+# --- prefix-key exposure (kvcache -> router) ----------------------------------
+
+def test_chain_keys_prefix_property():
+    toks = list(range(20))
+    keys, partial = chain_keys(toks, 8)
+    assert len(keys) == 2 and partial is not None
+    assert chain_keys(toks[:8], 8)[0] == keys[:1]
+    assert chain_keys(toks[:16], 8)[0] == keys
+    assert chain_keys([99] + toks[1:], 8)[0][0] != keys[0]
+    assert chain_keys(toks[:16], 8)[1] is None     # aligned: no tail key
+    assert chain_keys(toks[:3], 8) == ([], (("root",), (0, 1, 2)))
+
+
+def test_prefix_match_pages_matches_admit_and_is_read_only():
+    eng = _StubEngine(max_batch=2, n_pages=12, page_size=8)
+    pool = eng.pool
+    toks = list(range(20))                 # 2 full pages + a 4-token tail
+    assert pool.prefix_match_pages(toks) == 0
+    st_ = eng.sched_state()
+    assert eng.sched_admit(st_, 0, toks, 2) is not None
+    eng.sched_release(st_, 0)              # retire registers the tail too
+    assert pool.prefix_match_pages(toks) == 3
+    assert pool.prefix_match_pages(toks[:8]) == 1
+    assert pool.prefix_match_pages(toks[:12]) == 1  # tail (8..11) unknown
+    assert pool.prefix_match_pages([99] + toks[1:]) == 0
+    order = list(pool.table)
+    pool.prefix_match_pages(toks)          # probing must not touch the LRU
+    assert list(pool.table) == order
+
+
+# --- the router policy itself -------------------------------------------------
+
+class _FakeProbe:
+    def __init__(self, match=0, load=0, free=0):
+        self.m, self.l, self.f = match, load, free
+
+    def prefix_match_pages(self, toks):
+        return self.m
+
+    def load(self):
+        return self.l
+
+    def free_pages(self):
+        return self.f
+
+
+def test_router_scoring_and_ties():
+    r = FleetRouter()
+    r.add("r1", _FakeProbe(match=2))
+    r.add("r0", _FakeProbe(match=0, free=5))
+    assert r.route([1]) == "r1"            # prefix beats free pages
+    r.probes["r0"].m = 2
+    r.probes["r1"].l = 1
+    assert r.route([1]) == "r0"            # equal prefix: lighter load wins
+    r.probes["r1"].l = 0
+    assert r.route([1]) == "r0"            # full tie: smallest id, always
+    r.drain("r0")
+    assert r.route([1]) == "r1"
+    r.drain("r1")
+    with pytest.raises(RuntimeError, match="no admitting replica"):
+        r.route([1])
+    with pytest.raises(ValueError, match="unknown policy"):
+        FleetRouter(policy="sticky")
+
+
+def test_router_round_robin_cycles_admitting():
+    r = FleetRouter(policy="round_robin")
+    for rep in ("r2", "r0", "r1"):
+        r.add(rep, _FakeProbe())
+    got = [r.route([1]) for _ in range(6)]
+    assert got == ["r0", "r1", "r2", "r0", "r1", "r2"]
+    r.drain("r1")
+    assert {r.route([1]) for _ in range(4)} == {"r0", "r2"}
+
+
+# --- fleet(N=1) == Server -----------------------------------------------------
+
+def test_fleet_n1_matches_server(tiny):
+    """One-replica fleet == single server on the PR 5 contended trace:
+    same tokens, same scheduler decisions, same report."""
+    model, params, _ = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    srv = Server(ServeEngine(model, params, **CONTENDED_ENGINE_KW))
+    rep_s = srv.replay(trace)
+    fleet = Fleet([ServeEngine(model, params, **CONTENDED_ENGINE_KW)])
+    rep_f = fleet.replay(trace)
+    assert rep_s.preemptions >= 1, "trace is not contended — weak test"
+    assert rep_f.to_json() == rep_s.to_json()
+    assert {frid: h.tokens for frid, h in fleet.handles.items()} == \
+        {h.rid: h.tokens for h in srv.sched.handles.values()}
+    # same decision record: the fleet merely tags + defers submits, every
+    # scheduling event lands at the same instant with the same request
+    decisions = ("arrive", "admit", "preempt", "resume", "finish")
+    assert [(t, k, r) for t, _, k, r in fleet.events if k in decisions] \
+        == [(t, k, r) for t, k, r in srv.sched.events if k in decisions]
+
+
+# --- seeded 4-replica byte-identical replay -----------------------------------
+
+def _fleet_replay(model, params, order, *, policy="prefix", drain_at=(),
+                  scale_at=(), n=24, telemetry=None):
+    engines = {rep: ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+               for rep in order}
+    fleet = Fleet(engines, policy=policy, telemetry=telemetry)
+    trace = poisson_trace(1, n, rate=60.0, vocab=model.cfg.vocab,
+                          plen=(2, 9), max_new=(2, 10), priorities=(0, 1))
+    rep = fleet.replay(trace, drain_at=drain_at, scale_at=scale_at)
+    streams = {frid: list(h.tokens) for frid, h in fleet.handles.items()}
+    return fleet, rep, streams
+
+
+def test_fleet_replay_byte_identical_across_runs_and_replica_order(tiny):
+    """The acceptance criterion: events, streams, report, and digest are
+    identical across two fresh runs AND across a permuted replica
+    construction order."""
+    model, params, _ = tiny
+    runs = [_fleet_replay(model, params, order) for order in
+            (["r0", "r1", "r2", "r3"], ["r0", "r1", "r2", "r3"],
+             ["r2", "r0", "r3", "r1"])]
+    f0, rep0, st0 = runs[0]
+    assert rep0.preemptions >= 1, "fleet trace is not contended — weak test"
+    assert rep0.n_requests == 24
+    for f, rep, st_ in runs[1:]:
+        assert f.events == f0.events
+        assert f.event_digest() == f0.event_digest()
+        assert st_ == st0
+        assert rep.to_json() == rep0.to_json()
+
+
+def test_drain_and_scale_replay_byte_identical(tiny):
+    """Mid-trace drain + scale-up stay inside the determinism contract,
+    the drained replica reaches zero load, and the joiner takes traffic."""
+    model, params, _ = tiny
+    mk = lambda: ServeEngine(model, params,         # noqa: E731
+                             **CONTENDED_ENGINE_KW)
+    runs = [_fleet_replay(model, params, ["r0", "r1"], n=16,
+                          drain_at=[(0.12, "r0")],
+                          scale_at=[(0.18, "r2", mk)]) for _ in range(2)]
+    f0, rep0, st0 = runs[0]
+    f1, rep1, st1 = runs[1]
+    assert f0.events == f1.events and st0 == st1
+    assert f0.event_digest() == f1.event_digest()
+    assert rep0.to_json() == rep1.to_json()
+    assert f0.inflight["r0"] == 0          # drained to zero running
+    assert f0.n_routed_to["r2"] > 0        # the joiner actually serves
+    drained_at = next(t for t, _, k, _ in f0.events if k == "drain")
+    late = [(t, rep) for t, rep, k, _ in f0.events
+            if k == "route" and t > drained_at]
+    assert late and all(rep != "r0" for rep in {r for _, r in late})
+    assert all(h.state == FINISHED for h in f0.handles.values())
+
+
+def test_fleet_streamed_replay_matches_list_replay():
+    """Generator traces (one-row lookahead) and retain=False (digest-only
+    log, handles released) produce the same bytes as the list path."""
+    kw = dict(rate=150.0, vocab=50, plen=(2, 9), max_new=(2, 8),
+              priorities=(0, 1))
+    f_list = Fleet([_StubEngine(**STUB_KW) for _ in range(3)])
+    rep_list = f_list.replay(poisson_trace(5, 300, **kw))
+    f_iter = Fleet([_StubEngine(**STUB_KW) for _ in range(3)],
+                   retain=False)
+    rep_iter = f_iter.replay(poisson_trace_iter(5, 300, **kw))
+    assert f_iter.event_digest() == f_list.event_digest()
+    assert not f_iter.handles and not f_iter.assigned  # released as it ran
+    d = rep_list.to_json()
+    d["admission_order"] = []              # digest-only mode drops the log
+    assert rep_iter.to_json() == d
+
+
+def test_fleet_streamed_replay_rejects_unsorted_arrivals():
+    rows = [{"arrival": 0.2, "prompt": [1, 2], "max_new": 2},
+            {"arrival": 0.1, "prompt": [3, 4], "max_new": 2}]
+    fleet = Fleet([_StubEngine(**STUB_KW)])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        fleet.replay(iter(rows))
+
+
+# --- prefix-aware routing beats round-robin -----------------------------------
+
+def test_prefix_routing_beats_round_robin_on_shared_prefixes():
+    """Four system-prompt groups over four replicas: affinity routing
+    keeps each group's chain hot on one pool; round-robin scatters it.
+    The fleet-wide prefix hit rate must show the gap."""
+    trace = grouped_trace(0, 120)
+    rates = {}
+    for policy in ("prefix", "round_robin"):
+        fleet = Fleet([_StubEngine(max_batch=2, n_pages=10, page_size=8)
+                       for _ in range(4)], policy=policy)
+        fleet.replay(trace)
+        rates[policy] = fleet.prefix_hit_rate()
+    assert rates["prefix"] > rates["round_robin"] + 0.1, rates
+    assert rates["prefix"] > 0.5
+
+
+# --- swap-stat aggregation: registry vs report (§13 dual units) ---------------
+
+def test_fleet_swap_stats_registry_vs_report(tiny):
+    """The fleet report's swap fields are per-replica sums of the
+    schedulers' data-page counters — never the pools' released-reference
+    counters, which count a different unit and would double-dip."""
+    model, params, _ = tiny
+    tel = Telemetry()
+    fleet, rep, _ = _fleet_replay(model, params, ["r0", "r1"], n=24,
+                                  telemetry=tel)
+    assert rep.preemptions >= 1, "no contention — weak test"
+    snap = tel.snapshot()
+    c = snap["counters"]
+    reps = sorted(fleet.replicas)
+    sched_out = sum(c.get(f"{r}.sched.pages_swapped_out", 0) for r in reps)
+    sched_in = sum(c.get(f"{r}.sched.pages_swapped_in", 0) for r in reps)
+    assert rep.pages_swapped_out == sched_out
+    assert rep.pages_swapped_in == sched_in
+    assert rep.preemptions == sum(c.get(f"{r}.sched.preemptions", 0)
+                                  for r in reps)
+    pool_out = sum(snap[f"{r}.pool"]["swapped_out_pages"] for r in reps)
+    # references released >= data pages moved (the reservation tail) —
+    # summing the two vocabularies together would overcount
+    assert pool_out >= sched_out
+    assert rep.pages_swapped_out == sum(
+        s["pages_swapped_out"] for s in fleet.replica_stats().values())
+    assert rep.n_tokens == sum(
+        c.get(f"{r}.engine.tokens", 0) + c.get(f"{r}.sched.admissions", 0)
+        for r in reps)
+
+
+# --- hypothesis state machine over the fleet ----------------------------------
+
+class _FleetWalk:
+    """Random walk over submit/step/drain/scale on stub-engine replicas,
+    checking the fleet invariants after every transition, then a full
+    drain: no request lost or double-admitted, per-replica page claims
+    conserved, drained replicas reach zero load in bounded rounds."""
+
+    def __init__(self, rng):
+        self.rng = rng
+        self.fleet = Fleet({"r0": _StubEngine(**STUB_KW),
+                            "r1": _StubEngine(**STUB_KW)})
+        self.drained = []
+        self.scaled = False
+
+    def submit(self):
+        page = STUB_KW["page_size"]
+        plen = int(self.rng.integers(1, 2 * page + 1))
+        prompt = [int(t) for t in self.rng.integers(0, 3, plen)]
+        dt = float(self.rng.choice([0.0, 0.0, 0.01, 0.05]))
+        self.fleet.submit(prompt, int(self.rng.integers(1, 2 * page + 1)),
+                          priority=int(self.rng.integers(0, 3)),
+                          arrival=self.fleet.clock.now() + dt)
+
+    def step(self):
+        self.fleet.step()
+
+    def drain(self):
+        if len(self.fleet.router.admitting) > 1:
+            rep = self.fleet.router.admitting[
+                int(self.rng.integers(len(self.fleet.router.admitting)))]
+            self.fleet.drain(rep)
+            self.drained.append(rep)
+
+    def scale(self):
+        if not self.scaled:
+            self.fleet.add_replica("r2", _StubEngine(**STUB_KW))
+            self.scaled = True
+
+    def check(self):
+        fleet = self.fleet
+        # -- conservation: every submitted request is unrouted XOR
+        #    assigned to exactly one replica, never dropped, never dual
+        seen = dict(fleet._rows)
+        for frid, (rep, lrid) in fleet.assigned.items():
+            assert frid not in seen, f"request {frid} routed AND pending"
+            h = fleet.replicas[rep].handles[lrid]
+            assert fleet._local2fleet[rep][lrid] == frid
+            seen[frid] = h
+        assert sorted(seen) == list(range(fleet._seq)), "request lost"
+        for rep, sched in fleet.replicas.items():
+            local = fleet._local2fleet[rep]
+            assert len(set(local.values())) == len(local), \
+                f"{rep}: a request admitted twice"
+            unfinished = sum(1 for h in sched.handles.values()
+                             if h.state != FINISHED)
+            assert fleet.inflight[rep] == unfinished
+            # -- per-replica page-claim conservation over the REAL pool
+            pool = sched.engine.pool
+            holders = {}
+            for h in sched.running:
+                adm = sched.st.adm[h.slot]
+                for pid in adm.pids[:adm.n_live]:
+                    assert pid != 0
+                    holders[pid] = holders.get(pid, 0) + 1
+            for pid in range(1, pool.n_pages):
+                want = holders.get(pid, 0) + (1 if pid in pool.key_of
+                                              else 0)
+                assert pool.ref[pid] == want, \
+                    f"{rep}: refcount leak on page {pid}"
+            assert pool.reserved_extra == 0
+        # -- drained replicas take no new work
+        for rep in self.drained:
+            assert rep not in fleet.router.admitting
+
+    def run(self, n_ops=40):
+        ops = [self.submit, self.submit, self.step, self.step, self.step,
+               self.drain, self.scale]
+        self.check()
+        for _ in range(n_ops):
+            ops[self.rng.integers(len(ops))]()
+            self.check()
+        # bounded-rounds drain: every request finishes, drained replicas
+        # hit zero load (a stall fails instead of hanging)
+        self.fleet.run_until_idle(max_rounds=5000)
+        self.check()
+        assert sum(fleet_h.state == FINISHED
+                   for fleet_h in self.fleet.handles.values()) \
+            == self.fleet._seq
+        for h in self.fleet.handles.values():
+            assert len(h.tokens) == h.max_new
+        for rep in self.drained:
+            assert self.fleet.inflight[rep] == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fleet_state_machine_invariants(seed):
+    _FleetWalk(np.random.default_rng(seed)).run()
+
+
+# --- streamed traffic plumbing ------------------------------------------------
+
+def test_poisson_trace_iter_matches_list():
+    kw = dict(rate=30.0, vocab=64, plen=(2, 6), max_new=(1, 5),
+              priorities=(0, 1), slo_ttft=0.5)
+    assert list(poisson_trace_iter(9, 40, **kw)) == \
+        poisson_trace(9, 40, **kw)
+    pref = [7, 7, 7]
+    assert all(r["prompt"][:3] == pref for r in
+               poisson_trace_iter(9, 10, shared_prefix=pref))
+
+
+def test_trace_stream_roundtrip(tmp_path):
+    """save_trace streams a generator to disk; iter_trace streams it back
+    row-identical to load_trace — across buffer-boundary splits too."""
+    trace = poisson_trace(3, 25, vocab=100, priorities=(0, 1),
+                          slo_ttft=0.25)
+    path = str(tmp_path / "trace.json")
+    save_trace(path, iter(trace))          # generator, not a list
+    assert load_trace(path) == trace
+    assert list(iter_trace(path)) == trace
+    assert list(iter_trace(path, chunk=17)) == trace  # force row splits
+    assert json.load(open(path)) == trace  # still one plain JSON array

@@ -89,6 +89,7 @@ def test_no_wall_clock_in_serving():
         for pat in forbidden:
             assert pat not in src, f"{label} reads the wall clock ({pat!r})"
     for must in ("serving/telemetry.py", "serving/probes.py",
+                 "serving/router.py", "serving/fleet.py",
                  "kernels/probes.py"):
         assert must in scanned, \
             f"{must} moved — the no-wall-clock rule no longer covers it"

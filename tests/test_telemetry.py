@@ -281,6 +281,90 @@ def test_null_telemetry_is_inert():
     assert n.event_log() == []
 
 
+# --- fleet telemetry (ISSUE 9) ------------------------------------------------
+
+GOLDEN_FLEET = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "golden_fleet_telemetry.json")
+
+
+def _instrumented_fleet_replay(model, params, trace):
+    """One fresh 2-replica fleet drain with a shared registry: each
+    replica's engine/scheduler/pool series lands under its ``rN.``
+    scope, fleet-level routing counters under ``fleet.``."""
+    from repro.serving import Fleet
+
+    tel = Telemetry()
+    fleet = Fleet([ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+                   for _ in range(2)], telemetry=tel)
+    rep = fleet.replay(trace)
+    return {"snapshot": tel.snapshot_json(),
+            "events": tel.event_log_json(),
+            "perfetto": json.dumps(tel.to_perfetto(), sort_keys=True),
+            "tel": tel, "rep": rep, "fleet": fleet}
+
+
+def test_fleet_telemetry_byte_identical(tiny):
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r1 = _instrumented_fleet_replay(model, params, trace)
+    r2 = _instrumented_fleet_replay(model, params, trace)
+    assert r1["snapshot"].encode() == r2["snapshot"].encode()
+    assert r1["events"].encode() == r2["events"].encode()
+    assert r1["perfetto"].encode() == r2["perfetto"].encode()
+
+
+def test_golden_fleet_telemetry_snapshot(tiny):
+    """The fleet joins the golden family: per-replica sections
+    (``r0.pool``/``r1.pool``), scoped counters, and fleet routing stats
+    pinned byte-for-byte (tests/golden_fleet_telemetry.json, regenerate
+    with GOLDEN_UPDATE=1; ``kernels`` stays excluded — the provider is
+    process-global and platform-routed)."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_fleet_replay(model, params, trace)
+    snap = json.loads(r["snapshot"])
+    snap.pop("kernels", None)
+    assert "r0.pool" in snap and "r1.pool" in snap
+    assert any(k.startswith("r0.sched.") for k in snap["counters"])
+    assert snap["counters"]["fleet.routed"] == len(trace)
+    got = {"snapshot": snap, "events": json.loads(r["events"])}
+    if os.environ.get("GOLDEN_UPDATE"):
+        with open(GOLDEN_FLEET, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        pytest.skip("golden file regenerated — review and commit the diff")
+    with open(GOLDEN_FLEET) as f:
+        want = json.load(f)
+    assert got["snapshot"] == want["snapshot"], \
+        "fleet telemetry snapshot drifted from the golden replay"
+    assert got["events"] == want["events"], \
+        "fleet telemetry event log drifted from the golden replay"
+
+
+def test_fleet_perfetto_per_replica_tracks(tiny):
+    """Replica-scoped tracks get their own Perfetto processes (dynamic
+    pids above the four fixed tracks, first-appearance order) alongside
+    the fleet control track; the fixed single-engine tracks keep their
+    reserved pids."""
+    model, params = tiny
+    trace = contended_trace(1, model.cfg.vocab)
+    r = _instrumented_fleet_replay(model, params, trace)
+    doc = json.loads(r["perfetto"])
+    evs = doc["traceEvents"]
+    procs = {e["args"]["name"]: e["pid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"r0.requests", "r0.slots", "r1.requests", "r1.slots",
+            "fleet"} <= set(procs)
+    fixed = set(TRACKS.values())
+    for name in ("r0.requests", "r1.sched", "fleet"):
+        assert procs[name] not in fixed, f"{name} collides with a fixed pid"
+    # every request got routed somewhere: each replica's requests track
+    # carries lifecycles for its share (tids are replica-LOCAL rids)
+    tids = {name: {e["tid"] for e in evs
+                   if e.get("pid") == procs[name] and e["ph"] != "M"}
+            for name in ("r0.requests", "r1.requests")}
+    assert sum(len(v) for v in tids.values()) == len(trace)
+
+
 def test_span_timestamps_use_injected_clock():
     class FakeClock:
         t = 2.0
