@@ -31,9 +31,13 @@ Measures tokens/sec and mean per-request latency for:
                  and that preemptions actually fired.
 * ``fleet``    — multi-replica serving (DESIGN.md §15): the N=1
                  reduction gate (one-replica fleet == single Server) and
-                 a prefix-aware vs round-robin routing A/B on a grouped
-                 shared-prefix workload, scored by the fleet-wide prefix
-                 hit rate (gated: prefix must win).
+                 a three-way A/B on a grouped shared-prefix workload —
+                 round-robin vs prefix-aware routing vs prefix routing
+                 plus the fleet-level ``SharedPrefixTier``.  Gated on
+                 the hit-rate ordering tier > prefix > round-robin AND
+                 on the tier materializing (computing) fewer prompt
+                 pages than affinity routing alone — cross-replica
+                 deduplication must be real, not just well-routed.
 
 Every run (full and ``--smoke``) also emits a machine-readable
 ``BENCH_serve.json`` (``--json-out``) — tokens/sec per backend/batch, KV
@@ -237,12 +241,18 @@ def grouped_prefix_trace(seed, vocab, n, *, n_groups=4, page=8, rate=60.0):
     return rows
 
 
-def bench_fleet(model, params, *, seed=0, n_replicas=4, n_requests=80):
+def bench_fleet(model, params, *, seed=0, n_replicas=4, n_requests=80,
+                n_groups=8):
     """Multi-replica fleet serving (DESIGN.md §15): the N=1 reduction
     gate (a one-replica fleet's report must equal the single Server's on
-    the contended trace) and a prefix-vs-round-robin routing A/B on the
-    grouped shared-prefix workload — the fleet-wide prefix hit rate is
-    the routing policy's score.  Event digests are virtual-clock
+    the contended trace) and a three-way routing/dedup A/B on the
+    grouped shared-prefix workload — round-robin vs prefix-affinity
+    routing vs prefix routing + the fleet-level ``SharedPrefixTier``.
+    The fleet-wide prefix hit rate is the routing policy's score;
+    ``materialized_pages`` (prompt pages actually computed) is the
+    tier's: the tier must serve cross-replica hits that affinity alone
+    cannot, so hit(tier) > hit(prefix) > hit(round_robin) and the tier
+    row materializes the fewest pages.  Event digests are virtual-clock
     deterministic; only ``wall_s``/``tok_s`` are timing fields."""
     from repro.serving import Fleet, Server
     from repro.serving.server import CONTENDED_ENGINE_KW, contended_trace
@@ -255,26 +265,34 @@ def bench_fleet(model, params, *, seed=0, n_replicas=4, n_requests=80):
     rep_f = f1.replay(trace)
     n1_parity = rep_f.to_json() == rep_s.to_json()
 
+    # more groups than the per-replica pools can pin: hot prefixes churn
+    # out of the LRU, affinity breaks, and only the fleet tier can serve
+    # the re-materialization — the regime the tier exists for
     grouped = grouped_prefix_trace(
-        seed, model.cfg.vocab, n_requests,
+        seed, model.cfg.vocab, n_requests, n_groups=n_groups,
         page=CONTENDED_ENGINE_KW["page_size"])
     rows = {}
-    for policy in ("prefix", "round_robin"):
+    for name, policy, tier in (("round_robin", "round_robin", False),
+                               ("prefix", "prefix", False),
+                               ("prefix_tier", "prefix", True)):
         fleet = Fleet([ServeEngine(model, params, **CONTENDED_ENGINE_KW)
-                       for _ in range(n_replicas)], policy=policy)
+                       for _ in range(n_replicas)], policy=policy,
+                      shared_prefix_tier=tier)
         t0 = time.perf_counter()
         rep = fleet.replay(grouped)
         wall = time.perf_counter() - t0
-        rows[policy] = {"prefix_hit_rate": fleet.prefix_hit_rate(),
-                        "event_digest": fleet.event_digest(),
-                        "preemptions": rep.preemptions,
-                        "p50_ttft": rep.p50_ttft, "p99_ttft": rep.p99_ttft,
-                        "p50_tpot": rep.p50_tpot, "p99_tpot": rep.p99_tpot,
-                        "makespan": rep.makespan, "n_tokens": rep.n_tokens,
-                        "routed": fleet.n_routed_to,
-                        "wall_s": wall, "tok_s": rep.n_tokens / wall}
+        rows[name] = {"prefix_hit_rate": fleet.prefix_hit_rate(),
+                      "materialized_pages": fleet.materialized_pages(),
+                      "shared_tier": fleet.shared_tier_stats(),
+                      "event_digest": fleet.event_digest(),
+                      "preemptions": rep.preemptions,
+                      "p50_ttft": rep.p50_ttft, "p99_ttft": rep.p99_ttft,
+                      "p50_tpot": rep.p50_tpot, "p99_tpot": rep.p99_tpot,
+                      "makespan": rep.makespan, "n_tokens": rep.n_tokens,
+                      "routed": fleet.n_routed_to,
+                      "wall_s": wall, "tok_s": rep.n_tokens / wall}
     return {"n_replicas": n_replicas, "n_requests": n_requests,
-            "n_groups": 4, "n1_parity": n1_parity, "policies": rows}
+            "n_groups": n_groups, "n1_parity": n1_parity, "policies": rows}
 
 
 def _telemetry_paths(json_out: str) -> tuple[str, str]:
@@ -642,9 +660,12 @@ def main():
     fleet = bench_fleet(model, params, seed=args.seed)
     fp = fleet["policies"]
     print(f"[fleet] {fleet['n_replicas']} replicas, {fleet['n_requests']} "
-          f"grouped-prefix arrivals: prefix routing hit rate "
+          f"grouped-prefix arrivals: hit rate shared-tier "
+          f"{100 * fp['prefix_tier']['prefix_hit_rate']:.0f}% vs prefix "
           f"{100 * fp['prefix']['prefix_hit_rate']:.0f}% vs round-robin "
-          f"{100 * fp['round_robin']['prefix_hit_rate']:.0f}%, "
+          f"{100 * fp['round_robin']['prefix_hit_rate']:.0f}%; tier "
+          f"materialized {fp['prefix_tier']['materialized_pages']} pages "
+          f"vs {fp['prefix']['materialized_pages']} without, "
           f"{fp['prefix']['tok_s']:.1f} tok/s wall"
           + ("" if fleet["n1_parity"] else
              " — WARNING: fleet(N=1) diverged from the single server"))
@@ -761,14 +782,22 @@ def smoke(model, cfg, params, rng, json_out="", seed=0,
                      "scheduler gate is vacuous")
 
     # --- multi-replica fleet (DESIGN.md §15) ---------------------------------
-    # fleet(N=1) must reduce to the single server, and prefix-aware
-    # routing must beat round-robin on the grouped shared-prefix workload
+    # fleet(N=1) must reduce to the single server; on the grouped
+    # shared-prefix workload the hit-rate ordering must be
+    # tier > prefix-alone > round-robin, and the shared tier must
+    # deduplicate (fewest prompt pages actually computed)
     fleet = bench_fleet(model, params, seed=seed)
-    hit_p = fleet["policies"]["prefix"]["prefix_hit_rate"]
-    hit_rr = fleet["policies"]["round_robin"]["prefix_hit_rate"]
-    print(f"[smoke] fleet: N=1 parity {fleet['n1_parity']}, prefix routing "
-          f"hit rate {100 * hit_p:.0f}% vs round-robin {100 * hit_rr:.0f}% "
-          f"(need prefix > round-robin)")
+    pol = fleet["policies"]
+    hit_t = pol["prefix_tier"]["prefix_hit_rate"]
+    hit_p = pol["prefix"]["prefix_hit_rate"]
+    hit_rr = pol["round_robin"]["prefix_hit_rate"]
+    mat_t = pol["prefix_tier"]["materialized_pages"]
+    mat_p = pol["prefix"]["materialized_pages"]
+    print(f"[smoke] fleet: N=1 parity {fleet['n1_parity']}, hit rate "
+          f"tier {100 * hit_t:.0f}% > prefix {100 * hit_p:.0f}% > "
+          f"round-robin {100 * hit_rr:.0f}% (ordering gated); tier "
+          f"materialized {mat_t} pages vs {mat_p} without "
+          f"(tier hits {pol['prefix_tier']['shared_tier']['hits']})")
     if not fleet["n1_parity"]:
         fails.append("fleet(N=1) report diverged from the single Server on "
                      "the contended trace")
@@ -776,6 +805,13 @@ def smoke(model, cfg, params, rng, json_out="", seed=0,
         fails.append(f"prefix-aware routing hit rate {hit_p:.3f} did not "
                      f"beat round-robin {hit_rr:.3f} on the grouped "
                      "shared-prefix workload")
+    if hit_t <= hit_p:
+        fails.append(f"shared-tier hit rate {hit_t:.3f} did not beat "
+                     f"prefix-routing-alone {hit_p:.3f} — the tier served "
+                     "no cross-replica hits")
+    if mat_t >= mat_p:
+        fails.append(f"shared tier materialized {mat_t} pages vs {mat_p} "
+                     "without it — no deduplication")
 
     # --- telemetry overhead gate (DESIGN.md §13) -----------------------------
     over = telemetry_overhead(model, params, seed=seed)

@@ -51,6 +51,26 @@ Knobs:
                                      running requests finish
     --scale-at T:REP                 join a fresh replica REP at virtual
                                      time T (repeatable)
+    --migrate-on-drain               drain-time KV migration: a draining
+                                     replica expels its queued/preempted/
+                                     running requests — KV swap blobs
+                                     included — and the router rehomes
+                                     them to survivors, instead of the
+                                     drain finishing them in place
+    --shared-prefix-tier             fleet-level content-addressed prefix
+                                     page tier: a replica that misses a
+                                     cached prompt prefix locally adopts
+                                     the pages a peer already computed
+                                     instead of recomputing prefill
+    --shed-policy {none,defer,slo,all}
+                                     admission backpressure when EVERY
+                                     admitting replica is over
+                                     --shed-threshold: defer arrivals in
+                                     place, shed best-effort traffic
+                                     (slo), or shed everything
+    --shed-threshold P               replica pressure (pool page / busy
+                                     slot fraction) above which admission
+                                     backpressure engages
     --probes                         in-graph numerics probes (DESIGN.md
                                      §14): per-layer activation-saturation,
                                      int32-accumulator-headroom, and int8-KV
@@ -83,6 +103,10 @@ CPU smoke runs:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --server --replicas 3 --paged --rate 80 --requests 24 \
         --drain-at 0.4:r0 --scale-at 0.6:r3
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --server --replicas 4 --paged --rate 120 --requests 32 \
+        --migrate-on-drain --shared-prefix-tier --shed-policy slo \
+        --drain-at 0.3:r0
 """
 
 from __future__ import annotations
@@ -173,12 +197,18 @@ def run_server(args, engine, cfg, mk_engine):
         from repro.serving.telemetry import Telemetry
         tel = Telemetry()
     fleet = None
-    if args.replicas > 1 or args.drain_at or args.scale_at:
+    if (args.replicas > 1 or args.drain_at or args.scale_at
+            or args.migrate_on_drain or args.shared_prefix_tier
+            or args.shed_policy != "none"):
         from repro.serving import Fleet
         engines = {f"r{i}": engine if i == 0 else mk_engine()
                    for i in range(args.replicas)}
         fleet = Fleet(engines, quantum=args.quantum, preempt=args.preempt,
-                      telemetry=tel, policy=args.route_policy)
+                      telemetry=tel, policy=args.route_policy,
+                      migrate_on_drain=args.migrate_on_drain,
+                      shared_prefix_tier=args.shared_prefix_tier,
+                      shed_policy=args.shed_policy,
+                      shed_threshold=args.shed_threshold)
         scale = [(t, rep, mk_engine)
                  for t, rep in _parse_at(args.scale_at, "--scale-at")]
         t0 = time.time()
@@ -208,7 +238,22 @@ def run_server(args, engine, cfg, mk_engine):
             print(f"[fleet] {r}: {s['routed']} routed"
                   + (", draining" if s["draining"] else "")
                   + f", {s['preemptions']} preemptions, swap out/in "
-                  f"{s['pages_swapped_out']}/{s['pages_swapped_in']} pages")
+                  f"{s['pages_swapped_out']}/{s['pages_swapped_in']} pages"
+                  + (f", {s['migrated_out']} migrated out"
+                     if s["migrated_out"] else ""))
+        if args.migrate_on_drain:
+            print(f"[fleet] drain migration: {fleet.n_migrated} requests / "
+                  f"{fleet.n_migrated_pages} KV pages rehomed to survivors")
+        if args.shed_policy != "none":
+            print(f"[fleet] backpressure ({args.shed_policy} @ "
+                  f"{args.shed_threshold:.2f}): {rep.n_shed} requests shed, "
+                  f"{fleet.n_deferred} deferred")
+        tier = fleet.shared_tier_stats()
+        if tier is not None:
+            print(f"[fleet] shared prefix tier: {tier['hits']} page hits / "
+                  f"{tier['misses']} misses, {tier['puts']} puts, "
+                  f"{tier['evictions']} evictions, {tier['entries']} entries "
+                  f"({tier['bytes'] / 1e6:.2f}MB)")
         if engine.paged:
             print(f"[fleet] routing policy {args.route_policy}: fleet-wide "
                   f"prefix hit rate {100 * fleet.prefix_hit_rate():.0f}%, "
@@ -230,7 +275,9 @@ def run_server(args, engine, cfg, mk_engine):
         print(tel.summary())
     if args.probes:
         report_numerics(engine, args.numerics_out)
-    h = fleet.handles[0] if fleet is not None else srv.sched.handles[0]
+    # request 0 may have been shed under backpressure; sample any survivor
+    h = (next(iter(fleet.handles.values())) if fleet is not None
+         else srv.sched.handles[0])
     print("sample:", h.prompt, "->", h.tokens)
 
 
@@ -291,6 +338,21 @@ def main():
                     metavar="T:REP",
                     help="join a fresh replica named REP at virtual time T "
                          "(repeatable), e.g. --scale-at 0.8:r4")
+    ap.add_argument("--migrate-on-drain", action="store_true",
+                    help="drained replicas expel queued/preempted/running "
+                         "requests (KV swap blobs included) and the router "
+                         "rehomes them to survivors")
+    ap.add_argument("--shared-prefix-tier", action="store_true",
+                    help="fleet-level content-addressed prefix page tier: "
+                         "local prefix misses adopt pages a peer computed "
+                         "instead of recomputing prefill (needs --paged)")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=("none", "defer", "slo", "all"),
+                    help="admission backpressure when every admitting "
+                         "replica is over --shed-threshold")
+    ap.add_argument("--shed-threshold", type=float, default=0.95,
+                    help="replica pressure in [0, 1] above which "
+                         "--shed-policy engages")
     ap.add_argument("--quantum", type=int, default=1,
                     help="decode tokens per scheduling round")
     ap.add_argument("--preempt", default=True,
@@ -331,12 +393,18 @@ def main():
                  "add --server")
     if args.numerics_out and not args.probes:
         ap.error("--numerics-out reports the probe counters; add --probes")
-    if ((args.replicas > 1 or args.drain_at or args.scale_at)
-            and not args.server):
-        ap.error("--replicas/--drain-at/--scale-at drive the fleet router; "
-                 "add --server")
+    if ((args.replicas > 1 or args.drain_at or args.scale_at
+         or args.migrate_on_drain or args.shared_prefix_tier
+         or args.shed_policy != "none") and not args.server):
+        ap.error("--replicas/--drain-at/--scale-at/--migrate-on-drain/"
+                 "--shared-prefix-tier/--shed-policy drive the fleet "
+                 "router; add --server")
     if args.replicas < 1:
         ap.error("--replicas wants at least 1")
+    if args.shared_prefix_tier and not args.paged:
+        ap.error("--shared-prefix-tier shares prefix PAGES; add --paged")
+    if not 0.0 <= args.shed_threshold <= 1.0:
+        ap.error("--shed-threshold wants a pressure fraction in [0, 1]")
     if args.probes and args.spec_draft != "none":
         ap.error("numerics probes instrument the plain decode loops; drop "
                  "--spec-draft for --probes")

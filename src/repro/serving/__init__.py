@@ -6,7 +6,8 @@ request scheduler/server (§11)."""
 from repro.serving.compress import to_codebook_params, index_dtype_for
 from repro.serving.engine import SchedState, ServeEngine, SwapBlob
 from repro.serving.fleet import Fleet, ReplicaProbe
-from repro.serving.kvcache import Admission, PagePool, PoolStats, chain_keys
+from repro.serving.kvcache import (Admission, PagePool, PoolStats,
+                                   SharedPrefixTier, chain_keys)
 from repro.serving.router import FleetRouter
 from repro.serving.scheduler import (AsyncScheduler, RequestHandle,
                                      StepCosts, VirtualClock)

@@ -1246,9 +1246,23 @@ class ServeEngine:
         bit-exact (pages/rows written back verbatim), so a preempted
         request's continuation is token-identical to never having been
         preempted.  Returns False when the paged pool cannot supply the
-        request's reservation yet."""
+        request's reservation yet.
+
+        The blob need not come from THIS engine: fleet drain-time
+        migration (DESIGN.md §15) restores a drained replica's blob on a
+        survivor.  That only works between identically-shaped caches, so
+        plane layout mismatches (a heterogeneous fleet) fail loudly here
+        instead of scattering garbage."""
         if self.paged:
             pool = self.pool
+            for k, v in pool.cache.items():
+                d = blob.data.get(k)
+                if d is None or tuple(d.shape[2:]) != tuple(v.shape[2:]) \
+                        or d.shape[0] != v.shape[0]:
+                    raise ValueError(
+                        f"swap-in blob plane {k!r} does not match this "
+                        f"engine's cache layout — migration requires "
+                        f"identically-shaped replicas")
             adm = pool.swap_in(blob.reserve)
             if adm is None:
                 self.telemetry.count("engine.swap_in_blocked")

@@ -31,14 +31,40 @@ each preemption's unfilled reservation tail).  The two registries stay
 side by side in telemetry (``r0.sched.*`` vs ``r0.pool.*``) and
 tests/test_fleet.py cross-checks them against the report.
 
-Drain (``drain`` / ``schedule_drain``) stops routing to a replica; its
-queued and running requests finish (or swap out and resume) in place,
-so a drained replica reaches zero load in bounded rounds.  Scale-up
-(``add_replica`` / ``schedule_scale``) makes a replica routable the
-instant it joins, mid-trace included.  Per-replica telemetry rides the
-shared registry through ``Telemetry.scoped`` — one snapshot with
-``r0.pool``/``r1.pool`` sections, one Perfetto export with per-replica
-track processes.
+Drain (``drain`` / ``schedule_drain``) stops routing to a replica; by
+default its queued and running requests finish (or swap out and resume)
+in place, so a drained replica reaches zero load in bounded rounds.
+With ``migrate_on_drain=True`` the fleet instead EXPELS every unfinished
+request at drain time — running ones swap out to host blobs
+(``AsyncScheduler.expel``), bit-exact by the §11 swap contract — and
+re-enqueues them into the fleet's pending heap, so the very next routing
+pass adopts them on survivors (``AsyncScheduler.adopt``) and warm work
+outlives the dying replica.  Scale-up (``add_replica`` /
+``schedule_scale``) makes a replica routable the instant it joins,
+mid-trace included.
+
+When every replica is draining, due arrivals are DEFERRED (left at the
+head of the pending heap, retried each round) rather than crashing the
+replay — they route the moment a scale-up lands.  A fleet that can never
+deliver them (no scale scheduled, no drain progress possible) still
+fails loudly via stall detection.  ``shed_policy``/``shed_threshold``
+add admission backpressure on top (serving/router.py ``decide``):
+arrivals facing a fleet whose least-pressured admitting replica is over
+the threshold are shed (by SLO class) or deferred instead of queueing
+unboundedly; shed requests are staged as ``shed`` events, counted in
+``ServerReport.n_shed``, and listed in ``Fleet.shed_rids``.
+
+``shared_prefix_tier=True`` (or an explicit ``SharedPrefixTier``) hangs
+one fleet-level content-addressed page store under every paged replica's
+pool: a local prefix miss consults the tier and scatters the page in
+before recomputing, so a hot system prompt is materialized once per
+fleet instead of once per replica (kvcache.py, DESIGN.md §15).
+
+Per-replica telemetry rides the shared registry through
+``Telemetry.scoped`` — one snapshot with ``r0.pool``/``r1.pool``
+sections, one Perfetto export with per-replica track processes; fleet-
+level ``fleet.migrated_pages`` / ``fleet.shed`` / ``prefix_tier.*``
+counters land beside them.
 """
 
 from __future__ import annotations
@@ -49,8 +75,9 @@ import json
 
 import numpy as np
 
+from repro.serving.kvcache import SharedPrefixTier
 from repro.serving.router import FleetRouter
-from repro.serving.scheduler import AsyncScheduler, VirtualClock
+from repro.serving.scheduler import FINISHED, AsyncScheduler, VirtualClock
 from repro.serving.server import ServerReport
 from repro.serving.telemetry import NULL_TELEMETRY
 
@@ -59,8 +86,9 @@ __all__ = ["Fleet", "ReplicaProbe"]
 
 class ReplicaProbe:
     """Router-facing view of one live replica (the probe protocol
-    ``FleetRouter`` scores): unfinished load, claimable capacity, and
-    the pool's prefix-chain match length.  Read-only by construction."""
+    ``FleetRouter`` scores): unfinished load, claimable capacity,
+    admission pressure, and the pool's prefix-chain match length.
+    Read-only by construction."""
 
     def __init__(self, fleet: "Fleet", rep: str):
         self._fleet = fleet
@@ -74,6 +102,17 @@ class ReplicaProbe:
         if getattr(sched.engine, "paged", False):
             return sched.engine.pool.free_claimable()
         return sum(1 for h in sched.slots if h is None)
+
+    def pressure(self) -> float:
+        """0.0 idle → 1.0 admission blocked: the pool's own pressure
+        signal for paged replicas, busy-slot fraction otherwise — the
+        quantity the router's shed gate thresholds."""
+        sched = self._fleet.replicas[self.rep]
+        if getattr(sched.engine, "paged", False):
+            return sched.engine.pool.pressure()
+        n = len(sched.slots)
+        return (sum(1 for h in sched.slots if h is not None) / n
+                if n else 1.0)
 
     def prefix_match_pages(self, tokens) -> int:
         sched = self._fleet.replicas[self.rep]
@@ -90,30 +129,58 @@ class Fleet:
     sampling ``key`` (replicas are independent engines, so equal keys
     keep N=1 parity and make relabeling a no-op).  ``retain=False`` is
     the large-trace mode: finished handles are released and the merged
-    event log lives only in ``event_digest()``."""
+    event log lives only in ``event_digest()``.
+
+    ``migrate_on_drain``: expel a draining replica's unfinished requests
+    and re-route them to survivors (default False — drained replicas
+    finish in place, the PR 9 behavior).  ``shared_prefix_tier``: True
+    for a fresh fleet-level ``SharedPrefixTier``, or an existing tier
+    instance to share beyond this fleet.  ``shed_policy`` /
+    ``shed_threshold``: router admission backpressure (serving/router.py
+    ``decide``)."""
 
     def __init__(self, engines, *, clock=None, costs=None, quantum: int = 1,
                  preempt: bool = True, key=None, telemetry=None,
-                 policy: str = "prefix", retain: bool = True):
+                 policy: str = "prefix", retain: bool = True,
+                 migrate_on_drain: bool = False, shared_prefix_tier=None,
+                 shed_policy: str = "none", shed_threshold: float = 0.95):
         self.clock = VirtualClock() if clock is None else clock
         self.costs = costs
         self.quantum = int(quantum)
         self.preempt = bool(preempt)
         self.key = key
         self.retain = bool(retain)
+        self.migrate_on_drain = bool(migrate_on_drain)
+        if shared_prefix_tier is True:
+            self.tier = SharedPrefixTier()
+        elif shared_prefix_tier is None or shared_prefix_tier is False:
+            self.tier = None
+        else:
+            self.tier = shared_prefix_tier
         self.telemetry = NULL_TELEMETRY if telemetry is None else telemetry
         if self.telemetry.enabled:
             self.telemetry.bind_clock(self.clock)
-        self.router = FleetRouter(policy=policy)
+            if self.tier is not None:
+                self.telemetry.add_provider("prefix_tier", self.tier.stats)
+        self.router = FleetRouter(policy=policy, shed_policy=shed_policy,
+                                  shed_threshold=shed_threshold)
         self.replicas: dict[str, AsyncScheduler] = {}
         self.inflight: dict[str, int] = {}     # unfinished routed requests
         self.n_routed_to: dict[str, int] = {}
+        self.migrated_from: dict[str, int] = {}
         self.handles: dict[int, object] = {}   # frid -> handle (retain mode)
         self.assigned: dict[int, tuple] = {}   # frid -> (rep, local rid)
         self._local2fleet: dict[str, dict] = {}
         self._rows: dict[int, dict] = {}       # frid -> row (until routed)
         self.pending: list[tuple] = []         # (arrival, frid) heap
         self._controls: list[tuple] = []       # (t, seq, kind, payload) heap
+        self.n_migrated = 0                    # requests expelled at drain
+        self.n_migrated_pages = 0              # blob data pages they carried
+        self.n_shed = 0
+        self.n_deferred = 0                    # arrivals deferred >= once
+        self.shed_rids: list[int] = []
+        self._deferred: set[int] = set()       # frids staged as deferred
+        self._tier_sampled = None              # last (hits, bytes) sampled
         self._cseq = 0
         self._seq = 0
         self._staged: list[tuple] = []         # fleet events awaiting merge
@@ -145,7 +212,10 @@ class Fleet:
         self.replicas[rep] = sched
         self.inflight[rep] = 0
         self.n_routed_to[rep] = 0
+        self.migrated_from[rep] = 0
         self._local2fleet[rep] = {}
+        if self.tier is not None and getattr(engine, "paged", False):
+            engine.pool.shared_tier = self.tier
         self.router.add(rep, ReplicaProbe(self, rep))
         self._stage("join", rep, -1)
         if tel.enabled:
@@ -153,12 +223,53 @@ class Fleet:
             tel.instant("fleet", 0, f"join:{rep}")
 
     def drain(self, rep: str) -> None:
-        """Stop routing to ``rep`` now; it finishes its own queue."""
+        """Stop routing to ``rep``.  Default: it finishes its own queue
+        in place.  With ``migrate_on_drain`` its unfinished requests are
+        expelled (running ones as bit-exact swap blobs) and re-enqueued
+        fleet-pending, so the next routing pass re-homes them on
+        survivors — or defers them until a survivor exists."""
         self.router.drain(rep)
         self._stage("drain", rep, -1)
         if self.telemetry.enabled:
             self.telemetry.count("fleet.drains")
             self.telemetry.instant("fleet", 0, f"drain:{rep}")
+        if self.migrate_on_drain:
+            self._migrate_from(rep)
+
+    def _migrate_from(self, rep: str) -> None:
+        """Expel every unfinished request on ``rep`` (sorted fleet-id
+        order — deterministic and replica-order independent) and push it
+        back into the fleet's pending heap under its ORIGINAL arrival,
+        carrying its live handle and, for started requests, the swap
+        blob ``adopt`` will restore bit-exactly on the target."""
+        sched = self.replicas[rep]
+        tel = self.telemetry
+        moved = sorted(
+            (frid, lrid) for lrid, frid in self._local2fleet[rep].items()
+            if lrid in sched.handles
+            and sched.handles[lrid].state != FINISHED)
+        for frid, lrid in moved:
+            h, blob = sched.expel(lrid)
+            self.inflight[rep] -= 1
+            del self.assigned[frid]
+            self._rows[frid] = {
+                "arrival": h.arrival, "prompt": h.prompt,
+                "max_new": h.max_new, "priority": h.priority,
+                "slo_ttft": h.slo_ttft, "slo_tpot": h.slo_tpot,
+                "handle": h, "blob": blob}
+            heapq.heappush(self.pending, (h.arrival, frid))
+            self.n_migrated += 1
+            self.migrated_from[rep] += 1
+            n_pg = blob.n_pages if blob is not None else 0
+            self.n_migrated_pages += n_pg
+            self._stage("migrate", rep, frid)
+            if tel.enabled:
+                tel.count("fleet.migrated")
+                if n_pg:
+                    tel.count("fleet.migrated_pages", n_pg)
+                tel.instant("fleet", 0, f"migrate:{rep}")
+        if moved and tel.enabled:
+            tel.counter("fleet.migrated_pages", self.n_migrated_pages)
 
     def schedule_drain(self, t: float, rep: str) -> None:
         """Drain ``rep`` once the virtual clock reaches ``t``."""
@@ -235,20 +346,62 @@ class Fleet:
                 raise ValueError("streamed trace arrivals must be "
                                  "non-decreasing")
 
-    def _route_due(self) -> None:
+    def _route_due(self) -> bool:
+        """Route due arrivals through the router's admission decision.
+        A deferred head stays in ``pending`` (head-of-line, original
+        order) and is retried next round — this is what lets a mid-trace
+        arrival survive an all-drained window until a scale-up lands,
+        and what backpressure's "defer" class waits on.  Returns True
+        when anything was routed or shed (the round made progress)."""
         now = self.clock.now()
+        tel = self.telemetry
+        acted = False
         while self.pending and self.pending[0][0] <= now:
-            _, frid = heapq.heappop(self.pending)
-            self._route(frid)
+            _, frid = self.pending[0]
+            row = self._rows[frid]
+            kind, rep = self.router.decide(
+                row["prompt"],
+                has_slo=(row["slo_ttft"] is not None
+                         or row["slo_tpot"] is not None))
+            if kind == "defer":
+                if frid not in self._deferred:   # stage + count ONCE
+                    self._deferred.add(frid)
+                    self.n_deferred += 1
+                    self._stage("defer", "-", frid)
+                    if tel.enabled:
+                        tel.count("fleet.deferred")
+                        tel.instant("fleet", 0, "defer")
+                break
+            heapq.heappop(self.pending)
+            self._deferred.discard(frid)
+            if kind == "shed":
+                self._rows.pop(frid)
+                self.n_shed += 1
+                self.shed_rids.append(frid)
+                self._stage("shed", "-", frid)
+                if tel.enabled:
+                    tel.count("fleet.shed")
+                    tel.counter("fleet.shed", self.n_shed)
+                    tel.instant("fleet", 0, "shed")
+                acted = True
+                continue
+            self._route(frid, rep)
+            acted = True
+        return acted
 
-    def _route(self, frid: int) -> None:
+    def _route(self, frid: int, rep: str) -> None:
         row = self._rows.pop(frid)
-        rep = self.router.route(row["prompt"])
         sched = self.replicas[rep]
-        h = sched.submit(row["prompt"], row["max_new"],
-                         priority=row["priority"], arrival=row["arrival"],
-                         slo_ttft=row["slo_ttft"], slo_tpot=row["slo_tpot"],
-                         allow_past_arrival=True)
+        h = row.get("handle")
+        if h is not None:              # drain-time migration handover
+            h = sched.adopt(h, blob=row.get("blob"))
+        else:
+            h = sched.submit(row["prompt"], row["max_new"],
+                             priority=row["priority"],
+                             arrival=row["arrival"],
+                             slo_ttft=row["slo_ttft"],
+                             slo_tpot=row["slo_tpot"],
+                             allow_past_arrival=True)
         self._local2fleet[rep][h.rid] = frid
         self.assigned[frid] = (rep, h.rid)
         self.inflight[rep] += 1
@@ -326,23 +479,42 @@ class Fleet:
         event logs.  Returns False once the whole fleet is idle."""
         self._apply_controls()
         self._pull_trace()
-        self._route_due()
+        progress = self._route_due()
         more = bool(self.pending or self._controls
                     or self._thead is not None)
-        progress = False
         for rep in sorted(self.replicas):
             sched = self.replicas[rep]
             if sched.pending or sched.ready or sched.running:
                 progress = sched.step(more_arrivals=more) or progress
         self._drain_events()
+        tel = self.telemetry
+        if tel.enabled and self.tier is not None:
+            sample = (self.tier.hits, self.tier.bytes)
+            if sample != self._tier_sampled:   # counter tracks on change
+                self._tier_sampled = sample
+                tel.counter("prefix_tier.hits", sample[0])
+                tel.counter("prefix_tier.bytes", sample[1])
         if progress:
             return True
         nxt = self._next_time()
-        if nxt is not None:                  # idle-jump to the next event
-            self.clock.advance(max(0.0, nxt - self.clock.now()))
-            if self.telemetry.enabled:
-                self.telemetry.instant("fleet", 0, "idle_jump")
+        if nxt is not None and nxt > self.clock.now():
+            self.clock.advance(nxt - self.clock.now())  # idle-jump
+            if tel.enabled:
+                tel.instant("fleet", 0, "idle_jump")
             return True
+        if nxt is not None:
+            # the head arrival is due but deferred and no replica can
+            # move — only a scheduled control (scale-up) can resolve it;
+            # jump straight to the next one, or fail loudly
+            if self._controls:
+                self.clock.advance(self._controls[0][0] - self.clock.now())
+                if tel.enabled:
+                    tel.instant("fleet", 0, "idle_jump")
+                return True
+            raise RuntimeError(
+                "fleet stalled: arrivals due but deferred with no "
+                "admitting progress and no scale-up scheduled (all "
+                "replicas draining, or shed threshold never clears)")
         if any(s.ready or s.running or s.pending
                for s in self.replicas.values()):
             raise RuntimeError(
@@ -416,7 +588,8 @@ class Fleet:
             slo_attainment=(a["slo_hit"] / a["slo_total"]
                             if a["slo_total"] else 1.0),
             admission_order=[frid for _, _, kind, frid in self.events
-                             if kind == "admit"])
+                             if kind == "admit"],
+            n_shed=self.n_shed)
 
     def event_digest(self) -> str:
         """SHA-256 over the merged event log so far — the O(1)-memory
@@ -435,6 +608,19 @@ class Fleet:
                 miss += st.miss_pages
         return hit / (hit + miss) if hit + miss else 0.0
 
+    def shared_tier_stats(self) -> dict | None:
+        """The fleet tier's hit/byte counters, or None when no tier is
+        attached — what the bench smoke and the tier-2 scale rig report."""
+        return self.tier.stats() if self.tier is not None else None
+
+    def materialized_pages(self) -> int:
+        """Fleet-wide prompt pages actually COMPUTED (pooled
+        ``miss_pages``) — the quantity the shared tier exists to shrink;
+        tier- and locally-served pages never enter it."""
+        return sum(s.engine.pool.stats.miss_pages
+                   for s in self.replicas.values()
+                   if getattr(s.engine, "paged", False))
+
     def replica_stats(self) -> dict:
         """Per-replica routing/preemption/swap counters, sorted ids —
         the registry side of the registry-vs-report swap cross-check."""
@@ -445,6 +631,7 @@ class Fleet:
                 "routed": self.n_routed_to[rep],
                 "inflight": self.inflight[rep],
                 "draining": rep in self.router.draining,
+                "migrated_out": self.migrated_from[rep],
                 "preemptions": s.n_preemptions,
                 "pages_swapped_out": s.n_pages_swapped_out,
                 "pages_swapped_in": s.n_pages_swapped_in}

@@ -20,10 +20,11 @@ Split of responsibilities:
   copy-on-write.  All host structures are O(n_pages) ints — no tensors.
 
 Prefix caching is content-addressed by hash *chains*: page c of a prompt is
-keyed by ``(key(c−1), tokens_in_page_c)``, so a page is shared only when
-the entire prefix matches — exactly the condition under which its K/V
-(functions of all tokens ≤ its last position, at absolute RoPE positions)
-are bit-identical.  Full prompt pages are registered right after prefill
+keyed by a rolling digest of ``(key(c−1), tokens_in_page_c)``, so a page is
+shared only when the entire prefix matches — exactly the condition under
+which its K/V (functions of all tokens ≤ its last position, at absolute
+RoPE positions) are bit-identical.  Full prompt pages are registered right
+after prefill
 (immutable from then on; in-flight requests can already share them).  A
 non-aligned prompt's partial tail page is registered at retirement: its
 pollution from decode writes beyond the prompt is fenced by the reader's
@@ -49,6 +50,17 @@ admissions, so ``extend`` back up to the admission-time worst case can
 never deadlock), and copy-on-write-splits a shared boundary page before
 the request's next writes can land in it.
 
+Fleet-shared prefix tier (DESIGN.md §15): when a ``SharedPrefixTier`` is
+attached (``pool.shared_tier``), the pool consults it at admission time for
+full prompt pages it does not hold locally — a tier hit scatters the host
+copy into a fresh cache-only page *before* planning, so the plan then sees
+an ordinary local hit and a hot system prompt is materialized once per
+fleet, not once per replica.  ``register_prefill`` publishes newly
+registered full pages back to the tier (captured right after prefill, while
+still immutable, so tier bytes are bit-exact by construction); partial tail
+pages never enter the tier — their decode pollution beyond the prompt makes
+them replica-private.
+
 Scheduler preemption (DESIGN.md §11): ``swap_out`` releases a preempted
 request's page references after the engine copies their contents to a
 host-side store — registered prefix pages survive at the cache's own
@@ -63,6 +75,7 @@ swap-in returning "not yet" — rather than on a pressure threshold.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 from collections import OrderedDict
 from functools import partial
@@ -71,34 +84,55 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["PagePool", "PoolStats", "Admission", "chain_keys"]
+__all__ = ["PagePool", "PoolStats", "Admission", "SharedPrefixTier",
+           "chain_keys"]
 
-_ROOT = ("root",)            # hash-chain seed for page 0 of every prompt
+# hash-chain seed for page 0 of every prompt
+_ROOT = hashlib.blake2b(b"repro.kv.chain-root", digest_size=16).digest()
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def chain_keys(tokens, page_size: int) -> tuple[list, tuple | None]:
-    """The prompt's content-addressed prefix chain: one key per FULL page
-    (page c keyed by ``(key(c−1), tokens_in_page_c)``) plus the partial
-    tail page's key when the prompt is not page-aligned, else None.
+def _page_key(prev: bytes, page_tokens) -> bytes:
+    """Next link of the rolling chain: BLAKE2b-128 of the previous key
+    concatenated with the page's tokens as int64 bytes."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    h.update(np.asarray(page_tokens, np.int64).tobytes())
+    return h.digest()
 
-    This is THE key construction — ``PagePool.admit`` plans with it and
-    the fleet router (serving/router.py) scores replica affinity with it,
-    so a router-predicted hit is exactly an admit-time hit."""
+
+def chain_keys(tokens, page_size: int) -> tuple[list, bytes | None]:
+    """The prompt's content-addressed prefix chain: one key per FULL page
+    (page c keyed by a digest of ``key(c−1)`` and the page's tokens) plus
+    the partial tail page's key when the prompt is not page-aligned, else
+    None.
+
+    Keys are rolling 16-byte BLAKE2b digests: page c's key hashes the
+    previous key (itself a digest of the whole prior chain) with page c's
+    tokens, so equality still certifies that the *entire* prefix matches,
+    but every key is O(1)-sized — building and comparing a prompt's chain
+    is O(pages·page_size), where the earlier nested-tuple schema embedded
+    the full prior chain in every key and cost O(pages²·page_size) per
+    prompt.  Digests (unlike salted ``hash()``) are identical across
+    processes and machines, which is what lets the fleet's shared prefix
+    tier key pages fleet-wide with the same chain.
+
+    This is THE key construction — ``PagePool.admit`` plans with it, the
+    fleet router (serving/router.py) scores replica affinity with it, and
+    ``SharedPrefixTier`` stores fleet-wide pages under it, so a
+    router-predicted or tier-served hit is exactly an admit-time hit."""
     page = int(page_size)
-    n_full = len(tokens) // page
+    toks = np.asarray(tokens, np.int64)
+    n_full = len(toks) // page
     keys, key = [], _ROOT
     for c in range(n_full):
-        key = (key, tuple(tokens[c * page:(c + 1) * page]))
+        key = _page_key(key, toks[c * page:(c + 1) * page])
         keys.append(key)
-    rem = len(tokens) % page
     partial = None
-    if rem:
-        partial = (keys[-1] if n_full else _ROOT,
-                   tuple(tokens[n_full * page:]))
+    if len(toks) % page:
+        partial = _page_key(key, toks[n_full * page:])
     return keys, partial
 
 
@@ -108,6 +142,10 @@ class PoolStats:
 
     hit_pages: int = 0           # prompt pages reused from the prefix cache
     miss_pages: int = 0          # prompt pages computed fresh
+    # pages materialized from the fleet's shared tier instead of computed
+    # (each also lands in hit_pages via the admission plan that follows —
+    # miss_pages alone remains "true recomputations")
+    shared_hit_pages: int = 0
     cow_copies: int = 0
     evictions: int = 0
     peak_pages_in_use: int = 0
@@ -158,7 +196,7 @@ class Admission:
     compute_from: int
     write_pids: list
     full_keys: list
-    partial_key: tuple | None
+    partial_key: bytes | None
     cow_tail: int | None
     reserve: int = 0
     n_live: int = 0
@@ -173,6 +211,74 @@ def _copy_page(cache, src, dst):
         pg = jax.lax.dynamic_slice_in_dim(arr, src, 1, axis=1)
         out[name] = jax.lax.dynamic_update_slice_in_dim(arr, pg, dst, axis=1)
     return out
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_page(cache, dst, page):
+    """cache[:, dst] = page for every pool array (all layers): the scatter
+    that materializes a shared-tier host page into this pool."""
+    out = {}
+    for name, arr in cache.items():
+        pg = jnp.asarray(page[name], arr.dtype)[:, None]
+        out[name] = jax.lax.dynamic_update_slice_in_dim(arr, pg, dst, axis=1)
+    return out
+
+
+class SharedPrefixTier:
+    """Fleet-level content-addressed read-only page store (DESIGN.md §15).
+
+    Keyed by the same rolling-digest chains ``chain_keys`` builds, so tier
+    keying agrees bit-for-bit with admit-time planning and router probes.
+    Values are host copies of FULL, immutable prompt pages — one
+    ``(L, page, ...)`` array per cache plane — captured at registration
+    time, right after prefill and before any decode write can land, so
+    scattering a tier page into another replica's pool reproduces the
+    exact bytes prefill would have written.  Partial tail pages (polluted
+    beyond the prompt by decode, registered only at retirement) never
+    enter the tier.
+
+    LRU-bounded by ``capacity_bytes`` (None = unbounded).  Everything is
+    a plain host dict mutated in the fleet's sorted-replica step order,
+    so replays with a shared tier stay byte-identical and replica-order
+    independent."""
+
+    def __init__(self, capacity_bytes: int | None = None):
+        self.capacity_bytes = capacity_bytes
+        self.table: OrderedDict[bytes, dict] = OrderedDict()
+        self.bytes = 0
+        self.hits = 0            # pages materialized into a pool from here
+        self.misses = 0          # chain walks stopped by a key held nowhere
+        self.puts = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self.table)
+
+    def __contains__(self, key) -> bool:
+        return key in self.table
+
+    def get(self, key):
+        pages = self.table.get(key)
+        if pages is not None:
+            self.table.move_to_end(key)               # LRU touch
+        return pages
+
+    def put(self, key, pages: dict) -> None:
+        if key in self.table:
+            return
+        self.table[key] = pages
+        self.bytes += sum(int(a.nbytes) for a in pages.values())
+        self.puts += 1
+        if self.capacity_bytes is not None:
+            while self.bytes > self.capacity_bytes and len(self.table) > 1:
+                _, old = self.table.popitem(last=False)
+                self.bytes -= sum(int(a.nbytes) for a in old.values())
+                self.evictions += 1
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "evictions": self.evictions,
+                "bytes": self.bytes, "entries": len(self.table)}
 
 
 class PagePool:
@@ -199,8 +305,11 @@ class PagePool:
         self.cache = model.init_paged_cache(n_pages, page_size, kv_dtype)
         self.free: list[int] = list(range(n_pages - 1, 0, -1))
         self.ref = np.zeros(n_pages, np.int64)
-        self.table: OrderedDict[tuple, int] = OrderedDict()  # key -> pid
-        self.key_of: dict[int, tuple] = {}                   # pid -> key
+        self.table: OrderedDict[bytes, int] = OrderedDict()  # key -> pid
+        self.key_of: dict[int, bytes] = {}                   # pid -> key
+        # fleet-level shared prefix tier (attached by Fleet.add_replica;
+        # None = per-replica caching only, the pre-§15 behavior)
+        self.shared_tier: SharedPrefixTier | None = None
         self.stats = PoolStats()
         # pages released by truncate() but still owed to their in-flight
         # request's reservation: invisible to new admissions so extend()
@@ -328,6 +437,35 @@ class PagePool:
         self.ref[pid] += 1
         self._note_usage()
 
+    def _adopt_shared(self, keys) -> None:
+        """Promote shared-tier pages this pool lacks (DESIGN.md §15).
+
+        Walks the prompt's full-page chain in order; each key missing
+        locally but held by the fleet's shared tier is materialized as a
+        local cache-only page (alloc → jitted scatter → register), so the
+        planning pass right after finds an ordinary local hit.  The walk
+        stops at the first key neither store holds — chain keying means no
+        later page can hit either.  Each promotion is guarded by
+        ``can_admit(1)``; a promoted page is cache-only (refcount 1) and
+        immediately evictable, so a promotion outliving a failed admission
+        costs nothing."""
+        tier = self.shared_tier
+        for key in keys:
+            if key in self.table:
+                continue
+            pages = tier.get(key)
+            if pages is None:
+                tier.misses += 1
+                return
+            if not self.can_admit(1):
+                return
+            pid = self._alloc()
+            self.cache = _write_page(self.cache, np.int32(pid), pages)
+            self._register(key, pid)
+            self._release(pid)     # drop the alloc ref; the cache's keeps it
+            tier.hits += 1
+            self.stats.shared_hit_pages += 1
+
     # --- request lifecycle ----------------------------------------------------
 
     def admit(self, tokens: list[int], stop: int) -> Admission | None:
@@ -353,6 +491,8 @@ class PagePool:
         n_full = plen // page
         rem = plen % page
         keys, partial_key = chain_keys(tokens, page)
+        if self.prefix_enabled and self.shared_tier is not None and n_full:
+            self._adopt_shared(keys)
 
         for use_prefix in ((True, False) if self.prefix_enabled else
                            (False,)):
@@ -409,11 +549,20 @@ class PagePool:
 
     def register_prefill(self, adm: Admission):
         """Register the request's full prompt pages (immutable once written;
-        concurrent requests may share them immediately)."""
+        concurrent requests may share them immediately).  With a shared
+        tier attached, pages the tier lacks are published fleet-wide too —
+        captured now, while still decode-untouched, so tier bytes are
+        bit-exact by construction."""
         if not self.prefix_enabled:
             return
         for c, key in adm.full_keys:
             self._register(key, adm.pids[c])
+        if self.shared_tier is not None:
+            for c, key in adm.full_keys:
+                if key not in self.shared_tier:
+                    self.shared_tier.put(
+                        key, {name: np.asarray(arr[:, adm.pids[c]])
+                              for name, arr in self.cache.items()})
 
     def cow(self, adm: Admission) -> int | None:
         """Copy-on-write the shared tail page before decode writes into it.

@@ -1,11 +1,11 @@
-"""Fleet routing policy: prefix- and load-aware replica choice
-(DESIGN.md §15).
+"""Fleet routing policy: prefix- and load-aware replica choice, plus
+admission backpressure (DESIGN.md §15).
 
 ``FleetRouter`` picks which of N replicas receives each request.  It
 sees replicas only through small probe objects (load, free pages,
-prefix-match length), so the policy is testable over stub engines
-(tests/test_fleet.py) and the fleet facade (serving/fleet.py) just wires
-real ``AsyncScheduler``/``PagePool`` probes in.
+prefix-match length, pressure), so the policy is testable over stub
+engines (tests/test_fleet.py) and the fleet facade (serving/fleet.py)
+just wires real ``AsyncScheduler``/``PagePool`` probes in.
 
 Policy — deterministic and replica-order-independent by construction:
 
@@ -19,42 +19,73 @@ Policy — deterministic and replica-order-independent by construction:
   — the baseline the prefix policy is benchmarked against
   (benchmarks/serve_throughput.py ``bench_fleet``).
 
+The round-robin cursor is *membership-aware*: it remembers the last
+replica id handed work and advances to the next admitting id above it
+(wrapping), so a drain or scale-up mid-rotation keeps the cycle fair.
+(The original cursor was ``n_routed % len(reps)`` — a raw route count
+surviving membership changes, which skewed the modulo after any drain or
+scale and could starve a replica indefinitely.)  ``n_routed`` is now a
+pure statistics counter.
+
 Candidates are always enumerated in sorted-id order, never dict
 insertion order, so a fleet constructed with its replicas permuted
 routes identically — the acceptance property tests/test_fleet.py pins.
 
 **Drain** removes a replica from the candidate set without touching its
-queue: in-flight and already-queued requests finish (or swap out and
-resume) on the replica itself; only NEW routes skip it.  **Scale-up**
-(``add``) makes a replica a candidate immediately.  The virtual-clock
-rule applies here as everywhere under ``serving/``: nothing reads the
-wall, so route decisions replay bit-identically.
+queue; only NEW routes skip it (with ``Fleet(migrate_on_drain=True)``
+the fleet additionally expels its unfinished requests and re-routes them
+here).  **Scale-up** (``add``) makes a replica a candidate immediately.
+
+**Backpressure** (``decide``): instead of queueing unboundedly, an
+arrival can be *deferred* (left at the head of the fleet's pending heap
+and retried next round) or *shed* (rejected outright) when every
+admitting replica is over the pressure threshold.  ``shed_policy``
+selects who sheds: ``"none"`` (default — route regardless, the pre-§15
+behavior), ``"defer"`` (nobody sheds, everyone waits out the pressure),
+``"slo"`` (requests carrying an SLO shed — they would blow their targets
+queueing behind a saturated fleet anyway, so fail fast and let best-
+effort work wait), ``"all"`` (every arrival sheds under pressure).  An
+empty admitting set always defers — a mid-trace arrival between a drain
+and a later scale-up waits for the new replica instead of killing the
+replay.  The virtual-clock rule applies here as everywhere under
+``serving/``: nothing reads the wall, so decisions replay
+bit-identically.
 """
 
 from __future__ import annotations
 
-__all__ = ["FleetRouter", "POLICIES"]
+__all__ = ["FleetRouter", "POLICIES", "SHED_POLICIES"]
 
 POLICIES = ("prefix", "round_robin")
+SHED_POLICIES = ("none", "defer", "slo", "all")
 
 
 class FleetRouter:
     """Replica chooser over probe objects.
 
     A probe must expose ``load()`` (unfinished requests assigned),
-    ``free_pages()`` (claimable capacity), and
-    ``prefix_match_pages(tokens)`` (leading prompt pages the replica's
-    pool already holds).  ``serving/fleet.py.ReplicaProbe`` adapts the
-    real engine stack; tests drive stubs."""
+    ``free_pages()`` (claimable capacity), ``prefix_match_pages(tokens)``
+    (leading prompt pages the replica's pool already holds), and
+    ``pressure()`` (0.0 idle → 1.0 admission blocked).
+    ``serving/fleet.py.ReplicaProbe`` adapts the real engine stack;
+    tests drive stubs."""
 
-    def __init__(self, policy: str = "prefix"):
+    def __init__(self, policy: str = "prefix", *,
+                 shed_policy: str = "none", shed_threshold: float = 0.95):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"unknown shed policy {shed_policy!r}; "
+                             f"choose from {SHED_POLICIES}")
         self.policy = policy
+        self.shed_policy = shed_policy
+        self.shed_threshold = float(shed_threshold)
         self.probes: dict[str, object] = {}
         self.draining: set[str] = set()
-        self.n_routed = 0                    # doubles as the RR cursor
+        self.n_routed = 0                    # statistics only, NOT a cursor
+        self.n_shed = 0
+        self._rr_last: str | None = None     # membership-aware RR cursor
 
     # --- membership ----------------------------------------------------------
 
@@ -65,7 +96,8 @@ class FleetRouter:
 
     def drain(self, rep: str) -> None:
         """Stop routing to ``rep``.  Its queued/running requests are
-        untouched — the replica drains itself."""
+        untouched — the replica drains itself (or the fleet migrates
+        them; see ``Fleet.drain``)."""
         if rep not in self.probes:
             raise KeyError(f"unknown replica {rep!r}")
         self.draining.add(rep)
@@ -78,13 +110,47 @@ class FleetRouter:
 
     # --- the decision --------------------------------------------------------
 
+    def pressure(self) -> float:
+        """The fleet-is-full signal the shed gate thresholds: the MINIMUM
+        pressure over admitting replicas (the least-loaded candidate is
+        where a route would land; shedding is justified only when even it
+        is saturated).  1.0 when nothing admits."""
+        reps = self.admitting
+        if not reps:
+            return 1.0
+        return min(float(self.probes[r].pressure()) for r in reps)
+
+    def decide(self, prompt, *, has_slo: bool = False):
+        """Admission decision for one arrival: ``("route", rep)``,
+        ``("defer", None)`` (leave it pending, retry next round) or
+        ``("shed", None)`` (reject it outright).  See the module
+        docstring for the shed-policy semantics."""
+        if not self.admitting:
+            return ("defer", None)
+        if (self.shed_policy != "none"
+                and self.pressure() >= self.shed_threshold):
+            if self.shed_policy == "all" or (self.shed_policy == "slo"
+                                             and has_slo):
+                self.n_shed += 1
+                return ("shed", None)
+            return ("defer", None)
+        return ("route", self.route(prompt))
+
     def route(self, prompt) -> str:
-        """Choose the replica for one request's prompt."""
+        """Choose the replica for one request's prompt.  Raises when
+        nothing admits — callers that can wait use ``decide``, which
+        defers instead."""
         reps = self.admitting
         if not reps:
             raise RuntimeError("no admitting replica (all drained?)")
         if self.policy == "round_robin":
-            rep = reps[self.n_routed % len(reps)]
+            rep = reps[0]
+            if self._rr_last is not None:
+                for r in reps:
+                    if r > self._rr_last:
+                        rep = r
+                        break
+            self._rr_last = rep
         else:
             # max() keeps the FIRST maximum, and reps is sorted, so full
             # ties deterministically fall to the smallest replica id.

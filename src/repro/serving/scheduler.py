@@ -406,6 +406,87 @@ class AsyncScheduler:
             tel.open_span("requests", victim.rid, "swapped")
             tel.instant("requests", victim.rid, "preempt")
 
+    # --- cross-scheduler migration (DESIGN.md §15) ----------------------------
+
+    def expel(self, rid: int):
+        """Remove an unfinished request so a fleet can migrate it to a
+        survivor replica at drain time.  Returns ``(handle, blob)``:
+
+        * RUNNING — swapped out first (the same bit-exact blob path as
+          preemption, billed at the same per-page cost), blob returned;
+        * SWAPPED — hands over the blob it already has;
+        * QUEUED — leaves empty-handed (``blob=None``; nothing placed yet,
+          the target just admits it fresh).
+
+        The handle keeps its identity — original arrival/priority (it
+        re-queues on the target under its ORIGINAL key), streamed tokens,
+        TTFT — and is re-homed with ``adopt``.  Not counted as a
+        preemption: ``sched.pages_swapped_out`` and the handle's page
+        counter do grow (data really moved), ``n_preemptions`` does not."""
+        h = self.handles.pop(rid)
+        if h.state == FINISHED:
+            raise ValueError(f"request {rid} already finished")
+        tel = self.telemetry
+        blob = None
+        if h.state == RUNNING:
+            slot, t0 = h.slot, self.clock.now()
+            blob = self.engine.sched_swap_out(self.st, slot)
+            self.clock.advance(self.costs.swap_page * blob.n_pages)
+            self.slots[slot] = None
+            h.slot = None
+            h.state = SWAPPED
+            h.pages_swapped_out += blob.n_pages
+            self.n_pages_swapped_out += blob.n_pages
+            if tel.enabled:
+                tel.count("sched.pages_swapped_out", blob.n_pages)
+                tel.count("sched.swap_bytes_out", _blob_bytes(blob))
+                tel.span("slots", slot, "swap_out", t0, self.clock.now())
+                tel.close_span("requests", rid, "running")
+        else:
+            if h.state == SWAPPED:
+                blob = self.blobs.pop(rid)
+            # QUEUED and SWAPPED both sit in a queue heap — purge the rid
+            # (SWAPPED was re-queued by _preempt under its original key)
+            self.ready = [e for e in self.ready if e[2] != rid]
+            heapq.heapify(self.ready)
+            self.pending = [e for e in self.pending if e[1] != rid]
+            heapq.heapify(self.pending)
+            if tel.enabled:
+                tel.close_span("requests", rid,
+                               "swapped" if h.state == SWAPPED else "queued")
+        self._log("expel", rid)
+        if tel.enabled:
+            tel.count("sched.expelled")
+            tel.instant("requests", rid, "expel")
+        return h, blob
+
+    def adopt(self, h: RequestHandle, blob=None) -> RequestHandle:
+        """Re-home an expelled request here (the other half of ``expel``).
+        The handle gains a fresh local rid and queues under its original
+        (priority, arrival) key; with a blob its next placement takes the
+        bit-exact ``sched_swap_in`` path instead of a fresh prefill, so
+        the remaining tokens are byte-identical to never having moved."""
+        self.engine.sched_check(h.prompt, h.max_new)
+        h._sched = self
+        h.rid = self._seq
+        self._seq += 1
+        h.slot = None
+        self.handles[h.rid] = h
+        if blob is not None:
+            h.state = SWAPPED
+            self.blobs[h.rid] = blob
+        else:
+            h.state = QUEUED
+        heapq.heappush(self.ready, (-h.priority, h.arrival, h.rid))
+        self._log("adopt", h.rid)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("sched.adopted")
+            tel.instant("requests", h.rid, "adopt")
+            tel.open_span("requests", h.rid,
+                          "swapped" if blob is not None else "queued")
+        return h
+
     def _admit_ready(self) -> int:
         """Place queue heads until one blocks (strict head-of-line).
         A blocked head may preempt strictly-lower-priority victims, one

@@ -155,6 +155,9 @@ class ServerReport:
     pages_swapped_in: int            # data pages restore moved back
     slo_attainment: float            # over requests that set an SLO
     admission_order: list
+    # arrivals rejected by fleet admission backpressure (DESIGN.md §15);
+    # always 0 for the single server, which has no shed gate
+    n_shed: int = 0
 
     @staticmethod
     def build(handles, sched) -> "ServerReport":

@@ -420,6 +420,7 @@ def _pool_provider(engine):
     def prov():
         st = engine.pool.stats
         return {"hit_pages": st.hit_pages, "miss_pages": st.miss_pages,
+                "shared_hit_pages": st.shared_hit_pages,
                 "hit_rate": st.hit_rate, "cow_copies": st.cow_copies,
                 "evictions": st.evictions,
                 "peak_pages_in_use": st.peak_pages_in_use,

@@ -1,4 +1,4 @@
-"""Fleet-serving suite (DESIGN.md §15, ISSUE 9).
+"""Fleet-serving suite (DESIGN.md §15, ISSUEs 9-10).
 
 The fleet contract, locked down four ways:
 
@@ -22,16 +22,24 @@ The fleet contract, locked down four ways:
 Swap accounting is cross-checked registry-vs-report: the fleet report
 sums the schedulers' *data*-page counters and never the pools' released
 *reference* counters (the §13 dual-unit rule).
+
+ISSUE 10 adds the shared-KV tentpole on top: drain-time migration
+(expel/adopt) must continue token streams bit-exactly on a survivor,
+the fleet-level ``SharedPrefixTier`` must serve a cross-replica prefix
+hit indistinguishably from a local one, all-drained arrivals defer
+until a scale-up instead of crashing, and router backpressure sheds by
+SLO class — all inside the same byte-identical-replay contract.
 """
 
 import json
+import time
 
 import numpy as np
 import pytest
 
 from repro.serving import (Fleet, FleetRouter, ServeEngine, Server,
                            Telemetry, poisson_trace)
-from repro.serving.kvcache import chain_keys
+from repro.serving.kvcache import SharedPrefixTier, chain_keys
 from repro.serving.scheduler import FINISHED
 from repro.serving.server import (CONTENDED_ENGINE_KW, contended_trace,
                                   iter_trace, load_trace,
@@ -77,7 +85,35 @@ def test_chain_keys_prefix_property():
     assert chain_keys(toks[:16], 8)[0] == keys
     assert chain_keys([99] + toks[1:], 8)[0][0] != keys[0]
     assert chain_keys(toks[:16], 8)[1] is None     # aligned: no tail key
-    assert chain_keys(toks[:3], 8) == ([], (("root",), (0, 1, 2)))
+    # rolling-digest schema (ISSUE 10): every key is a fixed-size opaque
+    # digest — O(1) to hash or compare no matter how deep the chain
+    assert all(isinstance(k, bytes) and len(k) == 16 for k in keys)
+    assert isinstance(partial, bytes) and len(partial) == 16
+    short_keys, short_partial = chain_keys(toks[:3], 8)
+    assert short_keys == [] and isinstance(short_partial, bytes)
+    # the tail digest is chained off the last full page, not standalone
+    assert chain_keys(toks[:11], 8)[1] != chain_keys(toks[8:11], 8)[1]
+    # machine-independent: same tokens -> same bytes in every process
+    # (the property that lets the fleet tier share keys across pools)
+    assert chain_keys([1, 2, 3], 8) == chain_keys([1, 2, 3], 8)
+
+
+def test_chain_keys_are_linear_time_with_O1_hashing():
+    """ISSUE 10 bugfix pin: keys used to be nested tuples whose hash and
+    equality walked the whole chain — O(pages^2 * page_size) to build and
+    probe a long prompt's table entries.  The rolling digest keeps key
+    construction linear and every dict operation O(1); a 4096-page chain
+    must build + table-probe in well under the old quadratic blowup."""
+    page = 8
+    toks = np.arange(4096 * page) % 50
+    t0 = time.perf_counter()
+    keys, partial = chain_keys(toks, page)
+    table = {k: i for i, k in enumerate(keys)}
+    assert all(k in table for k in keys)
+    dt = time.perf_counter() - t0
+    assert partial is None and len(keys) == 4096
+    assert len(set(keys)) == 4096          # no chain collisions
+    assert dt < 2.0, f"chain-key build+probe took {dt:.2f}s — quadratic?"
 
 
 def test_prefix_match_pages_matches_admit_and_is_read_only():
@@ -100,8 +136,8 @@ def test_prefix_match_pages_matches_admit_and_is_read_only():
 # --- the router policy itself -------------------------------------------------
 
 class _FakeProbe:
-    def __init__(self, match=0, load=0, free=0):
-        self.m, self.l, self.f = match, load, free
+    def __init__(self, match=0, load=0, free=0, pressure=0.0):
+        self.m, self.l, self.f, self.p = match, load, free, pressure
 
     def prefix_match_pages(self, toks):
         return self.m
@@ -111,6 +147,9 @@ class _FakeProbe:
 
     def free_pages(self):
         return self.f
+
+    def pressure(self):
+        return self.p
 
 
 def test_router_scoring_and_ties():
@@ -140,6 +179,60 @@ def test_router_round_robin_cycles_admitting():
     assert got == ["r0", "r1", "r2", "r0", "r1", "r2"]
     r.drain("r1")
     assert {r.route([1]) for _ in range(4)} == {"r0", "r2"}
+
+
+def test_router_rr_cursor_survives_membership_changes():
+    """ISSUE 10 bugfix pin: the RR cursor is policy-local and
+    membership-aware — after a drain or scale-up the rotation resumes
+    from the last replica actually served and stays exactly balanced,
+    instead of a global route counter's modulo skewing the cycle."""
+    from collections import Counter
+    r = FleetRouter(policy="round_robin")
+    for rep in ("r0", "r1", "r2"):
+        r.add(rep, _FakeProbe())
+    assert [r.route([1]) for _ in range(4)] == ["r0", "r1", "r2", "r0"]
+    r.drain("r0")                       # drop the replica just served
+    assert [r.route([1]) for _ in range(4)] == ["r1", "r2", "r1", "r2"]
+    r.add("r3", _FakeProbe())           # joiner slots into the rotation
+    assert [r.route([1]) for _ in range(6)] == \
+        ["r3", "r1", "r2", "r3", "r1", "r2"]
+    # exact balance over a long horizon after the churn
+    cnt = Counter(r.route([1]) for _ in range(30))
+    assert cnt == {"r1": 10, "r2": 10, "r3": 10}
+    assert r.n_routed == 4 + 4 + 6 + 30  # statistics only, not the cursor
+
+
+def test_router_decide_defer_and_shed():
+    """``decide()`` wraps ``route()`` with the admission gate: defer
+    when nothing admits, shed/defer by SLO class when every admitting
+    replica is over the pressure threshold (ISSUE 10)."""
+    r = FleetRouter(shed_policy="slo", shed_threshold=0.8)
+    r.add("r0", _FakeProbe(pressure=0.9))
+    r.add("r1", _FakeProbe(pressure=0.97))
+    assert r.pressure() == pytest.approx(0.9)   # least-pressured admitter
+    assert r.decide([1], has_slo=True) == ("shed", None)
+    assert r.decide([1], has_slo=False) == ("defer", None)
+    assert r.n_shed == 1
+    r.probes["r0"].p = 0.2                      # one replica clears
+    kind, rep = r.decide([1], has_slo=True)
+    assert kind == "route" and rep in ("r0", "r1")
+    # "all" sheds regardless of class; "defer" never sheds
+    r_all = FleetRouter(shed_policy="all", shed_threshold=0.5)
+    r_all.add("r0", _FakeProbe(pressure=0.6))
+    assert r_all.decide([1]) == ("shed", None)
+    r_def = FleetRouter(shed_policy="defer", shed_threshold=0.5)
+    r_def.add("r0", _FakeProbe(pressure=0.6))
+    assert r_def.decide([1]) == ("defer", None)
+    # all replicas draining: decide defers, route() still fails loudly
+    r2 = FleetRouter()
+    r2.add("r0", _FakeProbe())
+    r2.drain("r0")
+    assert r2.decide([1]) == ("defer", None)
+    assert r2.pressure() == 1.0
+    with pytest.raises(RuntimeError, match="no admitting replica"):
+        r2.route([1])
+    with pytest.raises(ValueError, match="unknown shed policy"):
+        FleetRouter(shed_policy="maybe")
 
 
 # --- fleet(N=1) == Server -----------------------------------------------------
@@ -219,6 +312,200 @@ def test_drain_and_scale_replay_byte_identical(tiny):
     assert all(h.state == FINISHED for h in f0.handles.values())
 
 
+# --- ISSUE 10: deferral, backpressure, migration, shared tier -----------------
+
+def test_all_drained_arrivals_defer_until_scale_up():
+    """Bugfix pin: an arrival while every replica is draining is
+    deferred (stays pending, head-of-line), not a ``route()`` crash, and
+    is routed the instant a scale-up joins — byte-identically."""
+    trace = [{"arrival": 0.0, "prompt": [1, 2, 3], "max_new": 2},
+             {"arrival": 0.3, "prompt": [4, 5, 6], "max_new": 2}]
+
+    def run():
+        fleet = Fleet({"r0": _StubEngine(**STUB_KW)})
+        rep = fleet.replay(
+            trace, drain_at=[(0.2, "r0")],
+            scale_at=[(0.5, "r1", lambda: _StubEngine(**STUB_KW))])
+        return fleet, rep
+
+    fleet, rep = run()
+    assert rep.n_requests == 2
+    assert fleet.n_deferred == 1
+    kinds = [k for _, _, k, _ in fleet.events]
+    assert "defer" in kinds
+    routed = [(t, r) for t, r, k, frid in fleet.events
+              if k == "route" and frid == 1]
+    assert routed and routed[0][1] == "r1" and routed[0][0] >= 0.5
+    assert all(h.state == FINISHED for h in fleet.handles.values())
+    f2, rep2 = run()
+    assert f2.event_digest() == fleet.event_digest()
+    assert rep2.to_json() == rep.to_json()
+
+
+def test_all_drained_without_scale_up_fails_loudly():
+    """The deferral never silently hangs: due arrivals with no admitting
+    replica and no scheduled scale-up raise instead of spinning."""
+    fleet = Fleet({"r0": _StubEngine(**STUB_KW)})
+    trace = [{"arrival": 0.0, "prompt": [1, 2], "max_new": 1},
+             {"arrival": 0.3, "prompt": [3, 4], "max_new": 1}]
+    with pytest.raises(RuntimeError, match="fleet stalled"):
+        fleet.replay(trace, drain_at=[(0.1, "r0")])
+
+
+def test_fleet_sheds_by_slo_class_under_pressure():
+    """Admission backpressure end to end: with the one replica's pool
+    over the pressure threshold, the SLO-bearing arrival is shed
+    (counted, logged, never admitted) while the best-effort arrival
+    defers and finishes once pressure clears — deterministically."""
+    big = lambda tok: {"prompt": [tok] * 16, "max_new": 8}  # noqa: E731
+    trace = [
+        {"arrival": 0.0, **big(1)},
+        {"arrival": 0.0, **big(2)},
+        {"arrival": 0.01, "prompt": [3] * 4, "max_new": 2,
+         "slo_ttft": 0.05},
+        {"arrival": 0.012, "prompt": [4] * 4, "max_new": 2},
+    ]
+
+    def run():
+        fleet = Fleet([_StubEngine(**STUB_KW)], shed_policy="slo",
+                      shed_threshold=0.5)
+        rep = fleet.replay(trace)
+        return fleet, rep
+
+    f1, r1 = run()
+    f2, r2 = run()
+    assert r1.n_shed == 1 and f1.shed_rids == [2]
+    assert r1.n_requests == 3              # the shed arrival never ran
+    assert 2 not in f1.handles
+    kinds = [k for _, _, k, _ in f1.events]
+    assert "shed" in kinds and "defer" in kinds
+    assert f1.n_deferred >= 1
+    assert all(h.state == FINISHED for h in f1.handles.values())
+    assert f1.event_digest() == f2.event_digest()
+    assert r1.to_json() == r2.to_json()
+
+
+def test_drain_migration_moves_warm_work_to_survivors():
+    """Tentpole, stub level: ``migrate_on_drain=True`` expels the
+    draining replica's unfinished requests (running ones as swap blobs),
+    re-routes them to the survivor, nothing finishes in place on the
+    drained replica, and the whole thing replays byte-identically."""
+    trace = poisson_trace(3, 12, rate=200.0, vocab=20, plen=(2, 12),
+                          max_new=(6, 12))
+
+    def run():
+        fleet = Fleet({"r0": _StubEngine(**STUB_KW),
+                       "r1": _StubEngine(**STUB_KW)},
+                      migrate_on_drain=True)
+        rep = fleet.replay(trace, drain_at=[(0.05, "r0")])
+        return fleet, rep
+
+    f1, r1 = run()
+    f2, r2 = run()
+    assert f1.n_migrated > 0 and f1.n_migrated_pages > 0
+    assert f1.migrated_from["r0"] == f1.n_migrated
+    assert f1.replica_stats()["r0"]["migrated_out"] == f1.n_migrated
+    kinds = [k for _, _, k, _ in f1.events]
+    assert "migrate" in kinds and "expel" in kinds and "adopt" in kinds
+    t_drain = next(t for t, _, k, _ in f1.events if k == "drain")
+    late_r0 = [k for t, rep_, k, _ in f1.events
+               if rep_ == "r0" and t > t_drain
+               and k in ("admit", "resume", "finish")]
+    assert not late_r0, "drained replica kept serving despite migration"
+    assert f1.inflight["r0"] == 0
+    assert all(h.state == FINISHED for h in f1.handles.values())
+    assert all(len(h.tokens) == h.max_new for h in f1.handles.values())
+    # migration is billed as swap data pages, never as preemptions
+    assert r1.pages_swapped_out >= f1.n_migrated_pages
+    assert f1.event_digest() == f2.event_digest()
+    assert r1.to_json() == r2.to_json()
+
+
+def test_migrated_request_token_parity(tiny):
+    """Tentpole acceptance: a request expelled mid-flight from a
+    draining replica and adopted by a survivor produces the exact token
+    stream of an undisturbed single-server run — the §11 swap contract
+    stretched across replicas — and the drained fleet replays
+    byte-identically across permuted replica construction order."""
+    model, params, _ = tiny
+    trace = poisson_trace(7, 10, rate=80.0, vocab=model.cfg.vocab,
+                          plen=(2, 9), max_new=(6, 10))
+    srv = Server(ServeEngine(model, params, **CONTENDED_ENGINE_KW))
+    srv.replay(trace)
+    want = {rid: list(h.tokens) for rid, h in srv.sched.handles.items()}
+
+    def run(order):
+        engines = {rep: ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+                   for rep in order}
+        fleet = Fleet(engines, migrate_on_drain=True)
+        fleet.replay(trace, drain_at=[(0.08, "r0")])
+        return fleet
+
+    f1 = run(["r0", "r1"])
+    assert f1.n_migrated > 0 and f1.n_migrated_pages > 0
+    assert {frid: list(h.tokens) for frid, h in f1.handles.items()} == want
+    f2 = run(["r1", "r0"])
+    assert f2.event_digest() == f1.event_digest()
+    assert {frid: list(h.tokens) for frid, h in f2.handles.items()} == want
+
+
+def test_shared_tier_hit_matches_local_prefix_hit(tiny):
+    """Tentpole, tier half: a shared-tier adoption must be
+    indistinguishable from a local prefix hit — same tokens as a
+    tier-less fleet, strictly fewer pages materialized (recomputed),
+    and the tier/pool counters agree it happened."""
+    model, params, _ = tiny
+    page = CONTENDED_ENGINE_KW["page_size"]
+    sys_prompt = list(range(1, 2 * page + 1))      # two full pages
+    trace = [
+        {"arrival": 0.0, "prompt": sys_prompt + [5, 6], "max_new": 4},
+        {"arrival": 0.4, "prompt": sys_prompt + [9], "max_new": 4},
+    ]
+
+    def run(tier):
+        engines = {rep: ServeEngine(model, params, **CONTENDED_ENGINE_KW)
+                   for rep in ("r0", "r1")}
+        fleet = Fleet(engines, policy="round_robin",
+                      shared_prefix_tier=tier)
+        fleet.replay(trace)                # RR: r0 warms, r1 consults
+        return fleet
+
+    base = run(False)
+    f = run(True)
+    assert {frid: list(h.tokens) for frid, h in f.handles.items()} == \
+        {frid: list(h.tokens) for frid, h in base.handles.items()}
+    stats = f.shared_tier_stats()
+    assert stats is not None and stats["hits"] >= 2 and stats["puts"] >= 2
+    pools = [f.replicas[r].engine.pool for r in ("r0", "r1")]
+    assert sum(p.stats.shared_hit_pages for p in pools) >= 2
+    assert f.materialized_pages() < base.materialized_pages()
+    assert base.shared_tier_stats() is None
+    assert all(p.stats.shared_hit_pages == 0 for p in
+               (base.replicas[r].engine.pool for r in ("r0", "r1")))
+
+
+def test_shared_tier_lru_capacity_and_idempotent_put():
+    """Unit pins for the tier itself: byte-capped LRU eviction (never
+    below one entry), idempotent puts, get refreshing recency."""
+    page = {"k": np.zeros((1, 8, 1, 2), np.float32)}      # 64 bytes
+    tier = SharedPrefixTier(capacity_bytes=200)
+    tier.put(b"a", page)
+    tier.put(b"a", page)                   # idempotent: no double count
+    assert len(tier) == 1 and tier.puts == 1 and tier.bytes == 64
+    tier.put(b"b", page)
+    tier.put(b"c", page)                   # 192 bytes: a, b, c resident
+    assert b"a" in tier and len(tier) == 3
+    assert tier.get(b"a") is not None      # refresh a's recency
+    tier.put(b"d", page)                   # over cap: evict LRU (b)
+    assert b"b" not in tier and b"a" in tier and tier.evictions >= 1
+    assert tier.bytes <= 200
+    small = SharedPrefixTier(capacity_bytes=1)
+    small.put(b"x", page)                  # oversized entry still kept
+    assert b"x" in small and len(small) == 1
+    st = small.stats()
+    assert st["puts"] == 1 and st["entries"] == 1
+
+
 def test_fleet_streamed_replay_matches_list_replay():
     """Generator traces (one-row lookahead) and retain=False (digest-only
     log, handles released) produce the same bytes as the list path."""
@@ -261,6 +548,26 @@ def test_prefix_routing_beats_round_robin_on_shared_prefixes():
     assert rates["prefix"] > 0.5
 
 
+def test_shared_tier_beats_prefix_routing_alone_under_churn():
+    """ISSUE 10 ordering gate at tier-1: with more prefix groups than
+    the per-replica pools can pin, hot prefixes churn out of the LRU and
+    affinity breaks — only the fleet tier can serve the re-
+    materialization, so hit(tier) > hit(prefix) > hit(round_robin) and
+    the tier run computes strictly fewer prompt pages."""
+    trace = grouped_trace(0, 120, n_groups=8)
+    got = {}
+    for name, policy, tier in (("round_robin", "round_robin", False),
+                               ("prefix", "prefix", False),
+                               ("tier", "prefix", True)):
+        fleet = Fleet([_StubEngine(max_batch=2, n_pages=10, page_size=8)
+                       for _ in range(4)], policy=policy,
+                      shared_prefix_tier=tier)
+        fleet.replay(trace)
+        got[name] = (fleet.prefix_hit_rate(), fleet.materialized_pages())
+    assert got["tier"][0] > got["prefix"][0] > got["round_robin"][0], got
+    assert got["tier"][1] < got["prefix"][1] < got["round_robin"][1], got
+
+
 # --- swap-stat aggregation: registry vs report (§13 dual units) ---------------
 
 def test_fleet_swap_stats_registry_vs_report(tiny):
@@ -298,12 +605,20 @@ class _FleetWalk:
     """Random walk over submit/step/drain/scale on stub-engine replicas,
     checking the fleet invariants after every transition, then a full
     drain: no request lost or double-admitted, per-replica page claims
-    conserved, drained replicas reach zero load in bounded rounds."""
+    conserved, drained replicas reach zero load in bounded rounds.
+
+    Half the walks turn on ``migrate_on_drain`` (drains now expel and
+    re-route warm work — conservation must hold across the handover: an
+    expelled request is back in ``_rows``, never double-held) and half
+    attach a shared prefix tier (tier promotions must keep per-pool
+    refcounts conserved: an adopted page is cache-only, refcount 1)."""
 
     def __init__(self, rng):
         self.rng = rng
         self.fleet = Fleet({"r0": _StubEngine(**STUB_KW),
-                            "r1": _StubEngine(**STUB_KW)})
+                            "r1": _StubEngine(**STUB_KW)},
+                           migrate_on_drain=bool(rng.integers(2)),
+                           shared_prefix_tier=bool(rng.integers(2)))
         self.drained = []
         self.scaled = False
 
@@ -363,9 +678,14 @@ class _FleetWalk:
                 assert pool.ref[pid] == want, \
                     f"{rep}: refcount leak on page {pid}"
             assert pool.reserved_extra == 0
-        # -- drained replicas take no new work
+        # -- drained replicas take no new work; with migration on, they
+        #    additionally hold no unfinished work at all
         for rep in self.drained:
             assert rep not in fleet.router.admitting
+            if fleet.migrate_on_drain:
+                assert fleet.inflight[rep] == 0
+                assert all(h.state == FINISHED
+                           for h in fleet.replicas[rep].handles.values())
 
     def run(self, n_ops=40):
         ops = [self.submit, self.submit, self.step, self.step, self.step,

@@ -1,19 +1,27 @@
-"""Tier-2 fleet scale test (ISSUE 9): a streamed 200k-request Poisson
-trace through a 4-replica fleet on the tiny test model.
+"""Tier-2 fleet scale tests (ISSUEs 9-10): streamed 200k-request traces
+through a 4-replica fleet on the tiny test model.
 
-Two seeded runs must be byte-identical in report + event-log digest
-(``retain=False``: the merged log lives only as a running SHA-256, so
-determinism is checked at the digest level — any divergent event row
-flips it).  The trace is a generator end to end: the test instruments it
-to prove the fleet's backlog high-water mark stays a small fraction of
-the trace (rows are pulled as virtual time reaches them, not
-materialized up front), and bounds peak RSS growth across both runs.
+Two scenarios, each replayed twice and compared at the digest level
+(``retain=False``: the merged event log lives only as a running SHA-256,
+so any divergent event row flips it):
 
-Runs under the CI tier-2 ``fleet-scale`` job (deselected from tier-1 by the
-default ``-m 'not tier2'`` addopts); ``FLEET_SCALE_N`` scales the trace
-down for local iteration.  The run's report/digest/timing land in
-``FLEET_SCALE_OUT`` (default ``BENCH_fleet_scale.json``) for the CI
-artifact upload.
+* **baseline** — the ISSUE 9 rig: a streamed Poisson trace, byte-
+  identical across runs, backlog high-water mark bounded (rows are
+  pulled as virtual time reaches them, never materialized up front),
+  peak RSS growth bounded.
+* **drain_migration** — the ISSUE 10 rig: a streamed grouped-prefix
+  trace with a mid-trace drain under ``migrate_on_drain=True`` plus a
+  cold scale-up, over a fleet-level ``SharedPrefixTier``.  The drain's
+  expel/adopt handovers and the joiner's tier adoptions must stay
+  inside the byte-identical contract — migration events, shed gates,
+  and tier mutations all replay digest-stable — with migrated pages and
+  tier hits both provably nonzero and RSS still bounded.
+
+Runs under the CI tier-2 ``fleet-scale`` job (deselected from tier-1 by
+the default ``-m 'not tier2'`` addopts); ``FLEET_SCALE_N`` scales the
+traces down for local iteration.  Both scenarios merge their
+report/digest/migration/tier stats into ``FLEET_SCALE_OUT`` (default
+``BENCH_fleet_scale.json``) for the CI artifact upload.
 """
 
 import json
@@ -22,6 +30,7 @@ import resource
 import time
 
 import jax
+import numpy as np
 import pytest
 
 import repro.configs as C
@@ -61,6 +70,25 @@ def _counting(rows, fleet, stats):
         yield row
 
 
+def _merge_out(section: str, payload: dict) -> None:
+    """Merge one scenario's stats into the shared CI artifact, keeping
+    whatever the other scenario already wrote there."""
+    out = os.environ.get("FLEET_SCALE_OUT", "BENCH_fleet_scale.json")
+    doc = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                doc = json.load(f)
+        except ValueError:
+            doc = {}
+    if not isinstance(doc, dict) or "report" in doc:
+        doc = {}                       # pre-ISSUE-10 flat layout: restart
+    doc[section] = payload
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
 def _run(model, params, stats=None):
     fleet = Fleet([ServeEngine(model, params, **ENGINE_KW)
                    for _ in range(4)], quantum=8, retain=False)
@@ -97,14 +125,106 @@ def test_fleet_scale_streamed_trace_deterministic(tiny):
     rss_growth_mb = (rss1 - rss0) / 1024
     assert rss_growth_mb < 2048, f"peak RSS grew {rss_growth_mb:.0f} MiB"
 
-    out = os.environ.get("FLEET_SCALE_OUT", "BENCH_fleet_scale.json")
-    with open(out, "w") as f:
-        json.dump({"n_requests": N_REQUESTS, "seed": SEED,
-                   "engine": ENGINE_KW, "trace": TRACE_KW,
-                   "event_digest": digest1,
-                   "backlog_peak": stats["backlog_peak"],
-                   "rss_growth_mb": round(rss_growth_mb, 1),
-                   "wall_s": [round(wall1, 2), round(wall2, 2)],
-                   "report": rep1.to_json()}, f, indent=1,
-                  sort_keys=True)
-        f.write("\n")
+    _merge_out("baseline", {
+        "n_requests": N_REQUESTS, "seed": SEED,
+        "engine": ENGINE_KW, "trace": TRACE_KW,
+        "event_digest": digest1,
+        "backlog_peak": stats["backlog_peak"],
+        "rss_growth_mb": round(rss_growth_mb, 1),
+        "wall_s": [round(wall1, 2), round(wall2, 2)],
+        "report": rep1.to_json()})
+
+
+# --- drain-with-migration over a shared prefix tier (ISSUE 10) ----------------
+
+N_GROUPS = 8
+
+
+def grouped_trace_iter(seed, n, *, n_groups=N_GROUPS, page=8, rate=40.0,
+                       vocab=512, max_new=(2, 12)):
+    """Streamed grouped-prefix workload: every request opens with one of
+    ``n_groups`` two-page system prompts plus a private tail, O(1) rows
+    live, arrivals non-decreasing — the trace shape the shared tier and
+    drain-time migration are measured on at scale."""
+    rng = np.random.default_rng(seed)
+    prefixes = [[int(x) for x in rng.integers(0, vocab, 2 * page)]
+                for _ in range(n_groups)]
+    t = 0.0
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        g = int(rng.integers(n_groups))
+        tail = [int(x) for x in
+                rng.integers(0, vocab, int(rng.integers(1, page)))]
+        yield {"arrival": round(t, 9), "prompt": prefixes[g] + tail,
+               "max_new": int(rng.integers(max_new[0], max_new[1] + 1)),
+               "priority": 0, "slo_ttft": None, "slo_tpot": None}
+
+
+def _run_migration(model, params):
+    """One drain-with-migration replay: drain r0 (expelling its warm
+    work) a quarter into the trace, join a cold replica shortly after —
+    the joiner's prefix pages come from the fleet tier, the drained
+    replica's in-flight requests from expel/adopt blobs.  Round-robin
+    routing (not prefix affinity) so the cold joiner takes traffic
+    immediately and every replica's first contact with each prefix
+    group goes through the tier."""
+    span = N_REQUESTS / TRACE_KW["rate"]      # ~virtual trace duration
+    fleet = Fleet([ServeEngine(model, params, **ENGINE_KW)
+                   for _ in range(4)], quantum=8, retain=False,
+                  policy="round_robin",
+                  migrate_on_drain=True, shared_prefix_tier=True)
+    rows = grouped_trace_iter(SEED + 1, N_REQUESTS, vocab=model.cfg.vocab,
+                              page=ENGINE_KW["page_size"],
+                              rate=TRACE_KW["rate"],
+                              max_new=TRACE_KW["max_new"])
+    t0 = time.monotonic()
+    rep = fleet.replay(
+        rows, max_rounds=100_000_000,
+        drain_at=[(0.25 * span, "r0")],
+        scale_at=[(0.30 * span, "r9",
+                   lambda: ServeEngine(model, params, **ENGINE_KW))])
+    wall = time.monotonic() - t0
+    assert not fleet.handles and not fleet.assigned
+    return rep, fleet, wall
+
+
+def test_fleet_scale_drain_migration_deterministic(tiny):
+    model, params = tiny
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    rep1, f1, wall1 = _run_migration(model, params)
+    rep2, f2, wall2 = _run_migration(model, params)
+    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    assert rep1.n_requests == N_REQUESTS
+    # the whole drain — expel blobs, adoptions, tier scatters — replays
+    # byte-identically
+    assert f1.event_digest() == f2.event_digest()
+    assert rep1.to_json() == rep2.to_json()
+
+    # the drain really migrated warm work (pages, not just queued rows),
+    # the drained replica went quiet, and the joiner took traffic
+    assert f1.n_migrated > 0 and f1.n_migrated_pages > 0
+    assert f1.migrated_from["r0"] == f1.n_migrated
+    assert f1.inflight["r0"] == 0
+    assert f1.n_routed_to["r9"] > 0
+    tier = f1.shared_tier_stats()
+    assert tier["hits"] > 0, tier          # the joiner adopted from it
+    assert tier["puts"] >= 2 * N_GROUPS    # every group's prefix is held
+    assert (f1.n_migrated, f1.n_migrated_pages, f2.shared_tier_stats()) \
+        == (f2.n_migrated, f2.n_migrated_pages, tier)
+
+    rss_growth_mb = (rss1 - rss0) / 1024
+    assert rss_growth_mb < 2048, f"peak RSS grew {rss_growth_mb:.0f} MiB"
+
+    _merge_out("drain_migration", {
+        "n_requests": N_REQUESTS, "seed": SEED + 1,
+        "n_groups": N_GROUPS, "engine": ENGINE_KW,
+        "policy": "round_robin", "rate": TRACE_KW["rate"],
+        "event_digest": f1.event_digest(),
+        "n_migrated": f1.n_migrated,
+        "n_migrated_pages": f1.n_migrated_pages,
+        "shared_tier": tier,
+        "materialized_pages": f1.materialized_pages(),
+        "rss_growth_mb": round(rss_growth_mb, 1),
+        "wall_s": [round(wall1, 2), round(wall2, 2)],
+        "report": rep1.to_json()})

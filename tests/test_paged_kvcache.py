@@ -156,11 +156,12 @@ def test_cow_never_mutates_shared_page(tiny):
     prompt = [7, 8, 9, 10, 11, 12]                  # 6 % 4 ≠ 0: partial tail
     a = eng.serve([prompt], max_new=5)[0]
     pool = eng.pool
-    # the partial tail page was registered at retirement
-    tail_pids = [pid for pid, key in pool.key_of.items()
-                 if len(key[1]) != eng.page_size]
-    assert len(tail_pids) == 1
-    pid = tail_pids[0]
+    # the partial tail page was registered at retirement: its pid sits
+    # under the LAST chain key of the (non-page-aligned) prompt
+    from repro.serving import chain_keys
+    tail_key = chain_keys(prompt, eng.page_size)[-1]
+    assert tail_key in pool.table
+    pid = pool.table[tail_key]
     before = {k: np.asarray(v[:, pid]).copy() for k, v in pool.cache.items()}
 
     b = eng.serve([prompt], max_new=5)[0]

@@ -35,7 +35,8 @@ from repro.core.quantizer import WeightQuantConfig, cluster_params, init_state
 from repro.models.model_zoo import build
 from repro.serving import (AsyncScheduler, PagePool, Server, ServeEngine,
                            poisson_trace, to_codebook_params)
-from repro.serving.scheduler import FINISHED, RUNNING
+from repro.serving.scheduler import (FINISHED, QUEUED, RUNNING, SWAPPED,
+                                     VirtualClock)
 
 PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]
 STOPS = [6, 3, 5, 4]
@@ -363,6 +364,47 @@ class _StubEngine:
         st.pos[slot] = blob.pos
         st.gen[slot], st.stop[slot] = blob.n_gen, blob.stop
         return True
+
+
+def test_expel_adopt_rehomes_requests_across_schedulers():
+    """DESIGN.md §15: ``expel()`` removes a queued, swapped, or running
+    request so a fleet can re-home it with ``adopt()`` on a sibling
+    scheduler sharing the clock.  A running request hands over a swap
+    blob (billed like preemption's swap but NOT counted as one); the
+    adopter resumes from the blob and every request still finishes with
+    its full stream."""
+    clock = VirtualClock()
+    kw = dict(max_batch=2, n_pages=9, page_size=8)
+    a = AsyncScheduler(_StubEngine(**kw), clock=clock)
+    b = AsyncScheduler(_StubEngine(**kw), clock=clock)
+    h_run = a.submit([1] * 10, 6)
+    h_stay = a.submit([2] * 6, 4)
+    h_q = a.submit([3] * 4, 3)
+    a.step()                               # admit two; h_q queues behind
+    assert h_run.state == RUNNING and h_q.state == QUEUED
+    pre_preempt = a.n_preemptions
+
+    hr, blob_r = a.expel(h_run.rid)
+    assert hr is h_run and hr.state == SWAPPED
+    assert blob_r is not None and blob_r.n_pages >= 1
+    hq, blob_q = a.expel(h_q.rid)
+    assert blob_q is None and hq.state == QUEUED
+    assert hr.rid not in a.handles and hq.rid not in a.handles
+    assert a.n_preemptions == pre_preempt  # migration is not preemption
+    assert [k for _, k, _ in a.events].count("expel") == 2
+    assert a.n_pages_swapped_out >= blob_r.n_pages
+
+    hr2 = b.adopt(hr, blob=blob_r)
+    hq2 = b.adopt(hq)
+    assert hr2 is h_run and hr2.state == SWAPPED and hq2.state == QUEUED
+    a.run_until_idle()
+    b.run_until_idle()
+    for h in (h_run, h_stay, h_q):
+        assert h.state == FINISHED and len(h.tokens) == h.max_new
+    assert [k for _, k, _ in b.events].count("adopt") == 2
+    assert b.n_pages_swapped_in >= blob_r.n_pages  # blob restore path
+    with pytest.raises(ValueError, match="already finished"):
+        b.expel(hr2.rid)
 
 
 class _SchedWalk:
